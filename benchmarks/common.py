@@ -1,0 +1,61 @@
+"""Shared benchmark scaffolding.
+
+Budget control: REPRO_BENCH_BUDGET=small|full (default small — CPU
+container).  Every benchmark prints ``name,us_per_call,derived`` CSV rows
+(harness contract) plus a human-readable table, and returns a dict that
+benchmarks/run.py aggregates into results/bench/*.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List
+
+BUDGET = os.environ.get("REPRO_BENCH_BUDGET", "small")
+
+
+def budget(small: int, full: int) -> int:
+    return small if BUDGET == "small" else full
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timeit(fn: Callable, *args, repeat: int = 5, warmup: int = 2) -> float:
+    """Median wall time (us) of fn(*args); blocks on jax outputs."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def save_result(name: str, payload: Dict[str, Any]):
+    os.makedirs("results/bench", exist_ok=True)
+    with open(f"results/bench/{name}.json", "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+# -- shared trained filters (several benchmarks evaluate the same branch) --
+_FILTER_CACHE: Dict[Any, Any] = {}
+
+
+def cached_filter(scene, kind: str, steps: int, n_frames: int):
+    from repro.models.config import BranchSpec
+    from repro.train.filter_train import train_filter
+    key = (scene.name, kind, steps, n_frames)
+    if key not in _FILTER_CACHE:
+        spec = BranchSpec(layer=2, grid=scene.grid,
+                          n_classes=scene.n_classes, kind=kind, head_dim=64)
+        _FILTER_CACHE[key] = train_filter(scene, spec, steps=steps,
+                                          n_frames=n_frames)
+    return _FILTER_CACHE[key]

@@ -1,0 +1,42 @@
+"""Paper Fig. 15: class-location filter (CLF) f1 at Manhattan radius 0/1/2.
+
+Paper claims being checked:
+- OD localisation beats IC (detection-style features carry spatial detail;
+  IC localises only via the Eq.-2 CAM regulariser);
+- f1 improves with radius (CLF-1, CLF-2 relaxations);
+- less popular classes have lower localisation f1 (harder than counting).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import budget, cached_filter, emit, save_result
+from repro.data.synthetic import PRESETS
+from repro.models.config import BranchSpec
+from repro.train.filter_train import evaluate_filter, train_filter
+
+
+def run() -> dict:
+    steps = budget(220, 1200)
+    out = {}
+    for scene_name, scene in PRESETS.items():
+        for kind in ("ic", "od"):
+            tf = cached_filter(scene, kind, steps, budget(1500, 8000))
+            res = evaluate_filter(tf, scene, n_frames=budget(400, 1500))
+            row = {f"r{r}": res[f"clf_f1_{r}"].tolist() for r in (0, 1, 2)}
+            out[f"{scene_name}/{kind}"] = row
+            emit(f"fig15/{scene_name}/{kind}", 0.0,
+                 "f1=" + "/".join(f"{np.mean(row[f'r{r}']):.2f}"
+                                  for r in (0, 1, 2)))
+    save_result("fig15_clf", out)
+
+    print("\nFig.15 — CLF f1 (mean over classes) at Manhattan radius 0/1/2")
+    print(f"{'stream/filter':28s} {'r=0':>6s} {'r=1':>6s} {'r=2':>6s}")
+    for k, v in out.items():
+        print(f"{k:28s} " + " ".join(f"{np.mean(v[f'r{r}']):6.3f}"
+                                     for r in (0, 1, 2)))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,112 @@
+"""Roofline analysis over dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json and emits the per-(arch x shape x mesh) table:
+compute / memory / collective terms (seconds), dominant bottleneck,
+MODEL_FLOPS = 6·N·D (train) or 2·N·D (serve) with N_active for MoE, and
+the useful-FLOPs fraction.  Markdown output is pasted into
+EXPERIMENTS.md §Roofline.
+
+CPU-backend caveat (recorded here once, applies to every row): XLA:CPU
+reports ``bytes accessed`` without TPU-grade fusion, so the memory term is
+an *upper bound* — TPU compilations fuse elementwise chains that CPU
+counts as separate HBM round trips.  FLOPs and collective bytes are
+fusion-independent and transfer directly.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir: str, tag: str = "") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        name = os.path.basename(p)[:-5]
+        parts = name.split("__")
+        r["_tag"] = parts[3] if len(parts) > 3 else ""
+        if r["_tag"] != tag:
+            continue
+        recs.append(r)
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]),
+                             r["mesh"]))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(recs: List[Dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "peak GB/dev | fits | useful-FLOPs frac | step tokens |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if not r.get("status", "").startswith("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status'][:60]} | — | — | — | — |")
+            continue
+        t = r["roofline"]
+        m = r["memory"]
+        # peak_bytes is XLA's own peak estimate and accounts for donation
+        # aliasing (state-in aliases state-out); the arg+temp+out sum would
+        # double-count donated buffers.
+        peak = (m["peak_bytes"] or
+                (m["argument_bytes"] + m["temp_bytes"] + m["output_bytes"]))
+        fits = peak < 16 * 2 ** 30 if m["peak_bytes"] else m["fits_hbm"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"**{t['bottleneck']}** | {peak/2**30:.2f} | "
+            f"{'Y' if fits else 'N'} | "
+            f"{t['useful_flops_frac']:.2f} | {t['tokens']:,} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(recs: List[Dict]) -> List[Dict]:
+    """worst useful-FLOPs fraction, most collective-bound, most
+    paper-representative (decode gating cell of the flagship oracle)."""
+    ok = [r for r in recs if r.get("status") == "ok" and
+          r["mesh"] == "single"]
+    worst = min((r for r in ok if r["shape"] == "train_4k"),
+                key=lambda r: r["roofline"]["useful_flops_frac"])
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+    return [worst, coll]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir, args.tag)
+    print(f"## Roofline table — {args.mesh} pod mesh "
+          f"({256 if args.mesh=='single' else 512} chips)\n")
+    print(table(recs, args.mesh))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    n_skip = len(recs) - len(ok)
+    print(f"\n{len(ok)} compiled cells, {n_skip} documented skips.")
+    picks = pick_hillclimb(recs)
+    print("\nhillclimb candidates:",
+          [(r["arch"], r["shape"]) for r in picks])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Monitoring aggregates with control variates (paper §III demo).
+
+Estimates "fraction of frames where a car is in the lower-right quadrant"
+(a1-style) three ways — naive sampling, single CV, multiple CV — and
+shows the variance/CI shrink while the mean stays unbiased.  Also
+demonstrates the distributed (mergeable-accumulator) path.
+
+    PYTHONPATH=src python examples/aggregate_cv.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregates as AGG
+from repro.core import query as Q
+from repro.data.synthetic import DETRAC_LIKE, VideoStream, collect
+from repro.models.config import BranchSpec
+from repro.train.filter_train import train_filter
+
+scene = DETRAC_LIKE
+g = scene.grid
+n_frames, n_samples = 2048, 400
+
+print("training OD filter on detrac-like stream...")
+spec = BranchSpec(layer=2, grid=g, n_classes=scene.n_classes, kind="od",
+                  head_dim=64)
+tf = train_filter(scene, spec, steps=200, n_frames=1536)
+data = collect(VideoStream(scene), n_frames)
+fn = tf.jitted()
+fout = fn(tf.params, jnp.asarray(data["embeds"]))
+
+region_q = Q.Region(0, (g // 2, g // 2, g, g))
+count_q = Q.Count(Q.Op.GE, 3)
+
+rng = np.random.default_rng(0)
+idx = rng.choice(n_frames, n_samples, replace=False)
+
+# oracle answers (Y) on the sample
+y = np.array([float(Q.eval_objects(Q.And((region_q, count_q)),
+                                   data["objects"][i], scene.n_classes, g))
+              for i in idx])
+# filter answers (controls, Z)
+z_region = np.asarray(Q.eval_filters(
+    Q.Region(0, (g // 2, g // 2, g, g), radius=1), fout), float)[idx]
+z_count = np.asarray(Q.eval_filters(Q.Count(Q.Op.GE, 3, tolerance=1),
+                                    fout), float)[idx]
+
+true_mean = np.mean([float(Q.eval_objects(Q.And((region_q, count_q)), o,
+                                          scene.n_classes, g))
+                     for o in data["objects"]])
+
+naive_var = y.var(ddof=1) / len(y)
+single = AGG.cv_estimate(y, z_region)
+multi = AGG.mcv_estimate(y, np.stack([z_region, z_count], 1))
+
+print(f"\npopulation mean (all {n_frames} frames): {true_mean:.4f}")
+print(f"{'estimator':18s} {'mean':>8s} {'var':>12s} {'reduction':>10s} "
+      f"{'95% CI':>16s}")
+for name, mean, var in [("naive", y.mean(), naive_var),
+                        ("single CV", single.mean, single.var),
+                        ("multiple CV", multi.mean, multi.var)]:
+    h = 1.96 * np.sqrt(var)
+    print(f"{name:18s} {mean:8.4f} {var:12.3e} {naive_var/var:9.1f}x "
+          f"[{mean-h:.4f}, {mean+h:.4f}]")
+
+# distributed accumulators: 4 shards merged (psum-tree algebra)
+accs = []
+for shard in np.array_split(np.arange(len(y)), 4):
+    acc = AGG.CVAccumulator.init(2).update(
+        jnp.asarray(y[shard]),
+        jnp.asarray(np.stack([z_region[shard], z_count[shard]], 1)))
+    accs.append(acc)
+merged = accs[0]
+for a in accs[1:]:
+    merged = merged.merge(a)
+est = merged.estimate()
+print(f"\n4-shard merged accumulator: mean {est.mean:.4f} "
+      f"(matches multiple CV: {abs(est.mean - multi.mean) < 1e-6})")

@@ -1,0 +1,6 @@
+# The paper's primary contribution: approximate filter pipeline for video
+# monitoring queries (CF/CCF/CLF branch heads, CAM localisation, cascade
+# execution, control-variate aggregation, streaming windows).
+from repro.core import aggregates, cam, cascade, filters, query, streaming
+
+__all__ = ["aggregates", "cam", "cascade", "filters", "query", "streaming"]

@@ -1,0 +1,88 @@
+"""Class Activation Maps — the paper's Eq. 1.
+
+    M_c(i, j) = sum_k  w_k^c  a_k(i, j)
+
+where ``a_k(i,j)`` is the activation of feature map k at spatial location
+(i, j) and ``w_k^c`` the class-c weight of the count head's fully-connected
+layer.  The CAM localises the spatial evidence for class c; thresholding it
+yields the per-class occupancy bitmap that the CLF filters evaluate spatial
+constraints on.
+
+TPU adaptation: backbones here are sequence models, so the (B, S, D)
+activation tap is *spatialized* to a (B, g, g, D) grid first.  For
+paligemma the patch sequence IS an image grid (exact mapping); for pure
+token streams the fold is a deterministic raster of the sequence (the
+synthetic video pipeline lays frames out in raster order, so the fold is
+again exact).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def spatialize(tap: jax.Array, grid: int) -> jax.Array:
+    """(B, S, D) -> (B, g, g, D) by segment-mean folding of the sequence.
+
+    If S == g*g this is a pure reshape (raster order).  If S > g*g, each
+    grid cell averages a contiguous token segment.  If S < g*g, tokens are
+    repeated (nearest-neighbour upsample).
+    """
+    B, S, D = tap.shape
+    g2 = grid * grid
+    if S == g2:
+        return tap.reshape(B, grid, grid, D)
+    if S > g2:
+        # pad S up to a multiple of g2, then segment-mean
+        pad = (-S) % g2
+        if pad:
+            tap = jnp.concatenate([tap, jnp.repeat(tap[:, -1:], pad, axis=1)],
+                                  axis=1)
+        r = tap.shape[1] // g2
+        return tap.reshape(B, g2, r, D).mean(axis=2).reshape(B, grid, grid, D)
+    # S < g2: nearest-neighbour repeat
+    idx = (jnp.arange(g2) * S) // g2
+    return tap[:, idx].reshape(B, grid, grid, D)
+
+
+def class_activation_map(feat: jax.Array, w: jax.Array) -> jax.Array:
+    """Eq. 1. feat: (B, g, g, D); w: (D, C) -> (B, g, g, C)."""
+    return jnp.einsum("bijd,dc->bijc", feat.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+def upscale_map(cam: jax.Array, out: int) -> jax.Array:
+    """Nearest-neighbour upscale of a (B, g, g, C) map to (B, out, out, C).
+
+    Mirrors the paper's 'map is up-scaled to the original image size'."""
+    B, g, _, C = cam.shape
+    idx = (jnp.arange(out) * g) // out
+    return cam[:, idx][:, :, idx]
+
+
+def threshold_map(cam: jax.Array, tau: float = 0.2,
+                  logits: bool = False) -> jax.Array:
+    """Occupancy bitmap: the paper thresholds raw map values at 0.2
+    (§IV: 'we threshold the grid cell ... using a threshold of 0.2').
+    The Eq.2/Eq.3 MSE regresses the map toward {0,1} directly — no sigmoid
+    (MSE-through-sigmoid has vanishing gradients at saturation)."""
+    scores = jax.nn.sigmoid(cam) if logits else cam
+    return scores > tau
+
+
+def dilate_manhattan(occ: jax.Array, radius: int) -> jax.Array:
+    """Dilate a (B, g, g, C) boolean map by Manhattan distance ``radius``.
+
+    Implements the paper's CLF-1 / CLF-2 relaxations: a predicted cell
+    counts as correct if a true object lies within Manhattan distance r.
+    """
+    out = occ
+    for _ in range(radius):
+        up = jnp.pad(out[:, 1:], ((0, 0), (0, 1), (0, 0), (0, 0)))
+        down = jnp.pad(out[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0)))
+        left = jnp.pad(out[:, :, 1:], ((0, 0), (0, 0), (0, 1), (0, 0)))
+        right = jnp.pad(out[:, :, :-1], ((0, 0), (0, 0), (1, 0), (0, 0)))
+        out = out | up | down | left | right
+    return out

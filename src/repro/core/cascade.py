@@ -1,0 +1,166 @@
+"""Filter-cascade query execution (paper §II, §IV-B).
+
+Pipeline per frame batch:
+
+    frames ──► trunk prefix (k layers) ──► branch head ──► predicate mask
+                                                             │ pass?
+                                              no ◄───────────┤
+                                           (skip frame)      ▼ yes
+                                                    oracle (full model /
+                                                    exact detector) on the
+                                                    *compacted* survivors
+
+The paper evaluates one frame at a time on a GPU; on TPU we batch: the
+cascade produces a boolean mask, survivors are compacted (sorted to the
+front) and padded to a bucket size so the expensive oracle runs on dense
+batches.  Semantics are identical; throughput is batch-oriented.
+
+Filter ordering: the paper defers ordering optimisation to future work and
+we keep its convention (counts before locations — CF/CCF are cheaper to
+check than CLF).  ``AdaptiveOrder`` additionally reorders conjuncts by
+observed pass-rate (cheapest most-selective first), a beyond-paper
+optimisation that is measured in benchmarks/table3_query_speedup.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.filters import FilterOutputs
+
+
+@dataclasses.dataclass
+class CascadeStats:
+    frames_in: int = 0
+    filter_pass: int = 0
+    oracle_calls: int = 0
+    oracle_positives: int = 0
+    filter_time_s: float = 0.0
+    oracle_time_s: float = 0.0
+    per_stage_pass: Optional[List[int]] = None
+
+    @property
+    def selectivity(self) -> float:
+        return self.filter_pass / max(self.frames_in, 1)
+
+    def speedup_vs_full(self, oracle_ms: float, filter_ms: float) -> float:
+        """Paper Table III metric: brute-force time / cascade time."""
+        full = self.frames_in * oracle_ms
+        ours = self.frames_in * filter_ms + self.oracle_calls * oracle_ms
+        return full / max(ours, 1e-9)
+
+
+def _stage_cost(pred: Q.Predicate) -> int:
+    """Static cost model: count filters are cheaper than location filters."""
+    if isinstance(pred, (Q.Count, Q.ClassCount)):
+        return 0
+    return 1
+
+
+class FilterCascade:
+    """Compiles a query into ordered conjunctive stages and executes them."""
+
+    def __init__(self, query: Q.Predicate, *, tau: float = 0.2,
+                 adaptive: bool = False):
+        self.query = query
+        self.tau = tau
+        self.adaptive = adaptive
+        # conjunctive normal-ish split: only top-level And is staged;
+        # anything else is a single stage.
+        if isinstance(query, Q.And):
+            self.stages = sorted(query.terms, key=_stage_cost)
+        else:
+            self.stages = [query]
+        self._pass_counts = np.ones(len(self.stages))
+        self._seen = np.ones(len(self.stages))
+
+    def mask(self, out: FilterOutputs) -> jax.Array:
+        """(B,) candidate mask, short-circuiting stages in order."""
+        order = range(len(self.stages))
+        if self.adaptive:
+            order = np.argsort(self._pass_counts / self._seen)
+        m = None
+        for i in order:
+            mi = Q.eval_filters(self.stages[i], out, tau=self.tau)
+            alive = mi if m is None else (m & mi)
+            self._seen[i] += float(mi.shape[0] if m is None
+                                   else jnp.sum(m))
+            self._pass_counts[i] += float(jnp.sum(alive))
+            m = alive
+        return m
+
+
+def compact_survivors(mask: jax.Array, *arrays: jax.Array,
+                      bucket: Optional[int] = None):
+    """Sort surviving frames to the front; pad to ``bucket``.
+
+    Returns (n_survivors, gathered arrays, original indices) — jit-friendly
+    (fixed shapes).
+    """
+    B = mask.shape[0]
+    order = jnp.argsort(~mask)                 # True first (False=1 sorts last)
+    n = jnp.sum(mask)
+    bucket = bucket or B
+    idx = order[:bucket]
+    gathered = tuple(a[idx] for a in arrays)
+    return n, gathered, idx
+
+
+@dataclasses.dataclass
+class CascadeResult:
+    answers: np.ndarray          # (B,) bool final query answers
+    stats: CascadeStats
+
+
+class CascadeExecutor:
+    """End-to-end: filter head -> cascade mask -> oracle on survivors.
+
+    ``filter_fn(batch) -> FilterOutputs`` is the (cheap) branch head over
+    the trunk prefix; ``oracle_fn(batch_subset) -> list[objects]`` is the
+    expensive full evaluation (full model forward + detector semantics, or
+    ground-truth annotator in benchmarks — the paper itself uses Mask R-CNN
+    output as ground truth).
+    """
+
+    def __init__(self, cascade: FilterCascade,
+                 filter_fn: Callable[[Any], FilterOutputs],
+                 oracle_fn: Callable[[Any, np.ndarray], List],
+                 n_classes: int, grid: int,
+                 oracle_bucket: Optional[int] = None):
+        self.cascade = cascade
+        self.filter_fn = filter_fn
+        self.oracle_fn = oracle_fn
+        self.n_classes = n_classes
+        self.grid = grid
+        self.oracle_bucket = oracle_bucket
+        self.stats = CascadeStats()
+
+    def run_batch(self, batch) -> CascadeResult:
+        B = jax.tree.leaves(batch)[0].shape[0]
+        t0 = time.perf_counter()
+        fout = self.filter_fn(batch)
+        mask = np.asarray(self.cascade.mask(fout))
+        t1 = time.perf_counter()
+
+        answers = np.zeros(B, bool)
+        idx = np.nonzero(mask)[0]
+        t2 = t1
+        if idx.size:
+            objs = self.oracle_fn(batch, idx)
+            t2 = time.perf_counter()
+            for j, obj_list in zip(idx, objs):
+                answers[j] = Q.eval_objects(self.cascade.query, obj_list,
+                                            self.n_classes, self.grid)
+        self.stats.frames_in += B
+        self.stats.filter_pass += int(mask.sum())
+        self.stats.oracle_calls += int(idx.size)
+        self.stats.oracle_positives += int(answers.sum())
+        self.stats.filter_time_s += t1 - t0
+        self.stats.oracle_time_s += t2 - t1
+        return CascadeResult(answers=answers, stats=self.stats)

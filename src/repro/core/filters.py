@@ -1,0 +1,231 @@
+"""The paper's approximate filters (Sections II-A, II-B, II-B.1).
+
+Three heads, each consuming the trunk activation *tap* after the first k
+backbone layers (`BranchSpec.layer`):
+
+- ``ICHead``      — §II-A: global-average-pool + fully-connected count head;
+                    the FC weights double as the CAM projection (Eq. 1).
+                    Trained with the multi-task loss of Eq. 2.
+- ``ODHead``      — §II-B: three mixing ("conv") layers on the spatial grid,
+                    then GAP + FC for counts and a per-cell class grid.
+                    Trained with the YOLO-style loss of Eq. 3.
+- ``ODCOFHead``   — §II-B.1 Table I: count-optimised classification filter,
+                    trained only for counts.
+
+Filter taxonomy (CF / CCF / CLF and their ±1/±2 relaxations) is realised by
+interpreting the head outputs; see ``FilterBank``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cam as CAM
+from repro.models.config import BranchSpec, ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FilterOutputs:
+    """What every head emits (OD-COF emits counts only)."""
+    counts: jax.Array                      # (B, C) float regression
+    grid: Optional[jax.Array] = None       # (B, g, g, C) logits
+
+    def count_pred(self, max_count: int = 64) -> jax.Array:
+        return jnp.clip(jnp.round(self.counts), 0, max_count).astype(jnp.int32)
+
+    def occupancy(self, tau: float = 0.2, radius: int = 0) -> jax.Array:
+        occ = CAM.threshold_map(self.grid, tau, logits=False)
+        if radius:
+            occ = CAM.dilate_manhattan(occ, radius)
+        return occ
+
+
+# --------------------------------------------------------------------------
+# IC head (§II-A): GAP + FC; CAM from the FC weights (Eq. 1)
+# --------------------------------------------------------------------------
+
+def ic_init(key, spec: BranchSpec, d_model: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "proj": dense_init(k1, d_model, (d_model, spec.head_dim), jnp.float32),
+        "w": dense_init(k2, spec.head_dim, (spec.head_dim, spec.n_classes),
+                        jnp.float32),
+        "b": jnp.zeros((spec.n_classes,), jnp.float32),
+    }
+
+
+def ic_apply(p: Params, tap: jax.Array, spec: BranchSpec,
+             use_kernel: bool = False) -> FilterOutputs:
+    feat = CAM.spatialize(tap.astype(jnp.float32), spec.grid)   # (B,g,g,D)
+    feat = jax.nn.relu(jnp.einsum("bijd,de->bije", feat, p["proj"]))
+    if use_kernel:
+        from repro.kernels import ops as kops
+        counts, cam = kops.cam_head(feat, p["w"], p["b"])
+    else:
+        pooled = feat.mean(axis=(1, 2))                          # GAP
+        counts = jax.nn.relu(pooled @ p["w"] + p["b"])           # (B,C)
+        cam = CAM.class_activation_map(feat, p["w"])             # Eq. 1
+    return FilterOutputs(counts=counts, grid=cam)
+
+
+def ic_axes(spec: BranchSpec) -> Params:
+    return {"proj": ("embed", None), "w": (None, None), "b": (None,)}
+
+
+# --------------------------------------------------------------------------
+# OD head (§II-B): 3 grid-mixing layers + GAP/FC counts + per-cell grid
+# --------------------------------------------------------------------------
+
+def _conv2d_init(key, cin, cout, ksize, dtype=jnp.float32):
+    fan = cin * ksize * ksize
+    return (jax.random.normal(key, (ksize, ksize, cin, cout), jnp.float32)
+            / math.sqrt(fan)).astype(dtype)
+
+
+def _conv2d(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def od_init(key, spec: BranchSpec, d_model: int) -> Params:
+    ks = jax.random.split(key, 6)
+    h = spec.head_dim
+    return {
+        # branch network: 1x1 -> 3x3 -> 1x1 (Fig. 4 / Table I geometry,
+        # widths scaled by spec.head_dim)
+        "c1": _conv2d_init(ks[0], d_model, 2 * h, 1),
+        "c2": _conv2d_init(ks[1], 2 * h, h, 3),
+        "c3": _conv2d_init(ks[2], h, 2 * h, 1),
+        "w": dense_init(ks[3], 2 * h, (2 * h, spec.n_classes), jnp.float32),
+        "b": jnp.zeros((spec.n_classes,), jnp.float32),
+        "grid_w": dense_init(ks[4], 2 * h, (2 * h, spec.n_classes),
+                             jnp.float32),
+        "grid_b": jnp.zeros((spec.n_classes,), jnp.float32),
+    }
+
+
+def od_apply(p: Params, tap: jax.Array, spec: BranchSpec) -> FilterOutputs:
+    feat = CAM.spatialize(tap.astype(jnp.float32), spec.grid)
+    lrelu = functools.partial(jax.nn.leaky_relu, negative_slope=0.1)
+    h = lrelu(_conv2d(feat, p["c1"]))
+    h = lrelu(_conv2d(h, p["c2"]))
+    h = lrelu(_conv2d(h, p["c3"]))                               # (B,g,g,2h)
+    counts = jax.nn.relu(h.mean(axis=(1, 2)) @ p["w"] + p["b"])
+    grid = jnp.einsum("bijd,dc->bijc", h, p["grid_w"]) + p["grid_b"]
+    return FilterOutputs(counts=counts, grid=grid)
+
+
+def od_axes(spec: BranchSpec) -> Params:
+    return {"c1": (None, None, "embed", None), "c2": (None,) * 4,
+            "c3": (None,) * 4, "w": (None, None), "b": (None,),
+            "grid_w": (None, None), "grid_b": (None,)}
+
+
+# --------------------------------------------------------------------------
+# OD-COF head (§II-B.1, Table I): count-only classifier
+# --------------------------------------------------------------------------
+
+def cof_init(key, spec: BranchSpec, d_model: int) -> Params:
+    ks = jax.random.split(key, 5)
+    h = spec.head_dim
+    return {
+        "c1": _conv2d_init(ks[0], d_model, 4 * h, 1),   # Table I: 1024 1x1
+        "c2": _conv2d_init(ks[1], 4 * h, 2 * h, 3),     #          512 3x3
+        "c3": _conv2d_init(ks[2], 2 * h, 4 * h, 1),     #          1024 1x1
+        "c4": _conv2d_init(ks[3], 4 * h, 4 * h, 1),     #          1024 1x1
+        "w": dense_init(ks[4], 4 * h, (4 * h, spec.n_classes), jnp.float32),
+        "b": jnp.zeros((spec.n_classes,), jnp.float32),
+    }
+
+
+def cof_apply(p: Params, tap: jax.Array, spec: BranchSpec) -> FilterOutputs:
+    feat = CAM.spatialize(tap.astype(jnp.float32), spec.grid)
+    # max-pool to (F, f, f) per §II-B.1
+    g = spec.grid
+    f = max(g // 2, 1)
+    feat = feat.reshape(feat.shape[0], f, g // f, f, g // f, -1).max((2, 4))
+    lrelu = functools.partial(jax.nn.leaky_relu, negative_slope=0.1)
+    h = lrelu(_conv2d(feat, p["c1"]))
+    h = lrelu(_conv2d(h, p["c2"]))
+    h = lrelu(_conv2d(h, p["c3"]))
+    h = lrelu(_conv2d(h, p["c4"]))
+    counts = jax.nn.relu(h.mean(axis=(1, 2)) @ p["w"] + p["b"])
+    return FilterOutputs(counts=counts, grid=None)
+
+
+def cof_axes(spec: BranchSpec) -> Params:
+    return {"c1": (None, None, "embed", None), "c2": (None,) * 4,
+            "c3": (None,) * 4, "c4": (None,) * 4,
+            "w": (None, None), "b": (None,)}
+
+
+HEADS = {
+    "ic": (ic_init, ic_apply, ic_axes),
+    "od": (od_init, od_apply, od_axes),
+    "cof": (cof_init, cof_apply, cof_axes),
+}
+
+
+def branch_init(key, spec: BranchSpec, d_model: int) -> Params:
+    return HEADS[spec.kind][0](key, spec, d_model)
+
+
+def branch_apply(p: Params, tap: jax.Array, spec: BranchSpec,
+                 **kw) -> FilterOutputs:
+    return HEADS[spec.kind][1](p, tap, spec, **kw) if spec.kind == "ic" \
+        else HEADS[spec.kind][1](p, tap, spec)
+
+
+def branch_axes(spec: BranchSpec) -> Params:
+    return HEADS[spec.kind][2](spec)
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+def smooth_l1(x, y):
+    d = jnp.abs(x - y)
+    return jnp.where(d < 1.0, 0.5 * d * d, d - 0.5)
+
+
+def ic_loss(out: FilterOutputs, count_true: jax.Array, grid_true: jax.Array,
+            class_weight: jax.Array, alpha: float = 1.0,
+            beta: float = 10.0) -> jax.Array:
+    """Paper Eq. 2: per-class weighted SmoothL1(count) + beta * MSE(map).
+
+    grid_true: (B, g, g, C) in [0,1] (down-scaled box occupancy).  The MSE
+    regresses the raw CAM toward {0,1} (the paper thresholds CAM values
+    at 0.2 — no sigmoid)."""
+    lc = smooth_l1(out.counts, count_true).mean(0)               # (C,)
+    lg = jnp.square(out.grid - grid_true).mean((0, 1, 2))        # (C,)
+    return jnp.sum(class_weight * (alpha * lc + beta * lg))
+
+
+def od_loss(out: FilterOutputs, count_true: jax.Array, grid_true: jax.Array,
+            lambda_count: float = 1.0, lambda_grid: float = 5.0,
+            lambda_obj: float = 5.0, lambda_noobj: float = 0.5) -> jax.Array:
+    """Paper Eq. 3: count SmoothL1 + grid MSE with obj/noobj balancing.
+    Raw-value regression toward {0,1} (thresholded at 0.2 downstream)."""
+    lc = smooth_l1(out.counts, count_true).mean()
+    x = out.grid
+    obj = grid_true > 0.5
+    se = jnp.square(x - grid_true)
+    g2 = out.grid.shape[1] * out.grid.shape[2]
+    lg = (jnp.where(obj, lambda_obj * se, lambda_noobj * se).sum((1, 2, 3))
+          / g2).mean()
+    return lambda_count * lc + lambda_grid * lg
+
+
+def cof_loss(out: FilterOutputs, count_true: jax.Array) -> jax.Array:
+    return smooth_l1(out.counts, count_true).mean()

@@ -1,0 +1,228 @@
+"""Declarative video-monitoring query AST and its two evaluators.
+
+Queries combine (paper §I, §II):
+- ``Count``       — total number of objects in the frame (CF)
+- ``ClassCount``  — number of objects of one class (CCF)
+- ``Spatial``     — ORDER(a, b) in {LEFT, RIGHT, ABOVE, BELOW} (CLF)
+- ``Region``      — objects of a class inside a screen rectangle (CLF),
+                    e.g. "bicycle not in bike lane"
+- ``And / Or / Not`` connectives.
+
+Two evaluation modes:
+- ``eval_filters``  — vectorised approximate evaluation on the branch-head
+  ``FilterOutputs`` of a frame batch (counts with +-tolerance, occupancy
+  grids with Manhattan-radius dilation -> the paper's CF/CCF/CLF-k filters).
+- ``eval_objects``  — exact evaluation on oracle object lists
+  (class id + grid cell per object), the semantics the oracle (full
+  detection) provides.  Used as ground truth for accuracy/f1 benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.filters import FilterOutputs
+from repro.core import cam as CAM
+
+
+class Rel(str, enum.Enum):
+    LEFT = "left"        # a strictly left of b (column index smaller)
+    RIGHT = "right"
+    ABOVE = "above"      # a strictly above b (row index smaller)
+    BELOW = "below"
+
+
+class Op(str, enum.Enum):
+    EQ = "=="
+    GE = ">="
+    LE = "<="
+
+
+@dataclasses.dataclass(frozen=True)
+class Count:
+    op: Op
+    value: int
+    tolerance: int = 0          # CF-k relaxation
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassCount:
+    cls: int
+    op: Op
+    value: int
+    tolerance: int = 0          # CCF-k relaxation
+
+
+@dataclasses.dataclass(frozen=True)
+class Spatial:
+    cls_a: int
+    rel: Rel
+    cls_b: int
+    radius: int = 0             # CLF-k relaxation (Manhattan dilation)
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    cls: int
+    rect: Tuple[int, int, int, int]      # (r0, c0, r1, c1) half-open, grid coords
+    min_count: int = 1          # >= this many objects (cells) inside
+    radius: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    terms: Tuple[Any, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Or:
+    terms: Tuple[Any, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Not:
+    term: Any
+
+
+Predicate = Union[Count, ClassCount, Spatial, Region, And, Or, Not]
+
+
+def leaves(q: Predicate) -> List[Predicate]:
+    if isinstance(q, (And, Or)):
+        out: List[Predicate] = []
+        for t in q.terms:
+            out.extend(leaves(t))
+        return out
+    if isinstance(q, Not):
+        return leaves(q.term)
+    return [q]
+
+
+# --------------------------------------------------------------------------
+# Approximate evaluation on FilterOutputs (batched)
+# --------------------------------------------------------------------------
+
+def _cmp(x, op: Op, v: int, tol: int):
+    if op == Op.EQ:
+        return (x >= v - tol) & (x <= v + tol)
+    if op == Op.GE:
+        return x >= v - tol
+    return x <= v + tol
+
+
+def eval_filters(q: Predicate, out: FilterOutputs, *,
+                 tau: float = 0.2) -> jax.Array:
+    """Returns (B,) bool candidate mask (True = frame may satisfy q)."""
+    if isinstance(q, And):
+        m = eval_filters(q.terms[0], out, tau=tau)
+        for t in q.terms[1:]:
+            m = m & eval_filters(t, out, tau=tau)
+        return m
+    if isinstance(q, Or):
+        m = eval_filters(q.terms[0], out, tau=tau)
+        for t in q.terms[1:]:
+            m = m | eval_filters(t, out, tau=tau)
+        return m
+    if isinstance(q, Not):
+        return ~eval_filters(q.term, out, tau=tau)
+    if isinstance(q, Count):
+        total = out.count_pred().sum(-1)
+        return _cmp(total, q.op, q.value, q.tolerance)
+    if isinstance(q, ClassCount):
+        c = out.count_pred()[:, q.cls]
+        return _cmp(c, q.op, q.value, q.tolerance)
+    if isinstance(q, Spatial):
+        occ = out.occupancy(tau, q.radius)               # (B,g,g,C)
+        return spatial_relation(occ[..., q.cls_a], occ[..., q.cls_b], q.rel)
+    if isinstance(q, Region):
+        occ = out.occupancy(tau, q.radius)[..., q.cls]
+        r0, c0, r1, c1 = q.rect
+        inside = occ[:, r0:r1, c0:c1]
+        return inside.sum((1, 2)) >= q.min_count
+    raise TypeError(q)
+
+
+def spatial_relation(occ_a: jax.Array, occ_b: jax.Array,
+                     rel: Rel) -> jax.Array:
+    """(B,g,g) bool maps -> (B,) 'exists a-cell and b-cell with rel'."""
+    B, g, _ = occ_a.shape
+    col = jnp.arange(g)
+    row = jnp.arange(g)
+    big = g + 1
+
+    def min_over(mask, idx, axis_pair):
+        x = jnp.where(mask, idx, big)
+        return x.min(axis=axis_pair)
+
+    def max_over(mask, idx, axis_pair):
+        x = jnp.where(mask, idx, -1)
+        return x.max(axis=axis_pair)
+
+    any_a = occ_a.any((1, 2))
+    any_b = occ_b.any((1, 2))
+    if rel in (Rel.LEFT, Rel.RIGHT):
+        ca = col[None, None, :]
+        if rel == Rel.LEFT:      # exists a.col < b.col
+            return any_a & any_b & (min_over(occ_a, ca, (1, 2)) <
+                                    max_over(occ_b, ca, (1, 2)))
+        return any_a & any_b & (max_over(occ_a, ca, (1, 2)) >
+                                min_over(occ_b, ca, (1, 2)))
+    ra = row[None, :, None]
+    if rel == Rel.ABOVE:         # exists a.row < b.row
+        return any_a & any_b & (min_over(occ_a, ra, (1, 2)) <
+                                max_over(occ_b, ra, (1, 2)))
+    return any_a & any_b & (max_over(occ_a, ra, (1, 2)) >
+                            min_over(occ_b, ra, (1, 2)))
+
+
+# --------------------------------------------------------------------------
+# Exact evaluation on oracle object lists
+# --------------------------------------------------------------------------
+
+def objects_to_grid(objs: np.ndarray, n_classes: int, grid: int) -> np.ndarray:
+    """objs: (N, 3) rows of (cls, row, col) -> (g, g, C) bool occupancy."""
+    occ = np.zeros((grid, grid, n_classes), bool)
+    for cls, r, c in objs:
+        occ[int(r), int(c), int(cls)] = True
+    return occ
+
+
+def eval_objects(q: Predicate, objs: Sequence[Tuple[int, int, int]],
+                 n_classes: int, grid: int) -> bool:
+    """Exact semantics on an oracle object list [(cls, row, col), ...]."""
+    arr = np.asarray(list(objs), dtype=np.int64).reshape(-1, 3)
+    if isinstance(q, And):
+        return all(eval_objects(t, objs, n_classes, grid) for t in q.terms)
+    if isinstance(q, Or):
+        return any(eval_objects(t, objs, n_classes, grid) for t in q.terms)
+    if isinstance(q, Not):
+        return not eval_objects(q.term, objs, n_classes, grid)
+    if isinstance(q, Count):
+        return bool(_cmp(np.int64(len(arr)), q.op, q.value, 0))
+    if isinstance(q, ClassCount):
+        return bool(_cmp(np.int64((arr[:, 0] == q.cls).sum()), q.op,
+                         q.value, 0))
+    if isinstance(q, Spatial):
+        a = arr[arr[:, 0] == q.cls_a]
+        b = arr[arr[:, 0] == q.cls_b]
+        if len(a) == 0 or len(b) == 0:
+            return False
+        if q.rel == Rel.LEFT:
+            return bool(a[:, 2].min() < b[:, 2].max())
+        if q.rel == Rel.RIGHT:
+            return bool(a[:, 2].max() > b[:, 2].min())
+        if q.rel == Rel.ABOVE:
+            return bool(a[:, 1].min() < b[:, 1].max())
+        return bool(a[:, 1].max() > b[:, 1].min())
+    if isinstance(q, Region):
+        a = arr[arr[:, 0] == q.cls]
+        r0, c0, r1, c1 = q.rect
+        inside = ((a[:, 1] >= r0) & (a[:, 1] < r1) &
+                  (a[:, 2] >= c0) & (a[:, 2] < c1))
+        return bool(inside.sum() >= q.min_count)
+    raise TypeError(q)

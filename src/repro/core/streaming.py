@@ -1,0 +1,110 @@
+"""Streaming execution: windows, samplers, and straggler mitigation.
+
+Maps the paper's query surface (``WINDOW HOPPING (SIZE n, ADVANCE BY m)``)
+and its sampling-based aggregate evaluation onto a batched executor, and
+adds the production concerns a monitoring deployment needs: per-window
+deadlines with frame dropping (the stream does not wait — a straggling
+device must not stall ingest), and backpressure accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HoppingWindow:
+    """WINDOW HOPPING (SIZE size, ADVANCE BY advance) over frame ids."""
+    size: int
+    advance: int
+
+    def windows(self, n_frames: int) -> Iterator[Tuple[int, int]]:
+        start = 0
+        while start + self.size <= n_frames:
+            yield (start, start + self.size)
+            start += self.advance
+
+
+class FrameSampler:
+    """Uniform sampling of frame indices within a window (w/o replacement)."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, lo: int, hi: int, n: int) -> np.ndarray:
+        n = min(n, hi - lo)
+        return np.sort(self.rng.choice(np.arange(lo, hi), size=n,
+                                       replace=False))
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Deadline-based frame dropping.
+
+    A window of ``size`` frames at ``fps`` must complete within
+    ``size / fps * slack``; when the executor falls behind, incoming
+    frames are dropped (monitoring semantics: stale frames are worthless).
+    """
+    fps: float = 30.0
+    slack: float = 1.0
+
+    def deadline_s(self, n_frames: int) -> float:
+        return n_frames / self.fps * self.slack
+
+
+@dataclasses.dataclass
+class StreamStats:
+    frames_seen: int = 0
+    frames_processed: int = 0
+    frames_dropped: int = 0
+    windows: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def drop_rate(self) -> float:
+        return self.frames_dropped / max(self.frames_seen, 1)
+
+    @property
+    def fps(self) -> float:
+        return self.frames_processed / max(self.wall_s, 1e-9)
+
+
+class StreamExecutor:
+    """Drives a per-batch processing fn over a (simulated) live stream.
+
+    ``process(batch_indices) -> None`` is charged against the deadline;
+    when cumulative processing time exceeds the arrival clock, whole
+    batches are dropped until the executor catches up (straggler
+    mitigation at the ingest boundary).
+    """
+
+    def __init__(self, process: Callable[[np.ndarray], None],
+                 batch: int, policy: StragglerPolicy):
+        self.process = process
+        self.batch = batch
+        self.policy = policy
+        self.stats = StreamStats()
+
+    def run(self, n_frames: int, simulate_slow: Optional[Callable[[int], float]] = None):
+        t_start = time.perf_counter()
+        arrival_per_batch = self.batch / self.policy.fps * self.policy.slack
+        budget = 0.0
+        for lo in range(0, n_frames, self.batch):
+            idx = np.arange(lo, min(lo + self.batch, n_frames))
+            self.stats.frames_seen += idx.size
+            budget += arrival_per_batch
+            if budget < 0:                      # behind schedule: drop
+                self.stats.frames_dropped += idx.size
+                budget += arrival_per_batch * 0.0   # drop is free
+                continue
+            t0 = time.perf_counter()
+            self.process(idx)
+            if simulate_slow is not None:
+                budget -= simulate_slow(lo)
+            budget -= time.perf_counter() - t0
+            self.stats.frames_processed += idx.size
+        self.stats.wall_s = time.perf_counter() - t_start
+        return self.stats

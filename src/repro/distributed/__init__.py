@@ -1,0 +1,3 @@
+from repro.distributed import ctx, sharding
+
+__all__ = ["ctx", "sharding"]

@@ -1,0 +1,96 @@
+"""Single-token KV-cache attention — Pallas TPU kernel.
+
+Decode is memory-bound: the whole KV cache streams HBM->VMEM once while
+the q-block (all grouped query heads of one kv head: (G, hd)) stays
+VMEM-resident.  Grid (B, KV, nK) with the kv axis sequential; running
+(m, l, acc) state in VMEM scratch, identical online-softmax recurrence to
+the flash kernel.  ``kv_len`` arrives via scalar prefetch (SMEM) so block
+masking can short-circuit fully-invalid cache blocks (``pl.when``), which
+matters for partially-filled caches.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_k: int, n_k: int):
+    ik = pl.program_id(2)
+    kv_len = len_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ik * block_k
+
+    @pl.when(k_start < kv_len)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_bkgd(q: jax.Array, k: jax.Array, v: jax.Array,
+                          kv_len: jax.Array, *, block_k: int = 256,
+                          interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, hd); k, v: (B, KV, S, hd); kv_len: (1,) int32."""
+    B, KV, G, hd = q.shape
+    _, _, Sk, _ = k.shape
+    block_k = min(block_k, Sk)
+    assert Sk % block_k == 0, (Sk, block_k)
+    n_k = Sk // block_k
+
+    kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(hd),
+                               block_k=block_k, n_k=n_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, n, ik, len_ref: (b, n, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, n, ik, len_ref: (b, n, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, n, ik, len_ref: (b, n, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, n, ik, len_ref: (b, n, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,125 @@
+"""Blocked online-softmax (flash) attention — Pallas TPU kernel.
+
+Target: TPU v5e.  Grid (B, H, nQ, nK) with the kv axis innermost — on TPU
+the last grid axis is sequential per core, so the (m, l, acc) running
+softmax state lives in VMEM scratch across kv steps.  Q/K/V blocks are
+tiled to (block_q, head_dim) / (block_k, head_dim) VMEM windows; the two
+matmuls per step hit the MXU at (block_q x head_dim x block_k) and
+(block_q x block_k x head_dim) — block sizes default 128/256 so every
+matmul dim is a multiple of the 128-lane MXU.
+
+Causal handling: fully-masked kv blocks are skipped with ``pl.when``
+(no FLOPs issued); the diagonal block applies an elementwise iota mask.
+Sliding-window additionally skips blocks below the window.
+
+GQA: kv blocks are indexed through ``h // group`` so grouped query heads
+re-read the same kv tile (VMEM-resident; no HBM re-fetch within a step).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, sliding_window: Optional[int],
+            block_q: int, block_k: int, n_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (k_start <= q_start + block_q - 1)
+    if sliding_window is not None:
+        run = run & (k_start + block_k - 1 >= q_start - sliding_window + 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        mask = jnp.ones_like(s, bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if sliding_window is not None:
+            mask &= q_pos - k_pos < sliding_window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True,
+                         sliding_window: Optional[int] = None,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    _, KV, Sk, _ = k.shape
+    group = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    n_q, n_k = Sq // block_q, Sk // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(hd), causal=causal,
+        sliding_window=sliding_window, block_q=block_q, block_k=block_k,
+        n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),      # m
+            pltpu.VMEM((block_q, 1), jnp.float32),      # l
+            pltpu.VMEM((block_q, hd), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,94 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On TPU the kernels compile natively; on this CPU container they run in
+``interpret=True`` mode (the kernel body executed op-by-op), which is what
+the per-kernel allclose tests validate.  Layout adapters live here so the
+model code keeps its natural (B, S, H, hd) activations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cam_head import cam_head_bgd
+from repro.kernels.decode_attention import decode_attention_bkgd
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.rwkv6_scan import rwkv6_scan_bhtk
+from repro.kernels.spatial_predicate import spatial_stats_bgc
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sliding_window",
+                                             "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    sliding_window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        return ref.flash_attention_ref(q, k, v, causal=causal,
+                                       sliding_window=sliding_window)
+    out = flash_attention_bhsd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, sliding_window=sliding_window,
+        block_q=bq, block_k=bk, interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *, block_k: int = 256) -> jax.Array:
+    """q: (B, H, hd); k, v: (B, S, KV, hd); kv_len: () -> (B, H, hd)."""
+    B, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    bk = min(block_k, Sk)
+    if Sk % bk:
+        return ref.decode_attention_ref(q, k, v, kv_len)
+    out = decode_attention_bkgd(
+        q.reshape(B, KV, G, hd), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), jnp.asarray(kv_len).reshape(1),
+        block_k=bk, interpret=_interpret())
+    return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("d_block",))
+def cam_head(feat: jax.Array, w: jax.Array, b: jax.Array, *,
+             d_block: int = 512) -> Tuple[jax.Array, jax.Array]:
+    """feat: (B, g, g, D); w: (D, C); b: (C,) -> (counts, cam (B,g,g,C))."""
+    B, g, _, D = feat.shape
+    C = w.shape[1]
+    db = min(d_block, D)
+    if D % db:
+        return ref.cam_head_ref(feat, w, b)
+    counts, cam = cam_head_bgd(feat.reshape(B, g * g, D), w, b,
+                               d_block=db, interpret=_interpret())
+    return counts, cam.reshape(B, g, g, C)
+
+
+@functools.partial(jax.jit, static_argnames=("tau",))
+def spatial_stats(grid_logits: jax.Array, *, tau: float = 0.2) -> jax.Array:
+    """grid_logits: (B, g, g, C) -> per-class stats (B, C, 5)."""
+    return spatial_stats_bgc(grid_logits, tau=tau, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_scan(r, k, v, lw, u, s0, *, chunk: int = 32):
+    """r,k,v,lw: (B,H,T,K); u: (H,K); s0: (B,H,K,V)."""
+    T = r.shape[2]
+    c = min(chunk, T)
+    if T % c:
+        return ref.rwkv6_scan_ref(r, k, v, lw, u, s0)
+    return rwkv6_scan_bhtk(r, k, v, lw, u, s0, chunk=c,
+                           interpret=_interpret())

@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the *semantic* references the kernels are tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+They are deliberately naive: correctness first, no blocking tricks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        sliding_window: Optional[int] = None) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Full-softmax reference."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqngd,bsnd->bnqgs", qg, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if sliding_window is not None:
+        mask &= q_pos - k_pos < sliding_window
+    s = jnp.where(mask[None, None, :, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnqgs,bsnd->bnqgd", p, v)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """q: (B, H, hd) single step; k, v: (B, S, KV, hd); kv_len: () int."""
+    B, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bngd,bsnd->bngs", qg, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    valid = jnp.arange(Sk)[None, None, None, :] < kv_len
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngs,bsnd->bngd", p, v)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def cam_head_ref(feat: jax.Array, w: jax.Array,
+                 b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Paper Eq. 1 head. feat: (B, g, g, D); w: (D, C); b: (C,).
+
+    counts = relu(GAP(feat) @ w + b);  cam[b,i,j,c] = sum_d feat*w."""
+    cam = jnp.einsum("bijd,dc->bijc", feat.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    counts = jax.nn.relu(cam.mean(axis=(1, 2)) + b.astype(jnp.float32))
+    return counts, cam
+
+
+def spatial_stats_ref(grid_logits: jax.Array, tau: float = 0.2) -> jax.Array:
+    """Per-class occupancy statistics from CAM logits.
+
+    grid_logits: (B, g, g, C) -> stats (B, C, 5) float32:
+      [min_row, max_row, min_col, max_col, n_cells]
+    Empty classes: min=g, max=-1, n=0.  These stats are sufficient for all
+    ORDER()/Region predicates (see repro.core.query.spatial_relation).
+    Raw map values thresholded at tau (paper's 0.2 convention).
+    """
+    B, g, _, C = grid_logits.shape
+    occ = grid_logits.astype(jnp.float32) > tau
+    rows = jnp.arange(g)[None, :, None, None]
+    cols = jnp.arange(g)[None, None, :, None]
+    big = jnp.float32(g)
+    min_row = jnp.where(occ, rows, g).min((1, 2)).astype(jnp.float32)
+    max_row = jnp.where(occ, rows, -1).max((1, 2)).astype(jnp.float32)
+    min_col = jnp.where(occ, cols, g).min((1, 2)).astype(jnp.float32)
+    max_col = jnp.where(occ, cols, -1).max((1, 2)).astype(jnp.float32)
+    n = occ.sum((1, 2)).astype(jnp.float32)
+    return jnp.stack([min_row, max_row, min_col, max_col, n], axis=-1)
+
+
+def rwkv6_scan_ref(r, k, v, lw, u, s0):
+    """Sequential (per-token) RWKV-6 recurrence — the clearest oracle.
+
+    r,k,v,lw: (B, H, T, K); u: (H, K); s0: (B, H, K, V).
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t S_{t-1} + (r_t . u . k_t) v_t
+    """
+    rf, kf, vf, wf = [a.astype(jnp.float32).transpose(2, 0, 1, 3)
+                      for a in (r, k, v, lw)]          # (T, B, H, K)
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S)
+        o = o + jnp.einsum("bhk,hk,bhk->bh", rt, uf, kt)[..., None] * vt
+        S = S * jnp.exp(wt)[..., None] + kt[..., None] * vt[..., None, :]
+        return S, o
+
+    S, outs = jax.lax.scan(step, s0.astype(jnp.float32), (rf, kf, vf, wf))
+    return outs.transpose(1, 2, 0, 3), S               # (B,H,T,V), (B,H,K,V)

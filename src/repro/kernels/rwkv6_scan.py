@@ -1,0 +1,98 @@
+"""RWKV-6 chunked WKV recurrence — Pallas TPU kernel.
+
+The CUDA kernels RWKV ships process tokens serially per thread-block; the
+TPU-native formulation is *chunked*: within a chunk of c tokens all
+interactions are dense matmuls (MXU work), and only the (K x V) state
+crosses chunk boundaries (carried in VMEM scratch across the sequential
+last grid axis).  Identical math to repro.models.ssm.rwkv_chunk_scan and
+validated against the sequential oracle kernels/ref.rwkv6_scan_ref.
+
+Grid (B, H, nC); blocks: r/k/v/w chunk tiles (c, K) in VMEM; state (K, V)
+f32 scratch; intra-chunk matrix A is (c, c).  Decay exponents are clamped
+per DESIGN.md so exp() stays in fp32 range (c * DECAY_CLAMP = 64 << 88).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+            s_ref, *, chunk: int, n_c: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)                # (c, K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                   # (1, K) -> row
+    S = s_ref[...]                                     # (K, V)
+
+    Lc = jnp.cumsum(lw, axis=0)                        # inclusive
+    Lprev = Lc - lw                                    # exclusive
+    r_in = r * jnp.exp(Lprev)
+    k_out = k * jnp.exp(-Lc)
+    A = jax.lax.dot_general(r_in, k_out, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (c, c)
+    ri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    A = jnp.where(ri > ci, A, 0.0)                     # strict lower
+    diag = jnp.sum(r * u * k, axis=-1, keepdims=True)  # (c, 1) bonus
+    out = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    out = out + diag * v
+    out = out + jax.lax.dot_general(r_in, S, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+    Llast = Lc[-1:, :]                                 # (1, K)
+    k_in = k * jnp.exp(Llast - Lc)
+    s_ref[...] = S * jnp.exp(Llast).T + jax.lax.dot_general(
+        k_in, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ic == n_c - 1)
+    def _finish():
+        sT_ref[0, 0] = s_ref[...].astype(sT_ref.dtype)
+
+
+def rwkv6_scan_bhtk(r, k, v, lw, u, s0, *, chunk: int = 32,
+                    interpret: bool = False):
+    """r,k,v,lw: (B,H,T,K); u: (H,K); s0: (B,H,K,V) -> (out (B,H,T,V), sT)."""
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    n_c = T // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_c=n_c)
+    out, sT = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_c),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, K), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, V), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u, s0)
+    return out, sT

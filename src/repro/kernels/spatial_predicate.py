@@ -1,0 +1,55 @@
+"""Spatial-predicate statistics — Pallas TPU kernel (CLF hot path).
+
+Evaluating ORDER()/Region constraints needs, per frame and per class, the
+occupancy extrema of the thresholded CAM: min/max row, min/max column, and
+the occupied-cell count.  Those five statistics are *sufficient* for every
+pairwise relation the query language supports (see
+repro.core.query.spatial_relation), so the kernel reduces the (g, g, C)
+grid once in VMEM and emits a tiny (C, 5) tensor per frame — turning the
+per-predicate full-grid scans (one per query leaf) into a single fused
+reduction shared by all predicates.
+
+Grid (B,): one frame per step; the (g^2 x C) logits tile lives in VMEM
+(56*56*128 f32 = 1.6 MB), reductions are VPU element-wise ops over lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref, *, tau: float, g: int):
+    x = x_ref[0].astype(jnp.float32)                   # (g2, C)
+    occ = x > tau                        # raw-value threshold (paper: 0.2)
+    g2 = g * g
+    cell = jax.lax.broadcasted_iota(jnp.int32, (g2, x.shape[1]), 0)
+    rows = (cell // g).astype(jnp.float32)
+    cols = (cell % g).astype(jnp.float32)
+    big = jnp.float32(g)
+    min_row = jnp.min(jnp.where(occ, rows, big), axis=0)
+    max_row = jnp.max(jnp.where(occ, rows, -1.0), axis=0)
+    min_col = jnp.min(jnp.where(occ, cols, big), axis=0)
+    max_col = jnp.max(jnp.where(occ, cols, -1.0), axis=0)
+    n = jnp.sum(occ.astype(jnp.float32), axis=0)
+    o_ref[0] = jnp.stack([min_row, max_row, min_col, max_col, n],
+                         axis=-1).astype(o_ref.dtype)
+
+
+def spatial_stats_bgc(grid_logits: jax.Array, *, tau: float = 0.2,
+                      interpret: bool = False) -> jax.Array:
+    """grid_logits: (B, g, g, C) -> stats (B, C, 5) float32."""
+    B, g, g2_, C = grid_logits.shape
+    assert g == g2_
+    flat = grid_logits.reshape(B, g * g, C)
+    kernel = functools.partial(_kernel, tau=tau, g=g)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, g * g, C), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, C, 5), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C, 5), jnp.float32),
+        interpret=interpret,
+    )(flat)

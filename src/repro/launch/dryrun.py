@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init).  Everything below is ordinary code.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape x mesh) combination this lowers and
+compiles the real step function (train_step / prefill / serve_step) against
+ShapeDtypeStruct inputs on the production mesh:
+
+    single pod : (16, 16)    axes ("data", "model")   = 256 chips
+    multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+and records memory_analysis (fits-in-HBM proof), cost_analysis (FLOPs /
+bytes for the roofline) and the parsed collective inventory into a JSON
+artifact per cell under --out.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2_72b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch import hlo_analysis as HLO
+from repro.launch import jaxpr_cost as JC
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPE_CELLS, shape_cell, supports_long_context
+from repro.optim import adamw
+from repro.train import step as TS
+
+V5E = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9,
+       "hbm_bytes": 16 * 2 ** 30}
+
+
+def cell_is_applicable(cfg, cell) -> Optional[str]:
+    if cell.name == "long_500k" and not supports_long_context(cfg):
+        return "skip: long_500k needs sub-quadratic attention (full-attention arch)"
+    return None
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules_overrides: Optional[Dict[str, Any]] = None,
+             remat: Optional[str] = None,
+             decode_shardmap: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    cell = shape_cell(shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": 512 if multi_pod else 256,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    skip = cell_is_applicable(cfg, cell)
+    if skip:
+        rec["status"] = skip
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = None
+    if rules_overrides:
+        from repro.distributed.sharding import make_rules
+        rules = make_rules(rules_overrides)
+    opt = adamw(1e-4, weight_decay=0.1) if cell.kind == "train" else None
+    import contextlib
+    from repro.distributed import ctx as CTX
+    ds_ctx = (CTX.decode_shard(mesh) if decode_shardmap
+              else contextlib.nullcontext())
+    with mesh:
+        jitted, plan = TS.jit_step_for_cell(cfg, cell, mesh, opt, rules=rules)
+        with plan.sharder(), ds_ctx:
+            traced = jitted.trace(plan.abstract_state, plan.abstract_inputs)
+            jc = JC.analyze_traced(traced)       # exact global flops/bytes
+            lowered = traced.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+
+    colls = HLO.parse_collectives(hlo)
+    summary = HLO.summarize(colls)
+
+    chips = rec["chips"]
+    # NOTE: XLA cost_analysis counts while/scan bodies ONCE -> useless for
+    # scan-over-layers programs; jaxpr_cost multiplies by trip counts.
+    flops_global = jc["flops"]                   # exact executed FLOPs
+    bytes_global = jc["bytes_heavy"]             # fused estimate (dots/
+    #                gathers round-trip HBM; elementwise chains fuse)
+    bytes_ceiling = jc["bytes"]                  # unfused upper bound
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    wire = summary["total"]["wire_bytes"]
+    # tokens processed per step (global)
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    model_flops = (6 if cell.kind == "train" else 2) * \
+        cfg.active_param_count() * tokens
+
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", 0),
+            "fits_hbm": (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                         + ma.output_size_in_bytes) < V5E["hbm_bytes"],
+        },
+        "cost": {"flops_global": flops_global,
+                 "bytes_heavy_global": bytes_global,
+                 "bytes_unfused_ceiling_global": bytes_ceiling,
+                 "xla_flops_per_device_loop_body_once": xla_flops,
+                 "xla_bytes_per_device_loop_body_once": xla_bytes},
+        "collectives": summary,
+        "roofline": {
+            "compute_s": flops_global / chips / V5E["peak_flops"],
+            "memory_s": bytes_global / chips / V5E["hbm_bw"],
+            "memory_s_unfused_ceiling": bytes_ceiling / chips / V5E["hbm_bw"],
+            "collective_s": wire / V5E["ici_bw"],
+            "model_flops": model_flops,
+            "useful_flops_frac": model_flops / max(flops_global, 1.0),
+            "tokens": tokens,
+        },
+    })
+    terms = rec["roofline"]
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    rec["roofline"]["bottleneck"] = dom.replace("_s", "")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=[c.name for c in SHAPE_CELLS])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--rules", default=None,
+                    help="JSON sharding-rule overrides for perf experiments")
+    ap.add_argument("--decode-shardmap", action="store_true",
+                    help="seq-sharded shard_map decode attention fast path")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = ([(a, s.name) for a in ARCHS for s in SHAPE_CELLS]
+             if args.all else [(args.arch, args.shape)])
+    overrides = json.loads(args.rules) if args.rules else None
+
+    for arch, shape in cells:
+        for mp in meshes:
+            name = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            if args.tag:
+                name += f"__{args.tag}"
+            path = os.path.join(args.out, name + ".json")
+            try:
+                rec = run_cell(arch, shape, mp, rules_overrides=overrides,
+                               remat=args.remat,
+                               decode_shardmap=args.decode_shardmap)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if mp else "single",
+                       "status": f"ERROR: {type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec.get("status", "?")
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" compute={r['compute_s']*1e3:.1f}ms "
+                         f"mem={r['memory_s']*1e3:.1f}ms "
+                         f"coll={r['collective_s']*1e3:.1f}ms "
+                         f"dom={r['bottleneck']}"
+                         f" compile={rec['compile_s']:.0f}s")
+            print(f"[dryrun] {name}: {status[:80]}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

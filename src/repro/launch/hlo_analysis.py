@@ -1,0 +1,197 @@
+"""Post-SPMD HLO analysis: collective inventory with loop multiplicity.
+
+``cost_analysis()`` does not expose collective traffic, and a naive text
+scan counts a while-loop body ONCE even though scan-over-layers executes
+it n_layers times.  This parser therefore:
+
+1. splits the optimised HLO module into computations,
+2. finds every ``while`` op and extracts its static trip count from the
+   loop-condition computation (the ``constant(N)`` the induction variable
+   is compared against),
+3. propagates execution multiplicity ENTRY -> loop bodies (nested loops
+   multiply),
+4. sums collective sizes weighted by multiplicity.
+
+Wire-byte model per device (ring algorithms), S = replica-group size:
+    all-reduce         2 * size * (S-1)/S
+    all-gather         size * (S-1)/S          (size = gathered result)
+    reduce-scatter     size * (S-1)            (size = scattered result)
+    all-to-all         size * (S-1)/S
+    collective-permute size
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w\.\-]+), "
+                      r"body=%?([\w\.\-]+)")
+COMP_DEF_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{")
+CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+@dataclasses.dataclass
+class Collective:
+    op: str
+    bytes: float           # result bytes (one execution)
+    group_size: int
+    mult: float = 1.0      # loop-execution multiplicity
+
+    @property
+    def total_bytes(self) -> float:
+        return self.bytes * self.mult
+
+    @property
+    def wire_bytes(self) -> float:
+        s = max(self.group_size, 1)
+        if self.op == "all-reduce":
+            w = 2 * self.bytes * (s - 1) / s
+        elif self.op == "all-gather":
+            w = self.bytes * (s - 1) / s
+        elif self.op == "reduce-scatter":
+            w = self.bytes * (s - 1)
+        elif self.op == "all-to-all":
+            w = self.bytes * (s - 1) / s
+        else:
+            w = self.bytes
+        return w * self.mult
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    b = DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0.0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return float(n * b)
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    is_entry = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and "{" in line:
+            m = COMP_DEF_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    is_entry = cur
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    if is_entry is not None:
+        comps["__entry__"] = comps[is_entry]
+    return comps
+
+
+def _line_collective(line: str) -> Tuple[str, float, int]:
+    m = COLL_RE.search(line)
+    if not m or "-done" in line.split("=")[0]:
+        return None
+    op = m.group(1)
+    head = line[: m.start()]
+    if "=" in head:
+        head = head.split("=", 1)[1]
+    size = sum(_shape_bytes(dt, dims) for dt, dims in SHAPE_RE.findall(head))
+    if size == 0.0:
+        return None
+    gs = 1
+    gm = IOTA_GROUPS_RE.search(line)
+    if gm:
+        gs = int(gm.group(2))
+    else:
+        gm = LIST_GROUPS_RE.search(line)
+        if gm:
+            gs = len(gm.group(1).split(","))
+    return (op, size, gs)
+
+
+def parse_collectives(hlo_text: str) -> List[Collective]:
+    comps = _split_computations(hlo_text)
+    entry = "__entry__" if "__entry__" in comps else None
+    if entry is None and comps:
+        entry = max(comps, key=lambda k: len(comps[k]))
+
+    # while edges: parent comp -> (body, trip)
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            m = WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                consts = [int(c) for c in CONST_RE.findall(
+                    "\n".join(comps.get(cond, [])))]
+                trip = float(max(consts)) if consts else 1.0
+                edges[name].append((body, trip))
+
+    # propagate multiplicity from entry
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    frontier = [entry]
+    seen = set()
+    while frontier:
+        cur = frontier.pop()
+        if cur in seen:
+            continue
+        seen.add(cur)
+        for body, trip in edges.get(cur, []):
+            mult[body] += mult[cur] * trip
+            frontier.append(body)
+
+    out: List[Collective] = []
+    for name, lines in comps.items():
+        if name == "__entry__" and entry != "__entry__":
+            continue
+        m = mult.get(name, 0.0)
+        if name == "__entry__":
+            m = 1.0
+        if m == 0.0:
+            continue
+        for line in lines:
+            got = _line_collective(line)
+            if got:
+                op, size, gs = got
+                out.append(Collective(op=op, bytes=size, group_size=gs,
+                                      mult=m))
+    return out
+
+
+def summarize(colls: List[Collective]) -> Dict[str, Dict[str, float]]:
+    agg: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0})
+    for c in colls:
+        a = agg[c.op]
+        a["count"] += c.mult
+        a["operand_bytes"] += c.total_bytes
+        a["wire_bytes"] += c.wire_bytes
+    total = {"count": sum(a["count"] for a in agg.values()),
+             "operand_bytes": sum(a["operand_bytes"] for a in agg.values()),
+             "wire_bytes": sum(a["wire_bytes"] for a in agg.values())}
+    agg["total"] = total
+    return dict(agg)
+
+
+def count_op(hlo_text: str, name: str) -> int:
+    return len(re.findall(rf"\b{re.escape(name)}\(", hlo_text))

@@ -1,0 +1,153 @@
+"""Exact jaxpr-level cost model (FLOPs + HBM-traffic upper bound).
+
+Why: ``compiled.cost_analysis()`` counts a ``while``/``scan`` body ONCE,
+so any scan-over-layers program under-reports FLOPs by ~n_layers.  The
+jaxpr still has static trip counts, so walking it gives exact executed
+FLOPs: dot_general/conv counted precisely, scans multiplied by length,
+remat/pjit/custom-vjp bodies recursed.
+
+Bytes: every equation's operand+result sizes, scaled by trip counts —
+an *unfused* HBM-traffic upper bound (TPU fusion removes elementwise
+round-trips; dots/gathers/scatters dominate at our shapes).  Reported
+alongside the XLA number; the roofline memory term uses this one with
+the caveat recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax import core
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64) *
+                     np.dtype(aval.dtype).itemsize)
+    except Exception:
+        return 0.0
+
+
+def _aval_size(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64))
+    except Exception:
+        return 0.0
+
+
+def _dot_flops(eqn) -> float:
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    lhs = eqn.invars[0].aval
+    out = eqn.outvars[0].aval
+    k = 1.0
+    for d in lc:
+        k *= lhs.shape[d]
+    return 2.0 * _aval_size(out) * k
+
+
+def _conv_flops(eqn) -> float:
+    rhs = eqn.invars[1].aval           # kernel
+    out = eqn.outvars[0].aval
+    # flops = 2 * out_elems * (kernel spatial * in_channels)
+    k = _aval_size(rhs) / max(rhs.shape[-1], 1)   # HWIO: strip out-channels
+    return 2.0 * _aval_size(out) * k
+
+
+CHEAP_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "neg", "abs", "exp", "log",
+    "tanh", "logistic", "rsqrt", "sqrt", "pow", "integer_pow", "and", "or",
+    "not", "xor", "select_n", "ge", "gt", "le", "lt", "eq", "ne", "sign",
+    "floor", "ceil", "round", "erf", "erf_inv", "clamp", "rem", "cos",
+    "sin", "is_finite", "shift_right_logical", "shift_left", "nextafter",
+    "convert_element_type", "cumsum", "cumlogsumexp", "cummax", "cumprod",
+}
+
+RECURSE_CALLS = {"pjit", "closed_call", "core_call", "remat", "checkpoint",
+                 "custom_jvp_call", "custom_vjp_call",
+                 "custom_vjp_call_jaxpr", "custom_lin"}
+
+
+HEAVY_OPS = {"dot_general", "conv_general_dilated", "gather", "scatter",
+             "scatter-add", "scatter_add", "dynamic_slice",
+             "dynamic_update_slice", "take", "sort"}
+
+
+def analyze_jaxpr(jaxpr) -> Dict[str, float]:
+    """Returns {"flops", "bytes", "bytes_heavy"} for one (open) jaxpr,
+    exact in scan trip counts.
+
+    - ``bytes``: every equation's operand+result sizes — the *unfused*
+      HBM-traffic ceiling.
+    - ``bytes_heavy``: operand+result sizes of dot/conv/gather/scatter/
+      sort only — the fused estimate (elementwise chains fuse into the
+      surrounding heavy op on TPU and never round-trip HBM).
+    """
+    flops = 0.0
+    byts = 0.0
+    heavy = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            inner = analyze_jaxpr(eqn.params["jaxpr"].jaxpr)
+            n = eqn.params["length"]
+            flops += inner["flops"] * n
+            byts += inner["bytes"] * n
+            heavy += inner["bytes_heavy"] * n
+            continue
+        if name == "while":
+            # bounded fori_loop: trip count not static; count body once and
+            # flag (our programs only use scan)
+            inner = analyze_jaxpr(eqn.params["body_jaxpr"].jaxpr)
+            flops += inner["flops"]
+            byts += inner["bytes"]
+            heavy += inner["bytes_heavy"]
+            continue
+        if name in RECURSE_CALLS or "jaxpr" in eqn.params:
+            p = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if p is not None:
+                inner_jaxpr = p.jaxpr if hasattr(p, "jaxpr") else p
+                inner = analyze_jaxpr(inner_jaxpr)
+                flops += inner["flops"]
+                byts += inner["bytes"]
+                heavy += inner["bytes_heavy"]
+                continue
+        if name == "cond":
+            branches = eqn.params["branches"]
+            costs = [analyze_jaxpr(b.jaxpr) for b in branches]
+            flops += max(c["flops"] for c in costs)
+            byts += max(c["bytes"] for c in costs)
+            heavy += max(c["bytes_heavy"] for c in costs)
+            continue
+
+        out_b = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+        in_b = sum(_aval_bytes(v.aval) for v in eqn.invars
+                   if hasattr(v, "aval"))
+        byts += out_b + in_b
+        if name in HEAVY_OPS:
+            heavy += out_b + in_b
+
+        if name == "dot_general":
+            flops += _dot_flops(eqn)
+        elif name == "conv_general_dilated":
+            flops += _conv_flops(eqn)
+        elif name in ("reduce_sum", "reduce_max", "reduce_min",
+                      "reduce_prod", "argmax", "argmin", "reduce_and",
+                      "reduce_or", "logsumexp"):
+            flops += sum(_aval_size(v.aval) for v in eqn.invars
+                         if hasattr(v, "aval"))
+        elif name in CHEAP_ELEMENTWISE:
+            flops += sum(_aval_size(v.aval) for v in eqn.outvars)
+        elif name == "sort":
+            n = max((_aval_size(v.aval) for v in eqn.invars
+                     if hasattr(v, "aval")), default=0.0)
+            flops += n * max(math.log2(max(n, 2.0)), 1.0)
+        # gather/scatter/dynamic-slice etc.: bytes already counted
+    return {"flops": flops, "bytes": byts, "bytes_heavy": heavy}
+
+
+def analyze_traced(traced) -> Dict[str, float]:
+    """Cost of a jax.jit(...).trace(*args) object (global, pre-SPMD)."""
+    return analyze_jaxpr(traced.jaxpr.jaxpr)

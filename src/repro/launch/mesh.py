@@ -1,0 +1,36 @@
+"""Production mesh factory.
+
+Single pod:  (16, 16)   axes ("data", "model")   = 256 chips (TPU v5e pod)
+Multi-pod:   (2, 16, 16) axes ("pod", "data", "model") = 512 chips.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — critical because the dry-run
+process must set XLA_FLAGS before any jax initialisation, while smoke
+tests must see the single real CPU device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Elastic-scaling entry point: any (data, model[, pod]) factorisation
+    whose product matches the available device count."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Degenerate 1x1 mesh over the real local device (tests/examples)."""
+    n = len(jax.devices())
+    if n >= 2:
+        return jax.make_mesh((1, n), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))

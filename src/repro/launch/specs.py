@@ -1,0 +1,79 @@
+"""Input specifications for every (architecture x shape cell).
+
+ShapeDtypeStruct stand-ins only — weak-type-correct, shardable, zero
+allocation.  Modality frontends are stubs per the assignment: audio/vision
+inputs arrive as precomputed frame/patch embeddings at d_model width.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as SH
+from repro.models import serve as SV
+from repro.models.config import ModelConfig, ShapeCell
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_inputs(cfg: ModelConfig, cell: ShapeCell,
+                 with_labels: bool) -> Dict[str, Any]:
+    """Token/embedding inputs for one step (train or prefill)."""
+    B, S = cell.global_batch, cell.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {}
+    s_text = S
+    if cfg.vlm_prefix:
+        p = min(cfg.vlm_prefix, S // 2)
+        s_text = S - p
+        out["embeds"] = _sds((B, p, cfg.d_model), dt)
+    if cfg.enc_dec:
+        out["frames"] = _sds((B, cfg.enc_len, cfg.d_model), dt)
+    out["tokens"] = _sds((B, s_text), jnp.int32)
+    if with_labels:
+        out["labels"] = _sds((B, s_text), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Abstract inputs for the cell's step function.
+
+    train:   {tokens, labels[, embeds][, frames]}
+    prefill: {tokens[, embeds][, frames], cache}   (empty cache, len=0)
+    decode:  {tokens (B,1), cache}                 (cache filled to seq_len)
+    """
+    if cell.kind == "train":
+        return batch_inputs(cfg, cell, with_labels=True)
+    if cell.kind == "prefill":
+        b = batch_inputs(cfg, cell, with_labels=False)
+        b["cache"] = jax.eval_shape(
+            lambda: SV.init_cache(cfg, cell.global_batch, cell.seq_len))
+        return b
+    # decode: one new token against a seq_len-deep cache
+    cache = jax.eval_shape(
+        lambda: SV.init_cache(cfg, cell.global_batch, cell.seq_len))
+    return {"tokens": _sds((cell.global_batch, 1), jnp.int32),
+            "cache": cache}
+
+
+def input_shardings(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                    rules=None) -> Dict[str, Any]:
+    """NamedShardings matching input_specs structure."""
+    rules = rules or SH.DEFAULT_RULES
+    specs = input_specs(cfg, cell)
+    out: Dict[str, Any] = {}
+    for k, v in specs.items():
+        if k == "cache":
+            ax = SV.cache_axes(cfg)
+            out[k] = SH.tree_shardings(ax, v, mesh, rules)
+        else:
+            bspec = SH.spec_for(
+                ("batch",) + (None,) * (len(v.shape) - 1), v.shape, mesh,
+                rules)
+            out[k] = NamedSharding(mesh, bspec)
+    return out

@@ -1,0 +1,107 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2_0p5b \
+        --steps 100 --batch 8 --seq 512 [--mesh host|single|multi] \
+        --ckpt-dir /tmp/ckpt --ckpt-every 50
+
+On this container only ``--mesh host`` executes (1 CPU device; production
+meshes need 256/512 chips — use repro.launch.dryrun for those).  The loop
+wires together every production concern: sharded data loading with
+prefetch, donation, checkpoint/restore with preemption handling, straggler
+accounting, and metrics logging.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.data.pipeline import ShardedLoader, TokenStream
+from repro.launch import specs as SPECS
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.config import ShapeCell
+from repro.optim import adamw, warmup_cosine
+from repro.train import step as TS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="qwen2_0p5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", choices=["host", "single", "multi"],
+                    default="host")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    cell = ShapeCell("cli", args.seq, args.batch, "train")
+    opt = adamw(warmup_cosine(args.lr, 10, max(args.steps, 11)),
+                weight_decay=0.01)
+    with mesh:
+        jitted, plan = TS.jit_step_for_cell(cfg, cell, mesh, opt,
+                                            clip_norm=1.0)
+        rng = jax.random.PRNGKey(0)
+
+        mgr = None
+        if args.ckpt_dir:
+            mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+            mgr.preempt.install()
+            state, start = mgr.restore_or_init(
+                lambda: TS.init_state(rng, cfg, opt))
+            start += 1
+        else:
+            state, start = TS.init_state(rng, cfg, opt), 0
+
+        # vlm/audio stub extras are folded into the token stream here
+        stream = TokenStream(cfg.vocab_size, args.batch, args.seq)
+
+        def with_extras(it):
+            for b in it:
+                if cfg.vlm_prefix:
+                    p = min(cfg.vlm_prefix, args.seq // 2)
+                    b["embeds"] = np.zeros((args.batch, p, cfg.d_model),
+                                           np.float32)
+                    b["tokens"] = b["tokens"][:, : args.seq - p]
+                    b["labels"] = b["labels"][:, : args.seq - p]
+                if cfg.enc_dec:
+                    b["frames"] = np.zeros((args.batch, cfg.enc_len,
+                                            cfg.d_model), np.float32)
+                yield b
+
+        loader = ShardedLoader(with_extras(iter(stream)),
+                               plan.input_shardings)
+        t0 = time.perf_counter()
+        with plan.sharder():
+            for step, batch in zip(range(start, args.steps), loader):
+                state, metrics = jitted(state, batch)
+                if mgr is not None:
+                    mgr.step(state, step)
+                if step % args.log_every == 0:
+                    dt = time.perf_counter() - t0
+                    print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                          f"gnorm {float(metrics['grad_norm']):.3f} "
+                          f"({dt:.1f}s)", flush=True)
+        if mgr is not None:
+            mgr.wait()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.models.config import (BlockKind, BranchSpec, ModelConfig,
+                                 ShapeCell, SHAPE_CELLS, shape_cell,
+                                 reduce_for_smoke, supports_long_context)
+from repro.models import layers, model, serve, ssm
+
+__all__ = ["BlockKind", "BranchSpec", "ModelConfig", "ShapeCell",
+           "SHAPE_CELLS", "shape_cell", "reduce_for_smoke",
+           "supports_long_context", "layers", "model", "serve", "ssm"]

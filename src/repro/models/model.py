@@ -1,0 +1,357 @@
+"""Unified model zoo: one functional model covering all assigned families.
+
+- decoder-only LM (dense / GQA / MoE / RWKV6 / Hymba hybrid)
+- encoder-decoder (whisper-style; frontend stub provides frame embeddings)
+- prefix-VLM (paligemma-style; frontend stub provides patch embeddings)
+
+Layers are stacked (leading ``L`` axis) and executed with ``lax.scan``
+(optionally under ``jax.checkpoint`` remat policies).  ``forward`` can
+return the activation *tap* after the first ``k`` layers — that tap feeds
+the paper's filter branches (repro.core.filters), mirroring the paper's
+"branch at layer k of VGG19 / Darknet-19" design.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed import ctx
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import BlockKind, ModelConfig
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, *, cross: bool = False,
+                is_encoder: bool = False) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    blk = BlockKind.ATTN if is_encoder else cfg.block
+    if blk == BlockKind.RWKV6:
+        p["ln1"] = L.norm_init(cfg)
+        p["ln2"] = L.norm_init(cfg)
+        p["rwkv"] = S.rwkv_init(ks[0], cfg)
+        return p
+    p["ln1"] = L.norm_init(cfg)
+    p["attn"] = L.attn_init(ks[0], cfg)
+    if blk == BlockKind.HYBRID:
+        p["mamba"] = S.mamba_init(ks[1], cfg)
+    if cross:
+        p["ln_x"] = L.norm_init(cfg)
+        p["xattn"] = L.attn_init(ks[2], cfg, cross=True)
+    p["ln2"] = L.norm_init(cfg)
+    if blk == BlockKind.MOE:
+        p["moe"] = L.moe_init(ks[3], cfg)
+    else:
+        p["mlp"] = L.mlp_init(ks[4], cfg)
+    return p
+
+
+def _layer_axes(cfg: ModelConfig, *, cross: bool = False,
+                is_encoder: bool = False) -> Params:
+    a: Params = {}
+    blk = BlockKind.ATTN if is_encoder else cfg.block
+    if blk == BlockKind.RWKV6:
+        return {"ln1": L.norm_axes(cfg), "ln2": L.norm_axes(cfg),
+                "rwkv": S.rwkv_axes(cfg)}
+    a["ln1"] = L.norm_axes(cfg)
+    a["attn"] = L.attn_axes(cfg)
+    if blk == BlockKind.HYBRID:
+        a["mamba"] = S.mamba_axes(cfg)
+    if cross:
+        a["ln_x"] = L.norm_axes(cfg)
+        a["xattn"] = L.attn_axes(cfg, cross=True)
+    a["ln2"] = L.norm_axes(cfg)
+    if blk == BlockKind.MOE:
+        a["moe"] = L.moe_axes(cfg)
+    else:
+        a["mlp"] = L.mlp_axes(cfg)
+    return a
+
+
+def _stack_layers(key, cfg: ModelConfig, n: int, **kw) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _layer_init(k, cfg, **kw))(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = L.dtype_of(cfg)
+    p: Params = {
+        "embed": L._normal(ks[0], (cfg.vocab_size, cfg.d_model), 0.02, dt),
+        "final_norm": L.norm_init(cfg),
+        "layers": _stack_layers(ks[1], cfg, cfg.n_layers, cross=cfg.enc_dec),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[2], cfg.d_model,
+                                    (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.learned_pos:
+        p["pos_embed"] = L._normal(ks[3], (cfg.max_seq_len, cfg.d_model),
+                                   0.02, dt)
+    if cfg.enc_dec:
+        p["enc_layers"] = _stack_layers(ks[4], cfg, cfg.n_enc_layers,
+                                        is_encoder=True)
+        p["enc_norm"] = L.norm_init(cfg)
+    return p
+
+
+def _bcast_axes(tree: Params, extra: Tuple) -> Params:
+    return jax.tree.map(lambda ax: extra + ax, tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    a: Params = {
+        "embed": ("vocab", "embed"),
+        "final_norm": L.norm_axes(cfg),
+        "layers": _bcast_axes(_layer_axes(cfg, cross=cfg.enc_dec), ("layers",)),
+    }
+    if not cfg.tie_embeddings:
+        a["lm_head"] = ("embed", "vocab")
+    if cfg.learned_pos:
+        a["pos_embed"] = (None, "embed")
+    if cfg.enc_dec:
+        a["enc_layers"] = _bcast_axes(_layer_axes(cfg, is_encoder=True),
+                                      ("layers",))
+        a["enc_norm"] = L.norm_axes(cfg)
+    return a
+
+
+# --------------------------------------------------------------------------
+# Layer application
+# --------------------------------------------------------------------------
+
+def _apply_layer(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                 causal: bool, positions, prefix_len: int,
+                 cache: Optional[Params], cache_len,
+                 enc_out: Optional[jax.Array],
+                 is_encoder: bool = False,
+                 moe_groups: int = 1):
+    """One block. Returns (x, new_cache (per-layer, no 'len'), aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    blk = BlockKind.ATTN if is_encoder else cfg.block
+    new_cache: Params = {}
+
+    if blk == BlockKind.RWKV6:
+        st = dict(cache) if cache is not None else None
+        h, st = S.rwkv_time_mix(p["rwkv"], L.apply_norm(p["ln1"], x, cfg.norm_eps),
+                                cfg, state=st,
+                                use_kernel=cfg.attn_impl == "pallas")
+        x = x + h
+        h2, st = S.rwkv_channel_mix(
+            p["rwkv"], L.apply_norm(p["ln2"], x, cfg.norm_eps), state=st)
+        x = x + h2
+        return x, (st if cache is not None else {}), aux
+
+    h = L.apply_norm(p["ln1"], x, cfg.norm_eps)
+    attn_cache = None
+    if cache is not None:
+        attn_cache = {"k": cache["k"], "v": cache["v"], "len": cache_len}
+        if "pos" in cache:
+            attn_cache["pos"] = cache["pos"]
+    a_out, attn_cache = L.attention_block(
+        p["attn"], h, cfg, causal=causal, positions=positions,
+        cache=attn_cache, prefix_len=prefix_len)
+    if blk == BlockKind.HYBRID:
+        m_state = None
+        if cache is not None:
+            m_state = {"ssm": cache["ssm"], "conv": cache["conv"]}
+        m_out, m_state = S.mamba_block(p["mamba"], h, cfg, state=m_state)
+        a_out = 0.5 * (a_out + m_out)
+        if m_state is not None:
+            new_cache.update(m_state)
+    x = x + a_out
+    if attn_cache is not None:
+        new_cache["k"], new_cache["v"] = attn_cache["k"], attn_cache["v"]
+        if "pos" in attn_cache:
+            new_cache["pos"] = attn_cache["pos"]
+
+    if enc_out is not None and "xattn" in p:
+        hx = L.apply_norm(p["ln_x"], x, cfg.norm_eps)
+        x_out, _ = L.attention_block(p["xattn"], hx, cfg, causal=False,
+                                     kv_source=enc_out, use_rope=False)
+        x = x + x_out
+
+    h2 = L.apply_norm(p["ln2"], x, cfg.norm_eps)
+    if blk == BlockKind.MOE:
+        m_out, aux = L.apply_moe(p["moe"], h2, cfg, groups=moe_groups)
+        x = x + m_out
+    else:
+        x = x + L.apply_mlp(p["mlp"], h2, cfg)
+    return x, new_cache, aux
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "selective":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def run_layers(stack: Params, x: jax.Array, cfg: ModelConfig, *,
+               lo: int = 0, hi: Optional[int] = None,
+               causal: bool = True, positions=None, prefix_len: int = 0,
+               caches: Optional[Params] = None, cache_len=None,
+               enc_out: Optional[jax.Array] = None,
+               is_encoder: bool = False, moe_groups: int = 1):
+    """Run layers [lo, hi) of a stacked tree. Returns (x, caches, aux)."""
+    n_total = jax.tree.leaves(stack)[0].shape[0]
+    hi = n_total if hi is None else hi
+    seg = jax.tree.map(lambda a: a[lo:hi], stack)
+    seg_cache = (jax.tree.map(lambda a: a[lo:hi], caches)
+                 if caches is not None else None)
+    n = hi - lo
+    if n == 0:
+        return x, seg_cache, jnp.zeros((), jnp.float32)
+    kw = dict(causal=causal, positions=positions, prefix_len=prefix_len,
+              cache_len=cache_len, enc_out=enc_out, is_encoder=is_encoder,
+              moe_groups=moe_groups)
+
+    def one(carry, pl, cl):
+        xx, aux_acc = carry
+        xx, nc, aux = _apply_layer(pl, ctx.constrain(xx), cfg, cache=cl, **kw)
+        return (ctx.constrain(xx), aux_acc + aux), nc
+
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers and n > 1:
+        if seg_cache is None:
+            step = _remat_wrap(lambda c, pl: (one(c, pl, None)[0], None), cfg)
+            (x, aux), _ = lax.scan(step, (x, zero), seg)
+            return x, None, aux
+        step = _remat_wrap(lambda c, xs: one(c, xs[0], xs[1]), cfg)
+        (x, aux), new_caches = lax.scan(step, (x, zero), (seg, seg_cache))
+        return x, new_caches, aux
+
+    aux = zero
+    new_caches = []
+    step = _remat_wrap(one, cfg)
+    for i in range(n):
+        pl = jax.tree.map(lambda a: a[i], seg)
+        cl = (jax.tree.map(lambda a: a[i], seg_cache)
+              if seg_cache is not None else None)
+        (x, aux), nc = step((x, aux), pl, cl)
+        new_caches.append(nc)
+    if seg_cache is not None:
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+    else:
+        new_caches = None
+    return x, new_caches, aux
+
+
+# --------------------------------------------------------------------------
+# Full forward
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ForwardOut:
+    logits: Optional[jax.Array] = None      # (B, S, V)
+    caches: Optional[Params] = None         # stacked per-layer caches
+    cache_len: Optional[jax.Array] = None
+    enc_out: Optional[jax.Array] = None     # encoder memory (enc-dec)
+    aux: Optional[jax.Array] = None         # MoE load-balance loss
+    tap: Optional[jax.Array] = None         # activations after branch layer k
+
+
+def embed_tokens(params: Params, cfg: ModelConfig, tokens: jax.Array):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+    x = frames.astype(L.dtype_of(cfg))
+    x = x + L.sinusoid_pos(frames.shape[1], cfg.d_model, x.dtype)[None]
+    x, _, _ = run_layers(params["enc_layers"], x, cfg, causal=False,
+                         is_encoder=True, positions=None)
+    return L.apply_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params: Params, cfg: ModelConfig,
+            tokens: Optional[jax.Array] = None, *,
+            embeds: Optional[jax.Array] = None,       # VLM patch embeddings
+            frames: Optional[jax.Array] = None,       # audio frame embeddings
+            enc_out: Optional[jax.Array] = None,      # precomputed encoder memory
+            caches: Optional[Params] = None,
+            cache_len: Optional[jax.Array] = None,
+            tap_layer: Optional[int] = None,
+            stop_at_tap: bool = False,
+            causal: bool = True,
+            moe_groups: int = 1) -> ForwardOut:
+    """Unified forward for all families.
+
+    Train/prefill: ``caches=None`` / caches given with ``cache_len=0``.
+    Decode: tokens (B,1), caches + cache_len given.
+    ``tap_layer`` returns the activation after the first k layers — the
+    feature map the paper's filter branch consumes.
+    """
+    prefix_len = 0
+    if tokens is not None:
+        x = embed_tokens(params, cfg, tokens)
+        if embeds is not None:                        # paligemma prefix
+            x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+            prefix_len = embeds.shape[1]              # prefix-LM bidirectional
+    else:
+        # embeds-only input (filter trunk over patch/frame embeddings)
+        x = embeds.astype(L.dtype_of(cfg))
+    x = ctx.constrain(x)
+    B, Stot = x.shape[:2]
+
+    if cache_len is not None:
+        positions = cache_len + jnp.arange(Stot)[None, :]
+    else:
+        positions = jnp.arange(Stot)[None, :]
+    if cfg.learned_pos:
+        pe = params["pos_embed"]
+        x = x + jnp.take(pe, jnp.minimum(positions[0], pe.shape[0] - 1), axis=0)
+
+    if cfg.enc_dec and enc_out is None:
+        assert frames is not None, "enc-dec needs frames or enc_out"
+        enc_out = encode(params, cfg, frames)
+
+    kw = dict(causal=causal, positions=positions, prefix_len=prefix_len,
+              enc_out=enc_out, moe_groups=moe_groups, cache_len=cache_len)
+    tap = None
+    aux = jnp.zeros((), jnp.float32)
+    if tap_layer is not None and 0 < tap_layer <= cfg.n_layers:
+        x, c1, aux1 = run_layers(params["layers"], x, cfg, lo=0, hi=tap_layer,
+                                 caches=caches, **kw)
+        tap = x
+        aux = aux + aux1
+        if stop_at_tap:
+            return ForwardOut(caches=c1, aux=aux, tap=tap, enc_out=enc_out)
+        x, c2, aux2 = run_layers(params["layers"], x, cfg, lo=tap_layer,
+                                 caches=caches, **kw)
+        aux = aux + aux2
+        new_caches = None
+        if caches is not None:
+            new_caches = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), c1, c2)
+    else:
+        x, new_caches, aux = run_layers(params["layers"], x, cfg,
+                                        caches=caches, **kw)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+    new_len = None if cache_len is None else cache_len + Stot
+    return ForwardOut(logits=logits, caches=new_caches, cache_len=new_len,
+                      enc_out=enc_out, aux=aux, tap=tap)

@@ -1,0 +1,125 @@
+"""Serving: cache construction, prefill and decode steps.
+
+The cache is a pytree of per-layer arrays stacked on a leading ``L`` axis
+(so ``lax.scan`` threads it through the layer stack), plus a scalar
+``len``.  Cache *kind* follows the block kind:
+
+- attention:  k/v buffers (B, S_max, KV, hd)
+- rwkv6:      wkv state (B, H, K, K) + token-shift states (B, D)
+- hybrid:     attention k/v + mamba ssm/conv states
+- enc-dec:    decoder k/v + the (fixed) encoder memory
+
+Sliding-window archs (hymba) allocate ``min(S_max, window_cap)``-length
+k/v buffers — decode only ever needs the last ``window`` positions
+(ring-buffer optimisation recorded in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.config import BlockKind, ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _layer_cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dt = L.dtype_of(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    kv_len = max_len
+    if cfg.sliding_window is not None:
+        kv_len = min(max_len, cfg.sliding_window)
+    c: Params = {}
+    if cfg.block in (BlockKind.ATTN, BlockKind.MOE, BlockKind.HYBRID):
+        c["k"] = jnp.zeros((batch, kv_len, KV, hd), dt)
+        c["v"] = jnp.zeros((batch, kv_len, KV, hd), dt)
+        if kv_len < max_len:           # ring buffer: track per-slot positions
+            c["pos"] = jnp.full((kv_len,), -1, jnp.int32)
+    if cfg.block == BlockKind.HYBRID:
+        c["ssm"] = jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+        c["conv"] = jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dt)
+    if cfg.block == BlockKind.RWKV6:
+        H, K = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+        c["wkv"] = jnp.zeros((batch, H, K, K), jnp.float32)
+        c["shift_tm"] = jnp.zeros((batch, cfg.d_model), dt)
+        c["shift_cm"] = jnp.zeros((batch, cfg.d_model), dt)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Zero cache for all layers: {'layers': stacked, 'len': int32 scalar}."""
+    one = _layer_cache_spec(cfg, batch, max_len)
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(),
+        one)
+    cache: Params = {"layers": stacked, "len": jnp.zeros((), jnp.int32)}
+    if cfg.enc_dec:
+        cache["enc_out"] = jnp.zeros((batch, cfg.enc_len, cfg.d_model),
+                                     L.dtype_of(cfg))
+    return cache
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    """Logical axes mirroring init_cache structure (for pjit shardings)."""
+    ax: Params = {}
+    if cfg.block in (BlockKind.ATTN, BlockKind.MOE, BlockKind.HYBRID):
+        ax["k"] = ("layers", "cache_batch", "cache_seq", "cache_kv", None)
+        ax["v"] = ("layers", "cache_batch", "cache_seq", "cache_kv", None)
+        if cfg.sliding_window is not None:
+            ax["pos"] = ("layers", None)
+    if cfg.block == BlockKind.HYBRID:
+        ax["ssm"] = ("layers", "cache_batch", "inner", None)
+        ax["conv"] = ("layers", "cache_batch", None, "inner")
+    if cfg.block == BlockKind.RWKV6:
+        ax["wkv"] = ("layers", "cache_batch", None, None, None)
+        ax["shift_tm"] = ("layers", "cache_batch", "embed")
+        ax["shift_cm"] = ("layers", "cache_batch", "embed")
+    cache_ax: Params = {"layers": ax, "len": ()}
+    if cfg.enc_dec:
+        cache_ax["enc_out"] = ("cache_batch", None, "embed")
+    return cache_ax
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            cache: Params,
+            embeds: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None,
+            tap_layer: Optional[int] = None) -> Tuple[jax.Array, Params, Any]:
+    """Process a full prompt, filling the cache. Returns (last_logits, cache, tap)."""
+    enc_out = cache.get("enc_out") if cfg.enc_dec and frames is None else None
+    out = M.forward(params, cfg, tokens, embeds=embeds, frames=frames,
+                    enc_out=enc_out, caches=cache["layers"],
+                    cache_len=cache["len"], tap_layer=tap_layer)
+    new_cache = {"layers": out.caches, "len": out.cache_len}
+    if cfg.enc_dec:
+        new_cache["enc_out"] = out.enc_out
+    return out.logits[:, -1], new_cache, out.tap
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+                cache: Params) -> Tuple[jax.Array, Params]:
+    """One-token decode. tokens: (B, 1). Returns (logits (B,V), cache)."""
+    enc_out = cache.get("enc_out") if cfg.enc_dec else None
+    out = M.forward(params, cfg, tokens, enc_out=enc_out,
+                    caches=cache["layers"], cache_len=cache["len"])
+    new_cache = {"layers": out.caches, "len": out.cache_len}
+    if cfg.enc_dec:
+        new_cache["enc_out"] = enc_out
+    return out.logits[:, -1], new_cache
+
+
+def greedy_generate(params: Params, cfg: ModelConfig, prompt: jax.Array,
+                    n_steps: int, max_len: int) -> jax.Array:
+    """Tiny reference generation loop (tests / examples)."""
+    B = prompt.shape[0]
+    cache = init_cache(cfg, B, max_len)
+    logits, cache, _ = prefill(params, cfg, prompt, cache=cache)
+    toks = [jnp.argmax(logits, -1)[:, None]]
+    for _ in range(n_steps - 1):
+        logits, cache = decode_step(params, cfg, toks[-1], cache=cache)
+        toks.append(jnp.argmax(logits, -1)[:, None])
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,332 @@
+"""State-space / linear-recurrence blocks: RWKV-6 (Finch) and Mamba (S6).
+
+Both are implemented with *chunked* recurrences: a ``lax.scan`` over fixed
+chunks carries the recurrent state, while within-chunk interactions are
+computed as dense (MXU-friendly) matmuls.  This is the TPU adaptation of
+the CUDA scan kernels these model families ship with: VMEM-sized chunks,
+state in registers/VMEM, O(T) memory, sub-quadratic compute — which is why
+these two archs (rwkv6-3b, hymba-1.5b) are the ones that run ``long_500k``.
+
+Numerics note (documented in DESIGN.md): RWKV-6 decay exponents are clamped
+to ``lw in [-DECAY_CLAMP, 0)`` so that within-chunk cumulative decays stay
+representable in fp32 (chunk 32 * 2.0 = 64 < log(fp32max) ~ 88).  The Pallas
+kernel (kernels/rwkv6_scan.py) uses the same convention; ref and kernel agree
+exactly.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of
+
+Params = Dict[str, Any]
+
+RWKV_CHUNK = 32
+DECAY_CLAMP = 2.0
+LORA_RANK = 32
+
+
+# ==========================================================================
+# RWKV-6
+# ==========================================================================
+
+def rwkv_init(key, cfg: ModelConfig) -> Params:
+    d, f, dt = cfg.d_model, cfg.d_ff, dtype_of(cfg)
+    ks = jax.random.split(key, 12)
+    p = {
+        # time-mix
+        "mu": jnp.full((5, d), 0.5, dt),            # r,k,v,w,g token-shift mix
+        "wr": dense_init(ks[0], d, (d, d), dt),
+        "wk": dense_init(ks[1], d, (d, d), dt),
+        "wv": dense_init(ks[2], d, (d, d), dt),
+        "wg": dense_init(ks[3], d, (d, d), dt),
+        "w0": jnp.full((d,), -0.6, jnp.float32),     # decay bias
+        "wa": dense_init(ks[4], d, (d, LORA_RANK), dt),
+        "wb": dense_init(ks[5], LORA_RANK, (LORA_RANK, d), dt),
+        "u": jnp.zeros((d,), jnp.float32),           # per-channel bonus
+        "wo": dense_init(ks[6], d, (d, d), dt),
+        "ln_w": jnp.ones((d,), dt), "ln_b": jnp.zeros((d,), dt),
+        # channel-mix
+        "mu_ck": jnp.full((d,), 0.5, dt),
+        "mu_cr": jnp.full((d,), 0.5, dt),
+        "wck": dense_init(ks[7], d, (d, f), dt),
+        "wcv": dense_init(ks[8], f, (f, d), dt),
+        "wcr": dense_init(ks[9], d, (d, d), dt),
+    }
+    return p
+
+
+def rwkv_axes(cfg: ModelConfig) -> Params:
+    dd = ("embed", "heads_d")      # square mixing mats: shard output dim
+    return {
+        "mu": (None, "embed"), "wr": dd, "wk": dd, "wv": dd, "wg": dd,
+        "w0": ("embed",), "wa": ("embed", None), "wb": (None, "embed"),
+        "u": ("embed",), "wo": ("heads_d", "embed"),
+        "ln_w": ("embed",), "ln_b": ("embed",),
+        "mu_ck": ("embed",), "mu_cr": ("embed",),
+        "wck": ("embed", "mlp"), "wcv": ("mlp", "embed"),
+        "wcr": ("embed", "heads_d"),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """xx[t] = x[t-1]; position 0 takes ``prev`` (decode state) or zeros."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_decay(p: Params, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel log-decay, clamped to [-DECAY_CLAMP, ~0)."""
+    lora = jnp.einsum("bsd,dr->bsr", xw, p["wa"])
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(lora), p["wb"])
+    raw = p["w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+    lw = -jnp.exp(jnp.clip(raw, -20.0, math.log(DECAY_CLAMP)))
+    return jnp.clip(lw, -DECAY_CLAMP, -1e-6)
+
+
+def rwkv_chunk_scan(r, k, v, lw, u, state, chunk: int = RWKV_CHUNK):
+    """Chunked RWKV-6 WKV recurrence.
+
+    r,k,v,lw: (B, H, T, K) (lw is per-key-channel log decay);
+    u: (H, K); state: (B, H, K, V).  Returns (out (B,H,T,V), new state).
+    Recurrence: S_t = diag(w_t) S_{t-1} + k_t v_t^T;
+                out_t = r_t S_{t-1} + (r_t . u . k_t) v_t.
+    """
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk -= 1
+    n = T // chunk
+    rc = r.reshape(B, H, n, chunk, K).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, n, chunk, K).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, n, chunk, V).transpose(2, 0, 1, 3, 4)
+    wc = lw.reshape(B, H, n, chunk, K).transpose(2, 0, 1, 3, 4)
+
+    tri_strict = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def body(S, inp):
+        rb, kb, vb, wb = [a.astype(jnp.float32) for a in inp]
+        Lc = jnp.cumsum(wb, axis=-2)                      # (B,H,c,K)
+        Lprev = Lc - wb                                   # exclusive cumsum
+        r_in = rb * jnp.exp(Lprev)
+        k_out = kb * jnp.exp(-Lc)
+        A = jnp.einsum("bhck,bhdk->bhcd", r_in, k_out)    # (B,H,c,c)
+        A = jnp.where(tri_strict[None, None], A, 0.0)
+        diag = jnp.einsum("bhck,hk,bhck->bhc", rb, u.astype(jnp.float32), kb)
+        out = jnp.einsum("bhcd,bhdv->bhcv", A, vb)
+        out = out + diag[..., None] * vb
+        out = out + jnp.einsum("bhck,bhkv->bhcv", r_in, S)
+        Llast = Lc[..., -1:, :]                           # (B,H,1,K)
+        k_in = kb * jnp.exp(Llast - Lc)
+        S_new = S * jnp.exp(Llast[..., 0, :])[..., None] + \
+            jnp.einsum("bhck,bhcv->bhkv", k_in, vb)
+        return S_new, out
+
+    state, outs = lax.scan(body, state.astype(jnp.float32),
+                           (rc, kc, vc, wc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, T, V)
+    return out, state
+
+
+def rwkv_time_mix(p: Params, x: jax.Array, cfg: ModelConfig,
+                  state: Optional[Params] = None,
+                  use_kernel: bool = False) -> Tuple[jax.Array, Optional[Params]]:
+    """RWKV-6 attention replacement. x: (B,S,D)."""
+    B, S, D = x.shape
+    H, K = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    xx = _token_shift(x, None if state is None else state["shift_tm"])
+    mix = x[:, None] + (xx - x)[:, None] * p["mu"][None, :, None, :]  # (B,5,S,D)
+    xr, xk, xv, xw, xg = [mix[:, i] for i in range(5)]
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, K)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, K)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, K)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    lw = _rwkv_decay(p, xw).reshape(B, S, H, K)
+    u = p["u"].reshape(H, K)
+
+    S0 = (state["wkv"] if state is not None
+          else jnp.zeros((B, H, K, K), jnp.float32))
+    rt, kt, vt, wt = [a.transpose(0, 2, 1, 3) for a in (r, k, v, lw)]
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out, S_new = kops.rwkv6_scan(rt, kt, vt, wt, u, S0)
+    else:
+        out, S_new = rwkv_chunk_scan(rt, kt, vt, wt, u, S0)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, D)
+
+    # per-head group norm, then gate and output-project
+    out = out.reshape(B, S, H, K)
+    mu_ = jnp.mean(out, -1, keepdims=True)
+    var = jnp.var(out, -1, keepdims=True)
+    out = ((out - mu_) * lax.rsqrt(var + 64e-5)).reshape(B, S, D)
+    out = out * p["ln_w"].astype(out.dtype) + p["ln_b"].astype(out.dtype)
+    out = (out * g).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", out, p["wo"])
+
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["wkv"] = S_new
+        new_state["shift_tm"] = x[:, -1]
+    return out.astype(x.dtype), new_state
+
+
+def rwkv_channel_mix(p: Params, x: jax.Array,
+                     state: Optional[Params] = None
+                     ) -> Tuple[jax.Array, Optional[Params]]:
+    xx = _token_shift(x, None if state is None else state["shift_cm"])
+    xk = x + (xx - x) * p["mu_ck"]
+    xr = x + (xx - x) * p["mu_cr"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wck"])))
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wcr"])) * \
+        jnp.einsum("bsf,fd->bsd", kk, p["wcv"])
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["shift_cm"] = x[:, -1]
+    return out.astype(x.dtype), new_state
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int) -> Params:
+    H, K = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "wkv": jnp.zeros((batch, H, K, K), jnp.float32),
+        "shift_tm": jnp.zeros((batch, cfg.d_model), dtype_of(cfg)),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), dtype_of(cfg)),
+    }
+
+
+# ==========================================================================
+# Mamba (S6) — used by the Hymba hybrid block
+# ==========================================================================
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr = max(16, d // 16)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, (d, 2 * di), dt),
+        "conv_w": _conv_init(ks[1], cfg.ssm_conv, di, dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], di, (di, dtr + 2 * N), dt),
+        "dt_proj": dense_init(ks[3], dtr, (dtr, di), dt),
+        "dt_bias": jnp.full((di,), -4.0, jnp.float32),   # softplus -> small dt
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, (di, d), dt),
+    }
+
+
+def _conv_init(key, width, di, dt):
+    return (jax.random.normal(key, (width, di), jnp.float32) /
+            math.sqrt(width)).astype(dt)
+
+
+def mamba_axes(cfg: ModelConfig) -> Params:
+    return {
+        "in_proj": ("embed", "inner2"), "conv_w": (None, "inner"),
+        "conv_b": ("inner",), "x_proj": ("inner", None),
+        "dt_proj": (None, "inner"), "dt_bias": ("inner",),
+        "A_log": ("inner", None), "D_skip": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv via K shifted adds. x: (B,S,di), w: (K,di)."""
+    Kw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, :Kw - 1])
+    else:
+        pad = state.astype(x.dtype)                      # (B, Kw-1, di)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(Kw))
+    new_state = xp[:, -(Kw - 1):] if Kw > 1 else None
+    return out + b, new_state
+
+
+def mamba_scan(a, b, C, h0, chunk: int = 64):
+    """Chunked associative scan. a,b: (B,T,di,N); C: (B,T,N); h0: (B,di,N).
+
+    h_t = a_t * h_{t-1} + b_t ;  y_t = sum_N h_t * C_t
+    """
+    B, T, di, N = a.shape
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk -= 1
+    n = T // chunk
+    ac = a.reshape(B, n, chunk, di, N).transpose(1, 0, 2, 3, 4)
+    bc = b.reshape(B, n, chunk, di, N).transpose(1, 0, 2, 3, 4)
+    Cc = C.reshape(B, n, chunk, N).transpose(1, 0, 2, 3)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, bl * ar + br
+
+    def body(h, inp):
+        ab, bb, Cb = inp
+        acum, bcum = lax.associative_scan(combine, (ab, bb), axis=1)
+        hs = acum * h[:, None] + bcum                    # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, Cb)
+        return hs[:, -1], y
+
+    h, ys = lax.scan(body, h0, (ac, bc, Cc))
+    return ys.transpose(1, 0, 2, 3).reshape(B, T, di), h
+
+
+def mamba_block(p: Params, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Params] = None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """Selective SSM. x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    dtr = p["dt_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    proj = jnp.einsum("bsd,de->bse", xi, p["x_proj"])
+    dt_lo, Bm, Cm = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_lo, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"])                                   # (B,S,di)
+    A = -jnp.exp(p["A_log"])                              # (di,N)
+    a = jnp.exp(dt[..., None] * A[None, None])            # (B,S,di,N)
+    b = (dt * xi.astype(jnp.float32))[..., None] * \
+        Bm.astype(jnp.float32)[..., None, :]              # (B,S,di,N)
+
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((B, di, N), jnp.float32))
+    y, h = mamba_scan(a, b, Cm.astype(jnp.float32), h0)
+    y = y + p["D_skip"] * xi.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+
+    new_state = None
+    if state is not None:
+        new_state = {"ssm": h, "conv": new_conv}
+    return out.astype(x.dtype), new_state
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int) -> Params:
+    return {
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                          dtype_of(cfg)),
+    }

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (Optimizer, adamw, sgd_momentum,
+                                    clip_by_global_norm, chain, scale_by_schedule)
+from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
+                                   warmup_cosine, exponential_decay)
+
+__all__ = ["Optimizer", "adamw", "sgd_momentum", "clip_by_global_norm",
+           "chain", "scale_by_schedule", "constant", "cosine_decay",
+           "linear_warmup", "warmup_cosine", "exponential_decay"]

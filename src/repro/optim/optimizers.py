@@ -1,0 +1,122 @@
+"""Minimal functional optimizer library (no optax dependency).
+
+``Optimizer`` is an (init, update) pair over arbitrary pytrees:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+The paper trains IC with Adam (lr 1e-4, exp. weight decay 5e-4) and OD
+with SGD + momentum 0.9 (§IV) — both provided.  Optimizer state trees
+mirror the parameter tree, so FSDP sharding specs apply unchanged (the
+moments shard exactly like their parameters).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]   # (grads, state, params, step)
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates)
+
+
+def _to_f32(t):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+
+def adamw(lr: float | Schedule, *, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros)}
+
+    def update(grads, state, params, step):
+        g = _to_f32(grads)
+        m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_,
+                         state["m"], g)
+        v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_,
+                         state["v"], g)
+        t = step.astype(jnp.float32) + 1.0
+        mhat_scale = 1.0 / (1 - b1 ** t)
+        vhat_scale = 1.0 / (1 - b2 ** t)
+        lr_t = sched(step)
+
+        def upd(m_, v_, p_):
+            u = -(lr_t * (m_ * mhat_scale) /
+                  (jnp.sqrt(v_ * vhat_scale) + eps))
+            if weight_decay:
+                u = u - lr_t * weight_decay * p_.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr: float | Schedule, *, momentum: float = 0.9,
+                 weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        return {"mom": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        g = _to_f32(grads)
+        if weight_decay:
+            g = jax.tree.map(
+                lambda g_, p_: g_ + weight_decay * p_.astype(jnp.float32),
+                g, params)
+        mom = jax.tree.map(lambda m_, g_: momentum * m_ + g_,
+                           state["mom"], g)
+        lr_t = sched(step)
+        updates = jax.tree.map(lambda m_: -lr_t * m_, mom)
+        return updates, {"mom": mom}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Callable[[Any], Tuple[Any, jax.Array]]:
+    """Returns fn: grads -> (clipped grads, global_norm)."""
+    def clip(grads):
+        sq = jax.tree.reduce(
+            lambda acc, g: acc + jnp.sum(jnp.square(g.astype(jnp.float32))),
+            grads, jnp.zeros((), jnp.float32))
+        gnorm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+        return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+    return clip
+
+
+def scale_by_schedule(opt: Optimizer, sched: Schedule) -> Optimizer:
+    def update(grads, state, params, step):
+        upd, st = opt.update(grads, state, params, step)
+        s = sched(step)
+        return jax.tree.map(lambda u: u * s, upd), st
+    return Optimizer(opt.init, update)
+
+
+def chain(*fns):
+    """Compose gradient transforms (each: grads -> grads) before an optimizer."""
+    def apply(grads):
+        for f in fns:
+            grads = f(grads)
+        return grads
+    return apply

@@ -1,0 +1,40 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+    return f
+
+
+def cosine_decay(lr: float, decay_steps: int, final_frac: float = 0.1):
+    def f(step):
+        s = jnp.minimum(step.astype(jnp.float32), decay_steps)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * s / max(decay_steps, 1)))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, decay_steps: int,
+                  final_frac: float = 0.1):
+    wu = linear_warmup(lr, warmup_steps)
+    cd = cosine_decay(lr, decay_steps, final_frac)
+    def f(step):
+        return jnp.where(step < warmup_steps, wu(step),
+                         cd(step - warmup_steps))
+    return f
+
+
+def exponential_decay(lr: float, decay: float):
+    """Paper §IV: 'exponential decay of 5e-4'."""
+    def f(step):
+        return lr * jnp.exp(-decay * step.astype(jnp.float32))
+    return f

@@ -1,0 +1,3 @@
+from repro.train import losses, step
+
+__all__ = ["losses", "step"]

@@ -1,0 +1,33 @@
+"""Losses (fp32, sharded-vocab safe)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Mean token cross-entropy. logits (B,S,V) [vocab may be sharded on
+    'model' — logsumexp partitions cleanly], labels (B,S) int32.
+
+    Returns (loss, n_tokens)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        mask = (labels >= 0)
+    mask = mask.astype(jnp.float32)
+    n = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / n, n
+
+
+def z_loss(logits: jax.Array, coef: float = 1e-4) -> jax.Array:
+    """PaLM-style logit regularizer (keeps logsumexp near 0; stabilises
+    bf16 training at scale)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    return coef * jnp.mean(jnp.square(lse))

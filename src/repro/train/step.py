@@ -1,0 +1,227 @@
+"""Step factories: train / prefill / decode, with pjit shardings.
+
+``build_train_step`` / ``build_serve_steps`` return the pure step
+functions; ``shard_setup`` computes the full sharding plan (params, opt
+state, inputs, caches) for a mesh and wraps steps in ``jax.jit`` with
+in/out shardings + donation.  Dry-run, trainer and server all go through
+this one path, so what we lower in the dry-run is exactly what runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import ctx
+from repro.distributed import sharding as SH
+from repro.launch import specs as SPECS
+from repro.models import model as M
+from repro.models import serve as SV
+from repro.models.config import ModelConfig, ShapeCell
+from repro.optim import Optimizer, clip_by_global_norm
+from repro.train.losses import softmax_cross_entropy, z_loss
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# State
+# --------------------------------------------------------------------------
+
+def init_state(rng, cfg: ModelConfig, opt: Optimizer) -> Params:
+    params = M.init_params(rng, cfg)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_axes(cfg: ModelConfig, opt_state_like: Params) -> Params:
+    """Logical axes for a train state: moments shard like their params."""
+    pax = M.param_axes(cfg)
+    return {"params": pax, "opt": {k: pax for k in opt_state_like},
+            "step": ()}
+
+
+# --------------------------------------------------------------------------
+# Step builders (mesh-agnostic)
+# --------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, opt: Optimizer, *,
+                     aux_coef: float = 0.01, zloss_coef: float = 0.0,
+                     clip_norm: float = 1.0, moe_groups: int = 1,
+                     grad_accum: int = 1) -> Callable:
+    clip = clip_by_global_norm(clip_norm)
+
+    def loss_fn(params, batch):
+        out = M.forward(params, cfg, batch["tokens"],
+                        embeds=batch.get("embeds"),
+                        frames=batch.get("frames"),
+                        moe_groups=moe_groups)
+        logits = out.logits
+        if "embeds" in batch:               # VLM: loss on text suffix only
+            logits = logits[:, batch["embeds"].shape[1]:]
+        loss, n = softmax_cross_entropy(logits, batch["labels"])
+        total = loss + aux_coef * out.aux
+        if zloss_coef:
+            total = total + z_loss(logits, zloss_coef)
+        return total, (loss, out.aux)
+
+    def train_step(state, batch):
+        if grad_accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, -1) + x.shape[1:]), batch)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                (tot, (loss, aux)), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state["params"], mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + loss), aux
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state["params"])
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_fn, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss_sum / grad_accum
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            (tot, (loss, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"], batch)
+        grads, gnorm = clip(grads)
+        updates, opt_state = opt.update(grads, state["opt"],
+                                        state["params"], state["step"])
+        params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            state["params"], updates)
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm}
+        return new_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache, _ = SV.prefill(
+            params, cfg, batch["tokens"], cache=batch["cache"],
+            embeds=batch.get("embeds"), frames=batch.get("frames"))
+        return logits, cache
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, batch):
+        logits, cache = SV.decode_step(params, cfg, batch["tokens"],
+                                       cache=batch["cache"])
+        return logits, cache
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# Sharding plan + jit wiring
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardPlan:
+    mesh: Mesh
+    rules: Dict[str, Any]
+    param_shardings: Any
+    state_shardings: Any
+    input_shardings: Any
+    abstract_state: Any
+    abstract_inputs: Any
+    moe_groups: int
+
+    def sharder(self):
+        ma = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+        def fn(x, kind):
+            if x.ndim < 2:
+                return x
+            ax = SH._resolve_axis(self.rules["batch"], x.shape[0], ma)
+            spec = P(ax) if ax is not None else P()
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, spec))
+        return ctx.activation_sharder(fn)
+
+
+def make_plan(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+              opt: Optional[Optimizer] = None, rules=None) -> ShardPlan:
+    rules = dict(rules or SH.DEFAULT_RULES)
+    abstract_inputs = SPECS.input_specs(cfg, cell)
+    in_sh = SPECS.input_shardings(cfg, cell, mesh, rules)
+
+    rng = jax.random.PRNGKey(0)
+    if cell.kind == "train":
+        assert opt is not None
+        abstract_state = jax.eval_shape(
+            lambda: init_state(rng, cfg, opt))
+        pax = M.param_axes(cfg)
+        sax = {"params": pax,
+               "opt": {k: pax for k in abstract_state["opt"]},
+               "step": ()}
+    else:
+        abstract_state = jax.eval_shape(lambda: M.init_params(rng, cfg))
+        sax = M.param_axes(cfg)
+    st_sh = SH.tree_shardings(sax, abstract_state, mesh, rules)
+    p_sh = st_sh["params"] if cell.kind == "train" else st_sh
+
+    # MoE routing groups align with however the batch is actually sharded
+    # (DP axes under the default rules; all axes under the FSDP-only
+    # override), so sort/dispatch stays shard-local.
+    ma = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bax = SH._resolve_axis(rules["batch"], cell.global_batch, ma)
+    if bax is None:
+        moe_groups = 1
+    else:
+        bax = (bax,) if isinstance(bax, str) else bax
+        moe_groups = 1
+        for a in bax:
+            moe_groups *= ma[a]
+
+    return ShardPlan(mesh=mesh, rules=rules, param_shardings=p_sh,
+                     state_shardings=st_sh, input_shardings=in_sh,
+                     abstract_state=abstract_state,
+                     abstract_inputs=abstract_inputs, moe_groups=moe_groups)
+
+
+def jit_step_for_cell(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                      opt: Optional[Optimizer] = None, rules=None,
+                      **step_kw):
+    """Returns (jitted step, plan).  The caller lowers with
+    plan.abstract_state / plan.abstract_inputs."""
+    plan = make_plan(cfg, cell, mesh, opt, rules)
+    if cell.kind == "train":
+        fn = build_train_step(cfg, opt, moe_groups=plan.moe_groups, **step_kw)
+        metrics_sh = NamedSharding(mesh, P())
+        jitted = jax.jit(fn,
+                         in_shardings=(plan.state_shardings,
+                                       plan.input_shardings),
+                         out_shardings=(plan.state_shardings, metrics_sh),
+                         donate_argnums=(0,))
+    elif cell.kind == "prefill":
+        fn = build_prefill_step(cfg)
+        out_sh = (NamedSharding(mesh, SH.spec_for(
+            ("batch", None), (cell.global_batch, cfg.vocab_size), mesh,
+            plan.rules)), plan.input_shardings["cache"])
+        jitted = jax.jit(fn,
+                         in_shardings=(plan.param_shardings,
+                                       plan.input_shardings),
+                         out_shardings=out_sh,
+                         donate_argnums=(1,))
+    else:
+        fn = build_decode_step(cfg)
+        out_sh = (NamedSharding(mesh, SH.spec_for(
+            ("batch", None), (cell.global_batch, cfg.vocab_size), mesh,
+            plan.rules)), plan.input_shardings["cache"])
+        jitted = jax.jit(fn,
+                         in_shardings=(plan.param_shardings,
+                                       plan.input_shardings),
+                         out_shardings=out_sh,
+                         donate_argnums=(1,))
+    return jitted, plan

@@ -1,0 +1,46 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run sets its own flags
+# in a separate process).  Keep test-time compilation light.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+from repro.models.config import BlockKind, ModelConfig
+
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=128, dtype="float32", max_seq_len=256,
+            attn_impl="xla_naive", scan_layers=True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_dense():
+    return ModelConfig(name="dense", **BASE)
+
+
+@pytest.fixture(scope="session")
+def tiny_moe():
+    return ModelConfig(name="moe", block=BlockKind.MOE, n_experts=4,
+                       experts_per_token=2, capacity_factor=64.0, **BASE)
+
+
+@pytest.fixture(scope="session")
+def tiny_rwkv():
+    return ModelConfig(name="rwkv", block=BlockKind.RWKV6, rwkv_head_dim=16,
+                       **BASE)
+
+
+@pytest.fixture(scope="session")
+def tiny_hybrid():
+    return ModelConfig(name="hybrid", block=BlockKind.HYBRID, ssm_state=8,
+                       **BASE)

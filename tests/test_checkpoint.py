@@ -1,0 +1,87 @@
+"""Checkpoint manager: atomic save/restore, retention, preemption."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as CKPT
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "b": jnp.arange(4.0)},
+            "step": jnp.int32(seed)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    st = _state(3)
+    CKPT.save(str(tmp_path), st, step=3)
+    tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    restored, step = CKPT.restore(str(tmp_path), tmpl)
+    assert step == 3
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 st, restored)
+
+
+def test_latest_and_retention(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        CKPT.save(str(tmp_path), _state(s), step=s, keep_n=2)
+    assert CKPT.latest_step(str(tmp_path)) == 5
+    assert CKPT.all_steps(str(tmp_path)) == [4, 5]
+
+
+def test_atomicity_no_partial_dirs(tmp_path):
+    CKPT.save(str(tmp_path), _state(), step=7)
+    entries = [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+    assert entries == []
+
+
+def test_async_save(tmp_path):
+    t = CKPT.save_async(str(tmp_path), _state(9), step=9)
+    t.join()
+    assert CKPT.latest_step(str(tmp_path)) == 9
+
+
+def test_restore_mismatch_raises(tmp_path):
+    CKPT.save(str(tmp_path), _state(), step=1)
+    bad = {"params": {"w": jnp.zeros((8, 4))}}    # missing leaf
+    with pytest.raises(AssertionError):
+        CKPT.restore(str(tmp_path), bad)
+
+
+def test_manager_policy_and_preemption(tmp_path):
+    mgr = CKPT.CheckpointManager(str(tmp_path), every=5, keep_n=2,
+                                 async_save=False)
+    st = _state()
+    for step in range(12):
+        mgr.step(st, step)
+    mgr.wait()
+    assert CKPT.latest_step(str(tmp_path)) == 10
+    # simulate preemption: the next step boundary saves synchronously
+    mgr.preempt.requested = True
+    mgr.step(st, 12)
+    assert CKPT.latest_step(str(tmp_path)) == 12
+
+
+def test_restore_or_init(tmp_path):
+    mgr = CKPT.CheckpointManager(str(tmp_path), every=1, async_save=False)
+    st, step = mgr.restore_or_init(lambda: _state(5))
+    assert step == -1                     # fresh init
+    CKPT.save(str(tmp_path), st, step=4)
+    st2, step2 = mgr.restore_or_init(lambda: _state(5))
+    assert step2 == 4
+
+
+def test_resharding_restore(tmp_path):
+    """Checkpoint written unsharded restores onto an explicit sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    st = _state(1)
+    CKPT.save(str(tmp_path), st, step=1)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), st)
+    tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    restored, _ = CKPT.restore(str(tmp_path), tmpl, shardings=sh)
+    assert restored["params"]["w"].sharding == NamedSharding(mesh, P())

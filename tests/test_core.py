@@ -1,0 +1,204 @@
+"""Paper-core tests: CAM (Eq.1), filter heads, losses, queries, cascade."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cam as CAM
+from repro.core import cascade as CS
+from repro.core import filters as F
+from repro.core import query as Q
+from repro.models.config import BranchSpec
+
+
+SPEC = BranchSpec(layer=2, grid=8, n_classes=4, head_dim=32)
+
+
+def test_spatialize_roundtrip():
+    tap = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 16))
+    g = CAM.spatialize(tap, 8)
+    assert g.shape == (2, 8, 8, 16)
+    np.testing.assert_allclose(g.reshape(2, 64, 16), tap)   # pure reshape
+
+
+def test_spatialize_pooling_mean_preserved():
+    tap = jax.random.normal(jax.random.PRNGKey(0), (1, 128, 4))
+    g = CAM.spatialize(tap, 8)      # 128 -> 64 cells, segment means
+    np.testing.assert_allclose(g.mean((1, 2)), tap.mean(1), atol=1e-5)
+
+
+def test_cam_is_eq1():
+    """M_c(i,j) = sum_k w_k^c a_k(i,j), exactly."""
+    feat = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 4, 8))
+    w = jax.random.normal(jax.random.PRNGKey(2), (8, 3))
+    m = CAM.class_activation_map(feat, w)
+    want = np.einsum("bijd,dc->bijc", np.asarray(feat), np.asarray(w))
+    np.testing.assert_allclose(m, want, atol=1e-5)
+
+
+def test_gap_fc_commutes_with_cam_mean():
+    """counts head == mean of CAM + bias (linearity the kernel exploits)."""
+    feat = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 4, 8))
+    w = jax.random.normal(jax.random.PRNGKey(2), (8, 3))
+    b = jnp.ones((3,))
+    cam = CAM.class_activation_map(feat, w)
+    c1 = jax.nn.relu(feat.mean((1, 2)) @ w + b)
+    c2 = jax.nn.relu(cam.mean((1, 2)) + b)
+    np.testing.assert_allclose(c1, c2, atol=1e-5)
+
+
+def test_dilate_manhattan():
+    occ = jnp.zeros((1, 5, 5, 1), bool).at[0, 2, 2, 0].set(True)
+    d1 = CAM.dilate_manhattan(occ, 1)[0, :, :, 0]
+    assert bool(d1[2, 1]) and bool(d1[1, 2]) and bool(d1[2, 3]) and bool(d1[3, 2])
+    assert not bool(d1[1, 1])       # diagonal is Manhattan distance 2
+    d2 = CAM.dilate_manhattan(occ, 2)[0, :, :, 0]
+    assert bool(d2[1, 1]) and bool(d2[0, 2]) and not bool(d2[0, 0])
+
+
+@pytest.mark.parametrize("kind", ["ic", "od", "cof"])
+def test_heads_shapes_and_grads(kind):
+    spec = dataclasses.replace(SPEC, kind=kind)
+    p = F.branch_init(jax.random.PRNGKey(0), spec, 48)
+    tap = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 48))
+    out = F.branch_apply(p, tap, spec)
+    assert out.counts.shape == (4, 4)
+    if kind != "cof":
+        assert out.grid.shape == (4, 8, 8, 4)
+
+    ct = jnp.ones((4, 4))
+    gt = jnp.zeros((4, 8, 8, 4))
+    if kind == "ic":
+        lf = lambda pp: F.ic_loss(F.branch_apply(pp, tap, spec), ct, gt,
+                                  jnp.ones(4) / 4)
+    elif kind == "od":
+        lf = lambda pp: F.od_loss(F.branch_apply(pp, tap, spec), ct, gt)
+    else:
+        lf = lambda pp: F.cof_loss(F.branch_apply(pp, tap, spec), ct)
+    g = jax.grad(lf)(p)
+    tot = jax.tree.reduce(lambda a, b: a + jnp.sum(jnp.abs(b)), g, 0.0)
+    assert bool(jnp.isfinite(tot)) and float(tot) > 0
+
+
+def test_ic_kernel_path_matches():
+    p = F.branch_init(jax.random.PRNGKey(0), SPEC, 48)
+    tap = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 48))
+    o1 = F.ic_apply(p, tap, SPEC, use_kernel=False)
+    o2 = F.ic_apply(p, tap, SPEC, use_kernel=True)
+    np.testing.assert_allclose(o1.counts, o2.counts, atol=1e-3)
+    np.testing.assert_allclose(o1.grid, o2.grid, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Queries
+# ---------------------------------------------------------------------------
+
+def _perfect_outputs(objs, n_classes=4, grid=8):
+    occ = Q.objects_to_grid(np.asarray(objs).reshape(-1, 3), n_classes, grid)
+    counts = np.zeros((1, n_classes), np.float32)
+    for c, _, _ in objs:
+        counts[0, c] += 1
+    return F.FilterOutputs(counts=jnp.array(counts),
+                           grid=jnp.where(jnp.array(occ)[None], 10.0, -10.0))
+
+
+QUERIES = [
+    Q.Count(Q.Op.EQ, 2),
+    Q.ClassCount(0, Q.Op.GE, 1),
+    Q.ClassCount(1, Q.Op.EQ, 1),
+    Q.Spatial(0, Q.Rel.LEFT, 1),
+    Q.Spatial(1, Q.Rel.ABOVE, 0),
+    Q.Region(0, (0, 0, 4, 4)),
+    Q.And((Q.ClassCount(0, Q.Op.EQ, 1), Q.Spatial(0, Q.Rel.RIGHT, 1))),
+    Q.Or((Q.Count(Q.Op.GE, 5), Q.Region(1, (4, 4, 8, 8)))),
+    Q.Not(Q.Spatial(0, Q.Rel.BELOW, 1)),
+]
+
+OBJ_SETS = [
+    [(0, 1, 1), (1, 2, 5)],
+    [(0, 6, 6), (1, 0, 0)],
+    [(0, 3, 3)],
+    [(1, 4, 4), (1, 5, 5), (0, 0, 7)],
+    [],
+]
+
+
+@pytest.mark.parametrize("qi", range(len(QUERIES)))
+@pytest.mark.parametrize("oi", range(len(OBJ_SETS)))
+def test_filter_eval_matches_exact_on_perfect_filters(qi, oi):
+    """With perfect filter outputs, approximate eval == exact semantics."""
+    q, objs = QUERIES[qi], OBJ_SETS[oi]
+    fo = _perfect_outputs(objs) if objs else F.FilterOutputs(
+        counts=jnp.zeros((1, 4)), grid=jnp.full((1, 8, 8, 4), -10.0))
+    approx = bool(Q.eval_filters(q, fo)[0])
+    exact = Q.eval_objects(q, objs, 4, 8)
+    assert approx == exact, (q, objs)
+
+
+def test_spatial_relations_semantics():
+    occ_a = jnp.zeros((1, 4, 4), bool).at[0, 1, 0].set(True)
+    occ_b = jnp.zeros((1, 4, 4), bool).at[0, 2, 3].set(True)
+    assert bool(Q.spatial_relation(occ_a, occ_b, Q.Rel.LEFT)[0])
+    assert not bool(Q.spatial_relation(occ_a, occ_b, Q.Rel.RIGHT)[0])
+    assert bool(Q.spatial_relation(occ_a, occ_b, Q.Rel.ABOVE)[0])
+    assert bool(Q.spatial_relation(occ_b, occ_a, Q.Rel.BELOW)[0])
+    empty = jnp.zeros((1, 4, 4), bool)
+    assert not bool(Q.spatial_relation(empty, occ_b, Q.Rel.LEFT)[0])
+
+
+# ---------------------------------------------------------------------------
+# Cascade
+# ---------------------------------------------------------------------------
+
+def test_cascade_oracle_subset_and_stats():
+    """Frames the cascade answers True must be exactly the oracle-true
+    frames among filter survivors; with tolerant filters, recall is 1."""
+    rng = np.random.default_rng(0)
+    n_classes, grid, B = 4, 8, 64
+    frames = []
+    for _ in range(B):
+        n = rng.integers(0, 4)
+        frames.append([(int(rng.integers(0, n_classes)),
+                        int(rng.integers(0, grid)),
+                        int(rng.integers(0, grid))) for _ in range(n)])
+
+    query = Q.And((Q.ClassCount(0, Q.Op.GE, 1),
+                   Q.ClassCount(1, Q.Op.GE, 1)))
+    casc = CS.FilterCascade(query)
+
+    def filter_fn(batch):
+        # perfect filters built from ground truth (accuracy ceiling)
+        counts = np.zeros((B, n_classes), np.float32)
+        occ = np.zeros((B, grid, grid, n_classes), np.float32)
+        for i, objs in enumerate(frames):
+            for c, r, cc in objs:
+                counts[i, c] += 1
+                occ[i, r, cc, c] = 1
+        return F.FilterOutputs(counts=jnp.array(counts),
+                               grid=jnp.where(jnp.array(occ) > 0, 10., -10.))
+
+    oracle_calls = []
+
+    def oracle_fn(batch, idx):
+        oracle_calls.append(len(idx))
+        return [frames[j] for j in idx]
+
+    ex = CS.CascadeExecutor(casc, filter_fn, oracle_fn, n_classes, grid)
+    res = ex.run_batch(jnp.zeros((B, 1)))
+
+    truth = np.array([Q.eval_objects(query, o, n_classes, grid)
+                      for o in frames])
+    np.testing.assert_array_equal(res.answers, truth)     # 100% accuracy
+    assert ex.stats.oracle_calls <= B                      # skipped frames
+    assert ex.stats.oracle_calls == int(ex.stats.filter_pass)
+    assert ex.stats.speedup_vs_full(200.0, 1.5) > 1.0
+
+
+def test_cascade_stage_ordering():
+    q = Q.And((Q.Spatial(0, Q.Rel.LEFT, 1), Q.Count(Q.Op.EQ, 2)))
+    casc = CS.FilterCascade(q)
+    # count filters (cost 0) ordered before location filters (cost 1)
+    assert isinstance(casc.stages[0], Q.Count)
+    assert isinstance(casc.stages[1], Q.Spatial)

@@ -1,0 +1,79 @@
+"""Synthetic streams, windows, straggler mitigation."""
+import numpy as np
+import pytest
+
+from repro.core.streaming import (FrameSampler, HoppingWindow,
+                                  StragglerPolicy, StreamExecutor)
+from repro.data.synthetic import (PRESETS, SceneConfig, VideoStream,
+                                  collect, class_weights)
+
+
+def test_stream_deterministic():
+    a = collect(VideoStream(PRESETS["jackson-like"]), 50)
+    b = collect(VideoStream(PRESETS["jackson-like"]), 50)
+    np.testing.assert_array_equal(a["counts"], b["counts"])
+    np.testing.assert_allclose(a["embeds"], b["embeds"])
+
+
+def test_stream_ground_truth_consistent():
+    data = collect(VideoStream(PRESETS["detrac-like"]), 100)
+    for i in range(100):
+        objs = data["objects"][i]
+        counts = np.bincount(objs[:, 0], minlength=3) if len(objs) else \
+            np.zeros(3, int)
+        np.testing.assert_array_equal(counts, data["counts"][i].astype(int))
+        occ = data["occupancy"][i]
+        for c, r, cc in objs:
+            assert occ[r, cc, c]
+
+
+def test_stream_statistics_match_table2():
+    """Objects/frame mean tracks the Table II target (±40%)."""
+    for name, cfg in PRESETS.items():
+        data = collect(VideoStream(cfg), 600)
+        m = data["counts"].sum(-1).mean()
+        assert 0.6 * cfg.mean_objects <= m <= 1.4 * cfg.mean_objects, \
+            (name, m, cfg.mean_objects)
+
+
+def test_class_weights_eq2():
+    counts = np.array([[1, 0], [2, 1], [0, 0], [3, 0]], np.float32)
+    w = class_weights(counts)
+    np.testing.assert_allclose(w.sum(), 1.0, atol=1e-6)
+    assert w[0] > w[1]       # class 0 present in more frames
+
+
+def test_hopping_window():
+    w = HoppingWindow(size=100, advance=50)
+    wins = list(w.windows(260))
+    assert wins == [(0, 100), (50, 150), (100, 200), (150, 250)]
+    w2 = HoppingWindow(size=5000, advance=5000)     # the paper's query
+    assert list(w2.windows(10000)) == [(0, 5000), (5000, 10000)]
+
+
+def test_frame_sampler_uniform_no_replacement():
+    s = FrameSampler(seed=1)
+    idx = s.sample(100, 200, 50)
+    assert len(set(idx.tolist())) == 50
+    assert idx.min() >= 100 and idx.max() < 200
+
+
+def test_straggler_drops_when_slow():
+    policy = StragglerPolicy(fps=1000.0, slack=1.0)
+
+    def slow_process(idx):
+        import time
+        time.sleep(0.02)        # 20ms per 8-frame batch vs 8ms budget
+
+    ex = StreamExecutor(slow_process, batch=8, policy=policy)
+    stats = ex.run(400)
+    assert stats.frames_dropped > 0
+    assert stats.frames_processed + stats.frames_dropped == stats.frames_seen
+
+
+def test_no_drops_when_fast():
+    policy = StragglerPolicy(fps=100.0, slack=1.0)
+    ex = StreamExecutor(lambda idx: None, batch=8, policy=policy)
+    stats = ex.run(200)
+    assert stats.frames_dropped == 0
+    assert stats.frames_processed == 200

@@ -1,0 +1,129 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+ATTN_SHAPES = [
+    # (B, Sq, Sk, H, KV, hd)
+    (1, 128, 128, 4, 4, 32),
+    (2, 256, 256, 8, 2, 64),
+    (1, 512, 512, 4, 1, 128),
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(shape, dtype, causal):
+    B, Sq, Sk, H, KV, hd = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, Sq, H, hd), dtype)
+    k = _rand(ks[1], (B, Sk, KV, hd), dtype)
+    v = _rand(ks[2], (B, Sk, KV, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    atol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=atol)
+
+
+@pytest.mark.parametrize("sw", [32, 128])
+def test_flash_attention_sliding(sw):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (1, 256, 4, 32), jnp.float32)
+    k = _rand(ks[1], (1, 256, 2, 32), jnp.float32)
+    v = _rand(ks[2], (1, 256, 2, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, sliding_window=sw)
+    want = ref.flash_attention_ref(q, k, v, causal=True, sliding_window=sw)
+    np.testing.assert_allclose(out, want, atol=1e-4)
+
+
+@pytest.mark.parametrize("S,klen", [(256, 256), (256, 100), (512, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(S, klen, dtype):
+    B, H, KV, hd = 2, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (B, H, hd), dtype)
+    k = _rand(ks[1], (B, S, KV, hd), dtype)
+    v = _rand(ks[2], (B, S, KV, hd), dtype)
+    out = ops.decode_attention(q, k, v, jnp.int32(klen))
+    want = ref.decode_attention_ref(q, k, v, jnp.int32(klen))
+    atol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=atol)
+
+
+@pytest.mark.parametrize("g,D,C", [(8, 256, 8), (16, 512, 16), (8, 1024, 128)])
+def test_cam_head_sweep(g, D, C):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    feat = _rand(ks[0], (2, g, g, D), jnp.float32)
+    w = _rand(ks[1], (D, C), jnp.float32) * 0.05
+    b = _rand(ks[2], (C,), jnp.float32) * 0.1
+    c1, m1 = ops.cam_head(feat, w, b)
+    c2, m2 = ref.cam_head_ref(feat, w, b)
+    np.testing.assert_allclose(c1, c2, atol=1e-3)
+    np.testing.assert_allclose(m1, m2, atol=1e-3)
+
+
+@pytest.mark.parametrize("g,C", [(8, 4), (16, 8), (56, 8)])
+def test_spatial_stats_sweep(g, C):
+    gl = jax.random.normal(jax.random.PRNGKey(4), (3, g, g, C)) * 3
+    s1 = ops.spatial_stats(gl)
+    s2 = ref.spatial_stats_ref(gl)
+    np.testing.assert_allclose(s1, s2)
+
+
+def test_spatial_stats_empty_class():
+    gl = jnp.full((1, 8, 8, 2), -50.0)  # below tau -> empty everywhere
+    s = ops.spatial_stats(gl)
+    np.testing.assert_allclose(s[0, :, 0], 8.0)   # min_row = g
+    np.testing.assert_allclose(s[0, :, 1], -1.0)  # max_row = -1
+    np.testing.assert_allclose(s[0, :, 4], 0.0)   # count = 0
+
+
+@pytest.mark.parametrize("T,K", [(64, 16), (128, 64), (96, 32)])
+def test_rwkv6_scan_sweep(T, K):
+    B, H = 2, 3
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    r = _rand(ks[0], (B, H, T, K), jnp.float32)
+    k = _rand(ks[1], (B, H, T, K), jnp.float32)
+    v = _rand(ks[2], (B, H, T, K), jnp.float32)
+    lw = jnp.clip(-jnp.exp(_rand(ks[3], (B, H, T, K), jnp.float32) * 0.3),
+                  -2.0, -1e-6)
+    u = _rand(ks[4], (H, K), jnp.float32) * 0.1
+    s0 = _rand(ks[5], (B, H, K, K), jnp.float32) * 0.1
+    o1, st1 = ops.rwkv6_scan(r, k, v, lw, u, s0)
+    o2, st2 = ref.rwkv6_scan_ref(r, k, v, lw, u, s0)
+    np.testing.assert_allclose(o1, o2, atol=5e-3)
+    np.testing.assert_allclose(st1, st2, atol=5e-3)
+
+
+def test_rwkv6_state_continuation():
+    """Two half-sequences with carried state == one full sequence."""
+    B, H, T, K = 1, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    r = _rand(ks[0], (B, H, T, K), jnp.float32)
+    k = _rand(ks[1], (B, H, T, K), jnp.float32)
+    v = _rand(ks[2], (B, H, T, K), jnp.float32)
+    lw = jnp.clip(-jnp.exp(_rand(ks[3], (B, H, T, K), jnp.float32) * 0.3),
+                  -2.0, -1e-6)
+    u = jnp.zeros((H, K))
+    s0 = jnp.zeros((B, H, K, K))
+    o_full, st_full = ops.rwkv6_scan(r, k, v, lw, u, s0)
+    h = T // 2
+    o1, st1 = ops.rwkv6_scan(r[:, :, :h], k[:, :, :h], v[:, :, :h],
+                             lw[:, :, :h], u, s0)
+    o2, st2 = ops.rwkv6_scan(r[:, :, h:], k[:, :, h:], v[:, :, h:],
+                             lw[:, :, h:], u, st1)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 2), o_full,
+                               atol=5e-3)
+    np.testing.assert_allclose(st2, st_full, atol=5e-3)

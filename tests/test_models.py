@@ -1,0 +1,124 @@
+"""Model-level behaviour: forward, gradients, decode==full equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import BlockKind, ModelConfig
+from repro.models import model as M, serve as SV
+
+BASE = dict(n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=128, dtype="float32", max_seq_len=128,
+            attn_impl="xla_naive", scan_layers=True)
+
+CASES = {
+    "dense": (ModelConfig(name="dense", **BASE), {}),
+    "dense-bias": (ModelConfig(name="db", qkv_bias=True, glu=False, **BASE), {}),
+    "moe": (ModelConfig(name="moe", block=BlockKind.MOE, n_experts=4,
+                        experts_per_token=2, capacity_factor=64.0, **BASE), {}),
+    "rwkv6": (ModelConfig(name="rwkv", block=BlockKind.RWKV6,
+                          rwkv_head_dim=16, **BASE), {}),
+    "hybrid": (ModelConfig(name="hy", block=BlockKind.HYBRID, ssm_state=8,
+                           **BASE), {}),
+    "encdec": (ModelConfig(name="wh", enc_dec=True, n_enc_layers=2,
+                           use_rope=False, learned_pos=True, layernorm=True,
+                           glu=False, enc_len=24, **BASE), {"frames": (2, 24, 64)}),
+    "vlm": (ModelConfig(name="vlm", vlm_prefix=8, scale_embed=True,
+                        **{**BASE, "n_kv_heads": 1}), {"embeds": (2, 8, 64)}),
+    "sliding": (ModelConfig(name="swa", sliding_window=24, **BASE), {}),
+}
+
+
+def _extras(extra_shapes):
+    return {k: jax.random.normal(jax.random.PRNGKey(9), shp)
+            for k, shp in extra_shapes.items()}
+
+
+@pytest.mark.parametrize("name", list(CASES))
+def test_forward_shapes_and_finite(name, rng):
+    cfg, extra_shapes = CASES[name]
+    p = M.init_params(rng, cfg)
+    toks = jax.random.randint(rng, (2, 32), 0, cfg.vocab_size)
+    out = M.forward(p, cfg, toks, tap_layer=1, **_extras(extra_shapes))
+    assert out.logits.shape[-1] == cfg.vocab_size
+    assert bool(jnp.isfinite(out.logits).all())
+    assert out.tap is not None and out.tap.shape[-1] == cfg.d_model
+
+
+@pytest.mark.parametrize("name", list(CASES))
+def test_grads_finite(name, rng):
+    cfg, extra_shapes = CASES[name]
+    p = M.init_params(rng, cfg)
+    toks = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+    ex = _extras(extra_shapes)
+
+    def loss(pp):
+        o = M.forward(pp, cfg, toks, **ex)
+        return jnp.mean(o.logits.astype(jnp.float32) ** 2) + o.aux
+
+    g = jax.grad(loss)(p)
+    total = jax.tree.reduce(lambda a, b: a + jnp.sum(jnp.abs(b)), g, 0.0)
+    assert bool(jnp.isfinite(total)) and float(total) > 0
+
+
+@pytest.mark.parametrize("name", list(CASES))
+def test_decode_matches_full_forward(name, rng):
+    cfg, extra_shapes = CASES[name]
+    p = M.init_params(rng, cfg)
+    B = 2
+    toks = jax.random.randint(rng, (B, 24), 0, cfg.vocab_size)
+    ex = _extras(extra_shapes)
+    cache = SV.init_cache(cfg, B, 64)
+    lg, cache, _ = SV.prefill(p, cfg, toks[:, :16], cache=cache, **ex)
+    for t in range(16, 20):
+        lg, cache = SV.decode_step(p, cfg, toks[:, t:t + 1], cache=cache)
+    full = M.forward(p, cfg, toks[:, :21], **ex)
+    off = ex["embeds"].shape[1] if "embeds" in ex else 0
+    ref = full.logits[:, 19 + off]
+    np.testing.assert_allclose(lg, ref, atol=2e-2)
+
+
+def test_tap_split_equals_whole(rng, tiny_dense):
+    """Running layers [0,k) then [k,L) == running [0,L)."""
+    p = M.init_params(rng, tiny_dense)
+    toks = jax.random.randint(rng, (2, 16), 0, 128)
+    o1 = M.forward(p, tiny_dense, toks)
+    o2 = M.forward(p, tiny_dense, toks, tap_layer=1)
+    np.testing.assert_allclose(o1.logits, o2.logits, atol=1e-5)
+
+
+def test_stop_at_tap_cheaper(rng, tiny_dense):
+    """stop_at_tap must not compute the full trunk (paper's filter path)."""
+    p = M.init_params(rng, tiny_dense)
+    toks = jax.random.randint(rng, (2, 16), 0, 128)
+    out = M.forward(p, tiny_dense, toks, tap_layer=1, stop_at_tap=True)
+    assert out.logits is None and out.tap is not None
+
+
+def test_scan_vs_loop_same(rng):
+    import dataclasses
+    cfg = CASES["dense"][0]
+    p = M.init_params(rng, cfg)
+    toks = jax.random.randint(rng, (2, 16), 0, 128)
+    o1 = M.forward(p, cfg, toks).logits
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    o2 = M.forward(p, cfg2, toks).logits
+    np.testing.assert_allclose(o1, o2, atol=1e-5)
+
+
+def test_remat_preserves_values_and_grads(rng):
+    import dataclasses
+    cfg = CASES["dense"][0]
+    p = M.init_params(rng, cfg)
+    toks = jax.random.randint(rng, (2, 16), 0, 128)
+
+    def loss(pp, c):
+        return jnp.mean(M.forward(pp, c, toks).logits.astype(jnp.float32) ** 2)
+
+    for mode in ("full", "selective"):
+        cfg2 = dataclasses.replace(cfg, remat=mode)
+        np.testing.assert_allclose(loss(p, cfg), loss(p, cfg2), rtol=1e-5)
+        g1 = jax.grad(lambda pp: loss(pp, cfg))(p)
+        g2 = jax.grad(lambda pp: loss(pp, cfg2))(p)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-4),
+                     g1, g2)

@@ -1,0 +1,72 @@
+"""Optimizer + schedule behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adamw, sgd_momentum, clip_by_global_norm,
+                         warmup_cosine, exponential_decay, constant)
+from repro.optim.optimizers import apply_updates
+
+
+def _converges(opt, steps=300, tol=1e-2):
+    target = jnp.array([3.0, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    for i in range(steps):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        upd, state = opt.update(g, state, params, jnp.int32(i))
+        params = apply_updates(params, upd)
+    return float(jnp.max(jnp.abs(params["w"] - target))) < tol
+
+
+def test_adamw_converges():
+    assert _converges(adamw(5e-2))
+
+
+def test_sgd_momentum_converges():
+    assert _converges(sgd_momentum(5e-2, momentum=0.9))
+
+
+def test_weight_decay_shrinks():
+    opt = adamw(1e-2, weight_decay=0.5)
+    params = {"w": jnp.ones(4) * 10}
+    state = opt.init(params)
+    zeros = {"w": jnp.zeros(4)}
+    for i in range(50):
+        upd, state = opt.update(zeros, state, params, jnp.int32(i))
+        params = apply_updates(params, upd)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 10.0
+
+
+def test_clip_by_global_norm():
+    clip = clip_by_global_norm(1.0)
+    g = {"a": jnp.ones(4) * 10, "b": jnp.ones(2) * 10}
+    clipped, norm = clip(g)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(total, 1.0, rtol=1e-5)
+    assert norm > 1.0
+    small = {"a": jnp.ones(4) * 0.01, "b": jnp.ones(2) * 0.01}
+    unclipped, _ = clip(small)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b),
+                 small, unclipped)
+
+
+def test_schedules():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.int32(0))) < 0.2
+    np.testing.assert_allclose(float(s(jnp.int32(9))), 1.0, rtol=0.01)
+    assert float(s(jnp.int32(110))) <= 0.11
+    e = exponential_decay(1e-4, 5e-4)           # paper §IV settings
+    np.testing.assert_allclose(float(e(jnp.int32(0))), 1e-4, rtol=1e-5)
+    assert float(e(jnp.int32(1000))) < 0.99e-4
+    c = constant(3e-4)
+    np.testing.assert_allclose(float(c(jnp.int32(7))), 3e-4, rtol=1e-6)
+
+
+def test_moments_shard_like_params():
+    """Optimizer state has the same tree structure as params (FSDP reuse)."""
+    params = {"layers": {"w": jnp.zeros((4, 8)), "b": jnp.zeros(8)}}
+    st = adamw(1e-3).init(params)
+    assert jax.tree_util.tree_structure(st["m"]) == \
+        jax.tree_util.tree_structure(params)
+    assert st["m"]["layers"]["w"].shape == (4, 8)

@@ -1,0 +1,148 @@
+"""Training loop + serving integration on the host mesh."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M, serve as SV
+from repro.models.config import ModelConfig, ShapeCell
+from repro.optim import adamw
+from repro.train import step as TS
+
+
+def _batch(cfg, B, S, key):
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def test_loss_decreases(tiny_dense):
+    rng = jax.random.PRNGKey(0)
+    opt = adamw(3e-3)
+    state = TS.init_state(rng, tiny_dense, opt)
+    step_fn = jax.jit(TS.build_train_step(tiny_dense, opt))
+    batch = _batch(tiny_dense, 4, 32, rng)       # memorise one batch
+    losses = []
+    for _ in range(30):
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_grad_accum_matches_large_batch(tiny_dense):
+    """Accumulated micro-grads == full-batch grads (linear optimizer:
+    Adam's rsqrt at step 1 amplifies fp32 sum-order noise ~1e-7 into
+    update-scale differences, so SGD is the right equivalence probe)."""
+    from repro.optim import sgd_momentum
+    rng = jax.random.PRNGKey(1)
+    opt = sgd_momentum(1e-2, momentum=0.0)
+    state0 = TS.init_state(rng, tiny_dense, opt)
+    batch = _batch(tiny_dense, 8, 16, rng)
+
+    s1, m1 = jax.jit(TS.build_train_step(tiny_dense, opt))(state0, batch)
+    s2, m2 = jax.jit(TS.build_train_step(tiny_dense, opt,
+                                         grad_accum=4))(state0, batch)
+    np.testing.assert_allclose(m1["loss"], m2["loss"], rtol=1e-4)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-5),
+                 s1["params"], s2["params"])
+
+
+def test_jit_step_for_cell_runs_real_data(tiny_dense):
+    """The dry-run path also *executes* with real arrays on the host mesh."""
+    mesh = make_host_mesh()
+    cell = ShapeCell("t", 32, 4, "train")
+    opt = adamw(1e-3)
+    with mesh:
+        jitted, plan = TS.jit_step_for_cell(tiny_dense, cell, mesh, opt)
+        rng = jax.random.PRNGKey(0)
+        state = TS.init_state(rng, tiny_dense, opt)
+        batch = _batch(tiny_dense, 4, 32, rng)
+        with plan.sharder():
+            state2, metrics = jitted(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+
+def test_serve_cells_run_real_data(tiny_dense):
+    mesh = make_host_mesh()
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(rng, tiny_dense)
+    with mesh:
+        cell = ShapeCell("p", 32, 4, "prefill")
+        jitted, plan = TS.jit_step_for_cell(tiny_dense, cell, mesh)
+        cache = SV.init_cache(tiny_dense, 4, 32)
+        toks = jax.random.randint(rng, (4, 32), 0, tiny_dense.vocab_size)
+        with plan.sharder():
+            logits, cache = jitted(params, {"tokens": toks, "cache": cache})
+        assert logits.shape == (4, tiny_dense.vocab_size)
+
+        cell_d = ShapeCell("d", 32, 4, "decode")
+        jitted_d, plan_d = TS.jit_step_for_cell(tiny_dense, cell_d, mesh)
+        with plan_d.sharder():
+            lg2, cache = jitted_d(params,
+                                  {"tokens": toks[:, :1], "cache": cache})
+        assert lg2.shape == (4, tiny_dense.vocab_size)
+        assert bool(jnp.isfinite(lg2).all())
+
+
+def test_greedy_generate(tiny_dense):
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(rng, tiny_dense)
+    prompt = jax.random.randint(rng, (2, 8), 0, tiny_dense.vocab_size)
+    out = SV.greedy_generate(params, tiny_dense, prompt, n_steps=5,
+                             max_len=32)
+    assert out.shape == (2, 5)
+    assert (out >= 0).all() and (out < tiny_dense.vocab_size).all()
+
+
+def test_checkpoint_train_resume(tmp_path, tiny_dense):
+    """Fault-tolerance end-to-end: save mid-training, restore, identical."""
+    from repro.checkpoint import manager as CKPT
+    rng = jax.random.PRNGKey(0)
+    opt = adamw(1e-3)
+    step_fn = jax.jit(TS.build_train_step(tiny_dense, opt))
+    batch = _batch(tiny_dense, 4, 16, rng)
+
+    state = TS.init_state(rng, tiny_dense, opt)
+    for _ in range(3):
+        state, _ = step_fn(state, batch)
+    CKPT.save(str(tmp_path), state, step=3)
+    state_a = state
+    for _ in range(2):
+        state_a, ma = step_fn(state_a, batch)
+
+    tmpl = jax.eval_shape(lambda: TS.init_state(rng, tiny_dense, opt))
+    state_b, _ = CKPT.restore(str(tmp_path), tmpl)
+    for _ in range(2):
+        state_b, mb = step_fn(state_b, batch)
+    np.testing.assert_allclose(ma["loss"], mb["loss"], rtol=1e-6)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-6),
+                 state_a["params"], state_b["params"])
+
+
+def test_decode_shardmap_matches_plain(tiny_dense):
+    """Sequence-sharded shard_map decode == the plain decode path."""
+    from repro.distributed import ctx as CTX
+    from repro.launch.mesh import make_host_mesh
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(rng, tiny_dense)
+    toks = jax.random.randint(rng, (2, 12), 0, tiny_dense.vocab_size)
+
+    cache = SV.init_cache(tiny_dense, 2, 32)
+    lg_a, cache_a, _ = SV.prefill(params, tiny_dense, toks[:, :8],
+                                  cache=cache)
+    lg_a, cache_a = SV.decode_step(params, tiny_dense, toks[:, 8:9],
+                                   cache=cache_a)
+
+    mesh = make_host_mesh()
+    with mesh, CTX.decode_shard(mesh, seq_axis="model",
+                                batch_axes=("data",)):
+        cache_b = SV.init_cache(tiny_dense, 2, 32)
+        lg_b, cache_b, _ = SV.prefill(params, tiny_dense, toks[:, :8],
+                                      cache=cache_b)
+        lg_b, cache_b = SV.decode_step(params, tiny_dense, toks[:, 8:9],
+                                       cache=cache_b)
+    np.testing.assert_allclose(lg_a, lg_b, atol=1e-4)
+    np.testing.assert_allclose(cache_a["layers"]["k"],
+                               cache_b["layers"]["k"], atol=1e-5)
