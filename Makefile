@@ -1,0 +1,16 @@
+# Convenience wrappers around the repo's standing commands (ROADMAP.md).
+
+PY ?= python
+
+.PHONY: test test-deps bench
+
+# tier-1 verify
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# optional extras (hypothesis) — the suite is green without them
+test-deps:
+	$(PY) -m pip install -r tests/requirements-test.txt
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run

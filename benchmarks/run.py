@@ -24,6 +24,7 @@ BENCHES = [
     ("fig15_clf", "benchmarks.fig15_clf"),
     ("table3_query_speedup", "benchmarks.table3_query_speedup"),
     ("table4_cv_variance", "benchmarks.table4_cv_variance"),
+    ("multi_query_sharing", "benchmarks.multi_query_sharing"),
 ]
 
 

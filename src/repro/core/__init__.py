@@ -1,6 +1,8 @@
 # The paper's primary contribution: approximate filter pipeline for video
 # monitoring queries (CF/CCF/CLF branch heads, CAM localisation, cascade
 # execution, control-variate aggregation, streaming windows).
-from repro.core import aggregates, cam, cascade, filters, query, streaming
+from repro.core import (aggregates, cam, cascade, filters, plan, query,
+                        streaming)
 
-__all__ = ["aggregates", "cam", "cascade", "filters", "query", "streaming"]
+__all__ = ["aggregates", "cam", "cascade", "filters", "plan", "query",
+           "streaming"]

@@ -77,12 +77,24 @@ def dilate_manhattan(occ: jax.Array, radius: int) -> jax.Array:
 
     Implements the paper's CLF-1 / CLF-2 relaxations: a predicted cell
     counts as correct if a true object lies within Manhattan distance r.
+
+    Each unit step is the union of the cell with its 4-neighbourhood,
+    computed as two banded (g, g) matmuls (tridiagonal row band + column
+    band, double-counting the centre is harmless under ``> 0``).  On CPU
+    XLA this is ~10x cheaper than materializing four padded shifts of the
+    full (B, g, g, C) map per step.
     """
     out = occ
+    if radius <= 0:
+        return out
+    band_r = (jnp.eye(occ.shape[1], dtype=jnp.float32)
+              + jnp.eye(occ.shape[1], k=1, dtype=jnp.float32)
+              + jnp.eye(occ.shape[1], k=-1, dtype=jnp.float32))
+    band_c = (jnp.eye(occ.shape[2], dtype=jnp.float32)
+              + jnp.eye(occ.shape[2], k=1, dtype=jnp.float32)
+              + jnp.eye(occ.shape[2], k=-1, dtype=jnp.float32))
     for _ in range(radius):
-        up = jnp.pad(out[:, 1:], ((0, 0), (0, 1), (0, 0), (0, 0)))
-        down = jnp.pad(out[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0)))
-        left = jnp.pad(out[:, :, 1:], ((0, 0), (0, 0), (0, 1), (0, 0)))
-        right = jnp.pad(out[:, :, :-1], ((0, 0), (0, 0), (1, 0), (0, 0)))
-        out = out | up | down | left | right
+        f = out.astype(jnp.float32)
+        out = (jnp.einsum("ij,bjkc->bikc", band_r, f)
+               + jnp.einsum("kl,bilc->bikc", band_c, f)) > 0
     return out

@@ -44,6 +44,7 @@ class CascadeStats:
     filter_time_s: float = 0.0
     oracle_time_s: float = 0.0
     per_stage_pass: Optional[List[int]] = None
+    per_query_pass: Optional[List[int]] = None   # multi-query attribution
 
     @property
     def selectivity(self) -> float:
@@ -164,3 +165,88 @@ class CascadeExecutor:
         self.stats.filter_time_s += t1 - t0
         self.stats.oracle_time_s += t2 - t1
         return CascadeResult(answers=answers, stats=self.stats)
+
+
+# --------------------------------------------------------------------------
+# Multi-query shared cascade (repro.core.plan)
+# --------------------------------------------------------------------------
+
+class MultiQueryCascade:
+    """N concurrent queries driven off ONE shared filter evaluation.
+
+    The deduplicating planner (repro.core.plan.QueryPlan) evaluates each
+    unique canonical leaf once and reassembles per-query masks with
+    incidence einsums, so the filter cost is ~independent of how much the
+    registered queries overlap.  ``masks`` returns the per-query (B, N)
+    candidate matrix; derive the union a shared oracle pass needs from it
+    (``masks(out).any(-1)``) rather than re-running the plan.
+    """
+
+    def __init__(self, queries: Sequence[Q.Predicate], *, tau: float = 0.2):
+        from repro.core.plan import QueryPlan
+        self.queries = tuple(queries)
+        self.tau = tau
+        self.plan = QueryPlan(self.queries, tau=tau)
+        self._jitted = jax.jit(self.plan.evaluate)
+
+    def masks(self, out: FilterOutputs) -> jax.Array:
+        """(B, N) per-query candidate masks."""
+        return self._jitted(out)
+
+
+@dataclasses.dataclass
+class MultiCascadeResult:
+    answers: np.ndarray          # (B, N) bool final per-query answers
+    stats: CascadeStats
+
+
+class MultiQueryExecutor:
+    """Shared end-to-end cascade: one branch-head forward, one union-mask
+    oracle compaction, per-query exact answers on the survivors.
+
+    The oracle runs once on frames where *any* query's filter passes;
+    ``stats.per_query_pass`` attributes the surviving frames per query so
+    an operator can see which registration is paying for the oracle load.
+    """
+
+    def __init__(self, cascade: MultiQueryCascade,
+                 filter_fn: Callable[[Any], FilterOutputs],
+                 oracle_fn: Callable[[Any, np.ndarray], List],
+                 n_classes: int, grid: int):
+        self.cascade = cascade
+        self.filter_fn = filter_fn
+        self.oracle_fn = oracle_fn
+        self.n_classes = n_classes
+        self.grid = grid
+        self.stats = CascadeStats(
+            per_query_pass=[0] * len(cascade.queries))
+
+    def run_batch(self, batch) -> MultiCascadeResult:
+        B = jax.tree.leaves(batch)[0].shape[0]
+        N = len(self.cascade.queries)
+        t0 = time.perf_counter()
+        fout = self.filter_fn(batch)
+        masks = np.asarray(self.cascade.masks(fout))         # (B, N)
+        t1 = time.perf_counter()
+
+        union = masks.any(1)
+        idx = np.nonzero(union)[0]
+        answers = np.zeros((B, N), bool)
+        t2 = t1
+        if idx.size:
+            objs = self.oracle_fn(batch, idx)
+            t2 = time.perf_counter()
+            for j, obj_list in zip(idx, objs):
+                for qi in np.nonzero(masks[j])[0]:
+                    answers[j, qi] = Q.eval_objects(
+                        self.cascade.queries[qi], obj_list,
+                        self.n_classes, self.grid)
+        self.stats.frames_in += B
+        self.stats.filter_pass += int(union.sum())
+        self.stats.oracle_calls += int(idx.size)
+        self.stats.oracle_positives += int(answers.any(1).sum())
+        for qi in range(N):
+            self.stats.per_query_pass[qi] += int(masks[:, qi].sum())
+        self.stats.filter_time_s += t1 - t0
+        self.stats.oracle_time_s += t2 - t1
+        return MultiCascadeResult(answers=answers, stats=self.stats)

@@ -48,6 +48,15 @@ class FilterOutputs:
             occ = CAM.dilate_manhattan(occ, radius)
         return occ
 
+    def spatial_stats(self, tau: float = 0.2) -> jax.Array:
+        """(B, C, 5) per-class occupancy extrema + cell count, via the fused
+        spatial-predicate kernel — one grid reduction shared by every
+        ORDER() leaf of every registered query (repro.core.plan).  Traced
+        inline (no nested jit) so the threshold pass CSEs with
+        ``occupancy`` when both appear in one program."""
+        from repro.kernels import ops as kops
+        return kops.spatial_stats_inline(self.grid, tau)
+
 
 # --------------------------------------------------------------------------
 # IC head (§II-A): GAP + FC; CAM from the FC weights (Eq. 1)

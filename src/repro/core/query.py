@@ -103,6 +103,50 @@ def leaves(q: Predicate) -> List[Predicate]:
     return [q]
 
 
+def canonicalize_leaf(q: Predicate) -> Predicate:
+    """Canonical form of a leaf predicate, for deduplication across queries.
+
+    The four spatial relations come in mirror pairs over the same extremum
+    comparison (see ``spatial_relation``):
+
+        RIGHT(a, b)  ==  max_col(a) > min_col(b)  ==  LEFT(b, a)
+        BELOW(a, b)  ==  max_row(a) > min_row(b)  ==  ABOVE(b, a)
+
+    so every Spatial leaf is normalised to its LEFT/ABOVE spelling.  Leaves
+    are frozen dataclasses with hashable fields, so the canonical leaf is
+    itself the dedup key (``leaf_key``).
+    """
+    if isinstance(q, Spatial):
+        if q.rel == Rel.RIGHT:
+            return Spatial(q.cls_b, Rel.LEFT, q.cls_a, q.radius)
+        if q.rel == Rel.BELOW:
+            return Spatial(q.cls_b, Rel.ABOVE, q.cls_a, q.radius)
+    return q
+
+
+def leaf_key(q: Predicate):
+    """Hashable dedup key: two leaves with equal keys evaluate identically
+    on every frame (used by the multi-query planner in repro.core.plan)."""
+    return canonicalize_leaf(q)
+
+
+def to_nnf(q: Predicate, negate: bool = False) -> Predicate:
+    """Negation normal form: push Not down to the leaves (De Morgan).
+
+    The result contains And/Or over leaves and Not-wrapped leaves only —
+    the shape the multi-query planner lowers to its levelized incidence
+    program (internal nodes are then pure And/Or gates)."""
+    if isinstance(q, Not):
+        return to_nnf(q.term, not negate)
+    if isinstance(q, And):
+        terms = tuple(to_nnf(t, negate) for t in q.terms)
+        return Or(terms) if negate else And(terms)
+    if isinstance(q, Or):
+        terms = tuple(to_nnf(t, negate) for t in q.terms)
+        return And(terms) if negate else Or(terms)
+    return Not(q) if negate else q
+
+
 # --------------------------------------------------------------------------
 # Approximate evaluation on FilterOutputs (batched)
 # --------------------------------------------------------------------------

@@ -4,13 +4,15 @@ Maps the paper's query surface (``WINDOW HOPPING (SIZE n, ADVANCE BY m)``)
 and its sampling-based aggregate evaluation onto a batched executor, and
 adds the production concerns a monitoring deployment needs: per-window
 deadlines with frame dropping (the stream does not wait — a straggling
-device must not stall ingest), and backpressure accounting.
+device must not stall ingest), backpressure accounting, and multi-query
+multiplexing (queries register/retire mid-stream; the shared-cascade
+engine is rebuilt only when the registered set actually changes).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -108,3 +110,105 @@ class StreamExecutor:
             self.stats.frames_processed += idx.size
         self.stats.wall_s = time.perf_counter() - t_start
         return self.stats
+
+
+# --------------------------------------------------------------------------
+# Multi-query multiplexing (queries come and go mid-stream)
+# --------------------------------------------------------------------------
+
+class QueryRegistry:
+    """Live set of registered queries with epoch versioning.
+
+    ``epoch`` bumps on every register/retire, so executors can rebuild
+    their shared-cascade plan lazily — only when the set changed, never
+    per batch."""
+
+    def __init__(self):
+        self._next_id = 0
+        self._active: Dict[int, Any] = {}
+        self.epoch = 0
+
+    def register(self, query) -> int:
+        qid = self._next_id
+        self._next_id += 1
+        self._active[qid] = query
+        self.epoch += 1
+        return qid
+
+    def retire(self, qid: int) -> None:
+        del self._active[qid]
+        self.epoch += 1
+
+    def active(self) -> List[Tuple[int, Any]]:
+        """(qid, query) pairs in registration order."""
+        return sorted(self._active.items())
+
+    def __len__(self) -> int:
+        return len(self._active)
+
+
+@dataclasses.dataclass
+class WindowResult:
+    span: Tuple[int, int]
+    hits: Dict[int, int]        # qid -> frames answering True in the window
+    frames: int
+
+
+class MultiQueryStreamExecutor:
+    """Windowed executor that multiplexes N concurrent queries per batch.
+
+    ``engine_factory(queries) -> fn(batch_indices) -> (B, N) bool`` builds
+    the shared evaluation — typically a small adapter that fetches the
+    batch's FilterOutputs, runs ``MultiQueryCascade.masks`` / an oracle
+    pass, and returns the per-query answer matrix (see
+    examples/multi_query_monitor.py); it is re-invoked only when the
+    registry epoch moves,
+    so registrations/retirements take effect at the next batch boundary
+    without recompiling anything while the query set is stable.
+
+    ``on_window(result)`` fires after each hopping window and may
+    register/retire queries (mid-stream multiplexing).
+    """
+
+    def __init__(self, registry: QueryRegistry,
+                 engine_factory: Callable[[Tuple[Any, ...]],
+                                          Callable[[np.ndarray], np.ndarray]],
+                 window: HoppingWindow, batch: int):
+        self.registry = registry
+        self.engine_factory = engine_factory
+        self.window = window
+        self.batch = batch
+        self.rebuilds = 0
+        self._epoch = -1
+        self._engine: Optional[Callable] = None
+        self._qids: Tuple[int, ...] = ()
+
+    def _refresh(self):
+        if self.registry.epoch != self._epoch:
+            items = self.registry.active()
+            self._qids = tuple(qid for qid, _ in items)
+            self._engine = (self.engine_factory(
+                tuple(q for _, q in items)) if items else None)
+            self._epoch = self.registry.epoch
+            self.rebuilds += 1
+        return self._engine, self._qids
+
+    def run(self, n_frames: int,
+            on_window: Optional[Callable[[WindowResult], None]] = None
+            ) -> List[WindowResult]:
+        results = []
+        for lo, hi in self.window.windows(n_frames):
+            hits: Dict[int, int] = {}
+            for b0 in range(lo, hi, self.batch):
+                idx = np.arange(b0, min(b0 + self.batch, hi))
+                engine, qids = self._refresh()
+                if engine is None:              # nothing registered
+                    continue
+                ans = np.asarray(engine(idx))   # (B, n_active)
+                for k, qid in enumerate(qids):
+                    hits[qid] = hits.get(qid, 0) + int(ans[:, k].sum())
+            res = WindowResult(span=(lo, hi), hits=hits, frames=hi - lo)
+            results.append(res)
+            if on_window is not None:
+                on_window(res)                  # may mutate the registry
+        return results

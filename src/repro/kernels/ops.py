@@ -77,10 +77,47 @@ def cam_head(feat: jax.Array, w: jax.Array, b: jax.Array, *,
     return counts, cam.reshape(B, g, g, C)
 
 
+def _spatial_stats_proj(grid_logits: jax.Array, tau: float) -> jax.Array:
+    """Fast pure-JAX spatial stats via row/column occupancy projections.
+
+    Extrema only need ``any`` along the opposite axis, so after one
+    threshold pass the min/max reductions run on (B, g, C) projections
+    instead of four (B, g, g, C) temporaries (ref.spatial_stats_ref is the
+    clarity oracle; this is the CPU hot path, parity-tested against it)."""
+    B, g, _, C = grid_logits.shape
+    occ = grid_logits.astype(jnp.float32) > tau
+    prow = occ.any(2)                               # (B, g, C) row occupied
+    pcol = occ.any(1)                               # (B, g, C) col occupied
+    idx = jnp.arange(g, dtype=jnp.float32)[None, :, None]
+    min_row = jnp.where(prow, idx, float(g)).min(1)
+    max_row = jnp.where(prow, idx, -1.0).max(1)
+    min_col = jnp.where(pcol, idx, float(g)).min(1)
+    max_col = jnp.where(pcol, idx, -1.0).max(1)
+    n = occ.sum((1, 2)).astype(jnp.float32)
+    return jnp.stack([min_row, max_row, min_col, max_col, n], axis=-1)
+
+
+def spatial_stats_inline(grid_logits: jax.Array,
+                         tau: float = 0.2) -> jax.Array:
+    """Un-jitted spatial stats, for callers that are already inside a jit
+    (repro.core.plan traces this next to the occupancy threshold so XLA
+    CSEs the shared ``grid > tau`` pass; a nested jit would block that).
+
+    This is the multi-query filter hot path (every ORDER() leaf of every
+    registered query reads these stats), so on CPU the numerically
+    identical projection reduction is used directly: the interpreted
+    kernel walks the (B,) grid step-by-step in the Pallas interpreter
+    (~ms per call) and would dominate end-to-end throughput.
+    Interpreter-vs-reference parity is covered in tests/test_kernels.py."""
+    if _interpret():
+        return _spatial_stats_proj(grid_logits, tau)
+    return spatial_stats_bgc(grid_logits, tau=tau, interpret=False)
+
+
 @functools.partial(jax.jit, static_argnames=("tau",))
 def spatial_stats(grid_logits: jax.Array, *, tau: float = 0.2) -> jax.Array:
     """grid_logits: (B, g, g, C) -> per-class stats (B, C, 5)."""
-    return spatial_stats_bgc(grid_logits, tau=tau, interpret=_interpret())
+    return spatial_stats_inline(grid_logits, tau)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -53,3 +53,29 @@ def spatial_stats_bgc(grid_logits: jax.Array, *, tau: float = 0.2,
         out_shape=jax.ShapeDtypeStruct((B, C, 5), jnp.float32),
         interpret=interpret,
     )(flat)
+
+
+def eval_spatial_leaves(stats: jax.Array, cls_a: jax.Array, cls_b: jax.Array,
+                        use_row: jax.Array, radius: jax.Array, *,
+                        grid: int) -> jax.Array:
+    """Batched-leaf evaluation of L canonical ORDER() predicates at once.
+
+    stats: (B, C, 5) from ``spatial_stats_bgc``; cls_a/cls_b/use_row/radius:
+    (L,) per-leaf arrays (canonical LEFT/ABOVE spelling, see
+    repro.core.query.canonicalize_leaf) -> (B, L) bool.
+
+    Manhattan dilation by r shifts the occupancy extrema exactly
+    (min - r clamped to 0, max + r clamped to g-1) and never changes
+    emptiness, so CLF-k relaxations are evaluated analytically from the one
+    shared (C, 5) reduction — no per-leaf grid rescan, no dilated grids.
+    """
+    sa = stats[:, cls_a]                               # (B, L, 5)
+    sb = stats[:, cls_b]
+    any_a = sa[..., 4] > 0
+    any_b = sb[..., 4] > 0
+    r = radius.astype(stats.dtype)
+    min_a = jnp.where(use_row, sa[..., 0], sa[..., 2])   # min row | col of a
+    max_b = jnp.where(use_row, sb[..., 1], sb[..., 3])   # max row | col of b
+    min_a = jnp.maximum(min_a - r, 0.0)
+    max_b = jnp.minimum(max_b + r, float(grid - 1))
+    return any_a & any_b & (min_a < max_b)

@@ -10,6 +10,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import pytest
 
+# Optional test-only dependencies (tests/requirements-test.txt).  The suite
+# must collect and run green without them: modules that use hypothesis
+# either pytest.importorskip it (test_query_fuzz.py) or fall back to a
+# deterministic seeded sweep of the same property (test_aggregates.py,
+# test_query_properties.py).
+try:
+    import hypothesis  # noqa: F401
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
 from repro.models.config import BlockKind, ModelConfig
 
 

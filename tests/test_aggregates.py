@@ -1,9 +1,19 @@
-"""Control-variate estimators (paper §III): hypothesis property tests."""
+"""Control-variate estimators (paper §III): property tests.
+
+``hypothesis`` is optional (see tests/conftest.py and
+tests/requirements-test.txt): when installed the property tests explore
+random inputs; in a bare environment they fall back to a fixed seeded
+sweep of the same properties so the module always collects and runs green.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import HAS_HYPOTHESIS   # optional dep — see tests/conftest.py
+
+if HAS_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
 
 from repro.core import aggregates as AGG
 
@@ -39,9 +49,7 @@ def test_mcv_beats_single_cv():
     assert multi.variance_reduction > single.variance_reduction
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(10, 200), st.floats(0.0, 3.0), st.integers(0, 2 ** 31 - 1))
-def test_cv_variance_never_worse_hypothesis(n, noise, seed):
+def _check_cv_variance_never_worse(n, noise, seed):
     """Property: the CV estimator variance <= naive variance (+eps)."""
     rng = np.random.default_rng(seed)
     x = rng.normal(0, 1, n)
@@ -50,9 +58,7 @@ def test_cv_variance_never_worse_hypothesis(n, noise, seed):
     assert est.var <= est.naive_var * (1 + 1e-9)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(4, 64), st.integers(4, 64), st.integers(0, 2 ** 31 - 1))
-def test_accumulator_merge_associative(n1, n2, seed):
+def _check_accumulator_merge_associative(n1, n2, seed):
     """merge(A, B) == batch estimate on concatenated data (Chan et al.)."""
     rng = np.random.default_rng(seed)
     y = rng.normal(1, 2, n1 + n2)
@@ -66,6 +72,32 @@ def test_accumulator_merge_associative(n1, n2, seed):
     np.testing.assert_allclose(merged.M2, whole.M2, atol=1e-2)
     e1, e2 = merged.estimate(), whole.estimate()
     np.testing.assert_allclose(e1.mean, e2.mean, atol=1e-4)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(10, 200), st.floats(0.0, 3.0),
+           st.integers(0, 2 ** 31 - 1))
+    def test_cv_variance_never_worse_hypothesis(n, noise, seed):
+        _check_cv_variance_never_worse(n, noise, seed)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(4, 64), st.integers(4, 64),
+           st.integers(0, 2 ** 31 - 1))
+    def test_accumulator_merge_associative(n1, n2, seed):
+        _check_accumulator_merge_associative(n1, n2, seed)
+else:
+    @pytest.mark.parametrize("seed", range(10))
+    def test_cv_variance_never_worse_seeded(seed):
+        rng = np.random.default_rng(seed + 1000)
+        _check_cv_variance_never_worse(int(rng.integers(10, 200)),
+                                       float(rng.uniform(0, 3)), seed)
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_accumulator_merge_associative_seeded(seed):
+        rng = np.random.default_rng(seed + 2000)
+        _check_accumulator_merge_associative(int(rng.integers(4, 64)),
+                                             int(rng.integers(4, 64)), seed)
 
 
 def test_distributed_reduce_matches_merge():
@@ -82,9 +114,10 @@ def test_distributed_reduce_matches_merge():
         return out.n, out.mean, out.M2
 
     from jax.sharding import Mesh, PartitionSpec as P
+    from repro.distributed.sharding import shard_map
     mesh = jax.make_mesh((1,), ("i",))
-    g = jax.shard_map(f, mesh=mesh, in_specs=(P(), P(), P()),
-                      out_specs=(P(), P(), P()), check_vma=False)
+    g = shard_map(f, mesh=mesh, in_specs=(P(), P(), P()),
+                  out_specs=(P(), P(), P()), check_vma=False)
     n2, m2, M22 = g(acc.n, acc.mean, acc.M2)
     np.testing.assert_allclose(m2, acc.mean, atol=1e-6)
     np.testing.assert_allclose(M22, acc.M2, atol=1e-4)

@@ -77,3 +77,43 @@ def test_no_drops_when_fast():
     stats = ex.run(200)
     assert stats.frames_dropped == 0
     assert stats.frames_processed == 200
+
+
+def test_hopping_window_advance_gt_size():
+    """ADVANCE BY > SIZE skips frames between windows (sampling windows)."""
+    w = HoppingWindow(size=10, advance=25)
+    assert list(w.windows(100)) == [(0, 10), (25, 35), (50, 60), (75, 85)]
+    # a window that does not fit the stream yields nothing (no partials)
+    assert list(HoppingWindow(size=50, advance=80).windows(40)) == []
+
+
+def test_frame_sampler_n_exceeds_window():
+    """n > hi - lo clamps to the whole window (exhaustive, no replacement,
+    no IndexError from choice-without-replacement)."""
+    s = FrameSampler(seed=0)
+    np.testing.assert_array_equal(s.sample(5, 10, 50), np.arange(5, 10))
+    np.testing.assert_array_equal(s.sample(3, 4, 1), [3])
+
+
+def test_straggler_exact_deadline_boundary():
+    """Dropping is strictly-behind-schedule: a pipeline that costs EXACTLY
+    the arrival budget per batch keeps up (no drops); one just past it
+    falls behind and sheds frames."""
+    # generous per-batch budget (0.2 s) so real wall-clock of the no-op
+    # process() calls can't push the exact-boundary run over the deadline
+    # on a loaded machine (simulate_slow only subtracts numbers; nothing
+    # here actually sleeps)
+    policy = StragglerPolicy(fps=50.0, slack=1.0)
+    assert policy.deadline_s(50) == pytest.approx(1.0)
+    per_batch = 10 / policy.fps                       # arrival budget
+
+    ex = StreamExecutor(lambda idx: None, batch=10, policy=policy)
+    stats = ex.run(50, simulate_slow=lambda lo: per_batch)
+    assert stats.frames_dropped == 0                  # at the boundary
+    assert stats.frames_processed == 50
+
+    ex2 = StreamExecutor(lambda idx: None, batch=10, policy=policy)
+    stats2 = ex2.run(50, simulate_slow=lambda lo: per_batch * 1.5)
+    assert stats2.frames_dropped > 0                  # past the boundary
+    assert (stats2.frames_processed + stats2.frames_dropped
+            == stats2.frames_seen)

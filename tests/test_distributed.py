@@ -97,7 +97,8 @@ def test_allreduce_compressed_single_device():
     def f(gg, ee):
         return COMP.allreduce_compressed(gg, ee, "data")
 
-    out, new_err = jax.shard_map(
+    from repro.distributed.sharding import shard_map
+    out, new_err = shard_map(
         f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
         check_vma=False)(g, err)
     np.testing.assert_allclose(out["w"], g["w"], atol=0.01)

@@ -90,6 +90,61 @@ def test_spatial_stats_empty_class():
     np.testing.assert_allclose(s[0, :, 4], 0.0)   # count = 0
 
 
+@pytest.mark.parametrize("seed", range(4))
+def test_spatial_stats_interpret_parity_random_occupancy(seed):
+    """Interpret-mode Pallas kernel vs pure-JAX reference on randomized
+    sparse occupancy grids, with whole classes knocked out per frame so
+    the empty-class sentinels (min=g, max=-1, n=0) mix with live classes
+    inside one batch."""
+    from repro.kernels.spatial_predicate import spatial_stats_bgc
+
+    rng = np.random.default_rng(seed)
+    B, g, C = 4, 12, 6
+    occ = rng.random((B, g, g, C)) < 0.08
+    dead = rng.random((B, C)) < 0.3
+    occ &= ~dead[:, None, None, :]
+    gl = jnp.where(jnp.asarray(occ), 5.0, -5.0)
+    s_kernel = np.asarray(spatial_stats_bgc(gl, interpret=True))
+    s_ref = np.asarray(ref.spatial_stats_ref(gl))
+    np.testing.assert_array_equal(s_kernel, s_ref)
+    empty = ~occ.any((1, 2))                          # (B, C)
+    np.testing.assert_allclose(s_kernel[..., 0][empty], g)    # min sentinel
+    np.testing.assert_allclose(s_kernel[..., 1][empty], -1.0)  # max sentinel
+    np.testing.assert_allclose(s_kernel[..., 4][empty], 0.0)
+
+
+def test_eval_spatial_leaves_matches_per_leaf_eval():
+    """Batched-leaf ORDER() evaluation over kernel stats == scalar
+    ``eval_filters`` on each Spatial leaf (all relations, with dilation)."""
+    from repro.core import query as Q
+    from repro.core.filters import FilterOutputs
+    from repro.kernels.spatial_predicate import (eval_spatial_leaves,
+                                                 spatial_stats_bgc)
+
+    rng = np.random.default_rng(11)
+    B, g, C = 5, 10, 4
+    gl = jnp.asarray(rng.normal(0, 1, (B, g, g, C)).astype(np.float32))
+    out = FilterOutputs(counts=jnp.zeros((B, C)), grid=gl)
+    stats = spatial_stats_bgc(gl, interpret=True)
+
+    leaves, want = [], []
+    for a in range(C):
+        for b in range(C):
+            for rel in Q.Rel:
+                for radius in (0, 1, 2):
+                    leaf = Q.canonicalize_leaf(Q.Spatial(a, rel, b, radius))
+                    leaves.append(leaf)
+                    want.append(np.asarray(
+                        Q.eval_filters(leaf, out)))
+    got = np.asarray(eval_spatial_leaves(
+        stats,
+        jnp.asarray([l.cls_a for l in leaves]),
+        jnp.asarray([l.cls_b for l in leaves]),
+        jnp.asarray([l.rel == Q.Rel.ABOVE for l in leaves]),
+        jnp.asarray([l.radius for l in leaves]), grid=g))
+    np.testing.assert_array_equal(got, np.stack(want, axis=1))
+
+
 @pytest.mark.parametrize("T,K", [(64, 16), (128, 64), (96, 32)])
 def test_rwkv6_scan_sweep(T, K):
     B, H = 2, 3

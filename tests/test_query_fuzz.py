@@ -1,9 +1,16 @@
 """Hypothesis fuzz: approximate filter evaluation == exact object-list
 semantics whenever the filter outputs are perfect (the system invariant
 the whole cascade design rests on — zero false negatives at the accuracy
-ceiling)."""
+ceiling).
+
+Requires the optional ``hypothesis`` dep (tests/requirements-test.txt);
+tests/test_query_properties.py carries the deterministic, always-on
+version of this property."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dep — see tests/conftest.py
 from hypothesis import given, settings, strategies as st
 
 from repro.core import query as Q

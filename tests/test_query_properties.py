@@ -1,0 +1,238 @@
+"""Property-based foundation for query semantics and the multi-query planner.
+
+Two system invariants, checked over randomized frames and query ASTs:
+
+1.  With tolerance/radius 0 and oracle-derived (perfect) ``FilterOutputs``,
+    the vectorised ``eval_filters`` agrees with the exact object-list
+    semantics ``eval_objects`` for ANY query tree (zero false negatives at
+    the accuracy ceiling — the invariant the cascade design rests on).
+2.  The shared multi-query plan (repro.core.plan) is **bit-identical** to
+    evaluating every query independently with ``eval_filters`` — on
+    arbitrary imperfect filter outputs, tolerances and dilation radii
+    included.  Sharing is a pure work transformation, never a semantic one.
+
+The generators are seeded numpy (no external deps) so the properties run
+green in a bare environment; with ``hypothesis`` installed
+(tests/requirements-test.txt), tests/test_query_fuzz.py adds shrinking
+exploration of invariant 1.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cascade as CS
+from repro.core import query as Q
+from repro.core.filters import FilterOutputs
+from repro.core.plan import QueryPlan
+
+GRID, C = 6, 3
+
+
+# ---------------------------------------------------------------------------
+# seeded generators
+# ---------------------------------------------------------------------------
+
+def rand_leaf(rng, *, relaxed: bool):
+    tol = int(rng.integers(0, 3)) if relaxed else 0
+    rad = int(rng.integers(0, 3)) if relaxed else 0
+    op = [Q.Op.EQ, Q.Op.GE, Q.Op.LE][rng.integers(0, 3)]
+    kind = rng.integers(0, 4)
+    if kind == 0:
+        return Q.Count(op, int(rng.integers(0, 7)), tol)
+    if kind == 1:
+        return Q.ClassCount(int(rng.integers(0, C)), op,
+                            int(rng.integers(0, 5)), tol)
+    if kind == 2:
+        return Q.Spatial(int(rng.integers(0, C)),
+                         list(Q.Rel)[rng.integers(0, 4)],
+                         int(rng.integers(0, C)), rad)
+    r0, c0 = (int(x) for x in rng.integers(0, 3, 2))
+    return Q.Region(int(rng.integers(0, C)),
+                    (r0, c0, int(rng.integers(3, GRID + 1)),
+                     int(rng.integers(3, GRID + 1))),
+                    int(rng.integers(1, 3)), rad)
+
+
+def rand_query(rng, depth=0, *, relaxed: bool):
+    if depth >= 3 or rng.random() < 0.4:
+        return rand_leaf(rng, relaxed=relaxed)
+    kind = rng.integers(0, 3)
+    if kind == 2:
+        return Q.Not(rand_query(rng, depth + 1, relaxed=relaxed))
+    terms = tuple(rand_query(rng, depth + 1, relaxed=relaxed)
+                  for _ in range(rng.integers(2, 4)))
+    return Q.And(terms) if kind == 0 else Q.Or(terms)
+
+
+def rand_objects(rng):
+    """Stack-free object list (one object per cell — the grid world model
+    the occupancy abstraction matches, see test_query_fuzz.py)."""
+    n = int(rng.integers(0, 9))
+    cells = {}
+    for _ in range(n):
+        r, c = int(rng.integers(0, GRID)), int(rng.integers(0, GRID))
+        cells[(r, c)] = (int(rng.integers(0, C)), r, c)
+    return list(cells.values())
+
+
+def perfect_outputs(objs):
+    occ = Q.objects_to_grid(
+        np.asarray(list(objs), np.int64).reshape(-1, 3), C, GRID)
+    counts = np.zeros((1, C), np.float32)
+    for c, _, _ in objs:
+        counts[0, c] += 1
+    return FilterOutputs(counts=jnp.asarray(counts),
+                         grid=jnp.where(jnp.asarray(occ)[None], 1.0, 0.0))
+
+
+def rand_outputs(rng, B):
+    """Imperfect (raw, noisy) filter outputs for planner-equivalence runs."""
+    return FilterOutputs(
+        counts=jnp.asarray(rng.normal(2, 2, (B, C)).astype(np.float32)),
+        grid=jnp.asarray(rng.normal(0, 0.5,
+                                    (B, GRID, GRID, C)).astype(np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# invariant 1: strict filters == exact semantics on perfect outputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_strict_filters_match_exact_semantics(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(25):
+        query = rand_query(rng, relaxed=False)
+        objs = rand_objects(rng)
+        fo = perfect_outputs(objs)
+        approx = bool(Q.eval_filters(query, fo)[0])
+        exact = Q.eval_objects(query, objs, C, GRID)
+        assert approx == exact, (query, objs)
+
+
+# ---------------------------------------------------------------------------
+# invariant 2: shared plan ≡ independent evaluation (bit-identical)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_shared_plan_identical_to_independent_eval(seed):
+    rng = np.random.default_rng(100 + seed)
+    queries = [rand_query(rng, relaxed=True) for _ in range(10)]
+    plan = QueryPlan(queries)
+    out = rand_outputs(rng, B=32)
+    shared = np.asarray(plan.evaluate(out))
+    indep = np.stack([np.asarray(Q.eval_filters(q, out)) for q in queries],
+                     axis=1)
+    np.testing.assert_array_equal(shared, indep)
+
+
+def test_plan_handles_count_only_heads():
+    """OD-COF heads emit no grid; count-only plans must not require one."""
+    queries = [Q.Count(Q.Op.GE, 2), Q.Not(Q.ClassCount(1, Q.Op.EQ, 0))]
+    plan = QueryPlan(queries)
+    out = FilterOutputs(counts=jnp.asarray([[3.0, 0.0, 0.0],
+                                            [0.0, 1.0, 0.0]]), grid=None)
+    shared = np.asarray(plan.evaluate(out))
+    indep = np.stack([np.asarray(Q.eval_filters(q, out)) for q in queries], 1)
+    np.testing.assert_array_equal(shared, indep)
+    with pytest.raises(ValueError):
+        QueryPlan([Q.Spatial(0, Q.Rel.LEFT, 1)]).evaluate(out)
+
+
+# ---------------------------------------------------------------------------
+# canonicalization + dedup
+# ---------------------------------------------------------------------------
+
+def test_spatial_mirror_canonicalization():
+    """RIGHT(a,b) and LEFT(b,a) are the same predicate, both evaluators."""
+    rng = np.random.default_rng(7)
+    out = rand_outputs(rng, B=16)
+    for a in range(C):
+        for b in range(C):
+            right = Q.Spatial(a, Q.Rel.RIGHT, b)
+            left = Q.Spatial(b, Q.Rel.LEFT, a)
+            assert Q.leaf_key(right) == Q.leaf_key(left)
+            np.testing.assert_array_equal(
+                np.asarray(Q.eval_filters(right, out)),
+                np.asarray(Q.eval_filters(left, out)))
+            below = Q.Spatial(a, Q.Rel.BELOW, b)
+            above = Q.Spatial(b, Q.Rel.ABOVE, a)
+            assert Q.leaf_key(below) == Q.leaf_key(above)
+            objs = rand_objects(rng)
+            assert (Q.eval_objects(right, objs, C, GRID)
+                    == Q.eval_objects(left, objs, C, GRID))
+
+
+def test_plan_dedups_shared_leaves():
+    shared_leaf = Q.ClassCount(0, Q.Op.GE, 1)
+    queries = [Q.And((shared_leaf, Q.Count(Q.Op.GE, 2))),
+               Q.Or((shared_leaf, Q.Spatial(0, Q.Rel.RIGHT, 1))),
+               Q.Not(shared_leaf),
+               Q.And((Q.Spatial(1, Q.Rel.LEFT, 0), shared_leaf))]
+    plan = QueryPlan(queries)
+    # 7 leaf occurrences (2 + 2 + 1 + 2); uniques: shared_leaf, Count,
+    # Spatial(1 LEFT 0) — RIGHT(0,1) canonicalizes onto LEFT(1,0).
+    assert plan.n_total_leaves == 7
+    assert plan.n_unique_leaves == 3
+    assert plan.sharing_factor == pytest.approx(7 / 3)
+
+
+def test_nnf_preserves_semantics():
+    rng = np.random.default_rng(11)
+    out = rand_outputs(rng, B=16)
+    for _ in range(40):
+        q = rand_query(rng, relaxed=True)
+        nnf = Q.to_nnf(q)
+        np.testing.assert_array_equal(np.asarray(Q.eval_filters(q, out)),
+                                      np.asarray(Q.eval_filters(nnf, out)))
+
+
+# ---------------------------------------------------------------------------
+# MultiQueryCascade end-to-end
+# ---------------------------------------------------------------------------
+
+def test_multi_query_executor_shares_oracle():
+    """One oracle compaction serves all queries; answers match per-query
+    ground truth; per-query attribution adds up."""
+    rng = np.random.default_rng(3)
+    n_classes, grid, B = 3, 6, 48
+    frames = []
+    for _ in range(B):
+        n = rng.integers(0, 5)
+        frames.append([(int(rng.integers(0, n_classes)),
+                        int(rng.integers(0, grid)),
+                        int(rng.integers(0, grid))) for _ in range(n)])
+
+    queries = [Q.ClassCount(0, Q.Op.GE, 1),
+               Q.And((Q.ClassCount(0, Q.Op.GE, 1),
+                      Q.ClassCount(1, Q.Op.GE, 1))),
+               Q.Count(Q.Op.GE, 3)]
+    mqc = CS.MultiQueryCascade(queries)
+
+    def filter_fn(batch):
+        counts = np.zeros((B, n_classes), np.float32)
+        occ = np.zeros((B, grid, grid, n_classes), np.float32)
+        for i, objs in enumerate(frames):
+            for c, r, cc in objs:
+                counts[i, c] += 1
+                occ[i, r, cc, c] = 1
+        return FilterOutputs(counts=jnp.asarray(counts),
+                             grid=jnp.where(jnp.asarray(occ) > 0, 10., -10.))
+
+    oracle_calls = []
+
+    def oracle_fn(batch, idx):
+        oracle_calls.append(len(idx))
+        return [frames[j] for j in idx]
+
+    ex = CS.MultiQueryExecutor(mqc, filter_fn, oracle_fn, n_classes, grid)
+    res = ex.run_batch(jnp.zeros((B, 1)))
+
+    truth = np.stack([[Q.eval_objects(q, o, n_classes, grid) for q in queries]
+                      for o in frames])
+    np.testing.assert_array_equal(res.answers, truth)
+    assert len(oracle_calls) == 1                      # ONE shared compaction
+    assert ex.stats.oracle_calls == int(truth.any(1).sum())  # union of needs
+    assert ex.stats.filter_pass == ex.stats.oracle_calls
+    # per-query attribution: perfect filters => pass == per-query truth
+    assert ex.stats.per_query_pass == [int(truth[:, i].sum())
+                                       for i in range(len(queries))]
