@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-deps bench
+.PHONY: test test-deps bench bench-smoke
 
 # tier-1 verify
 test:
@@ -14,3 +14,8 @@ test-deps:
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
+
+# seconds-scale perf trajectory record, run per PR: staged-adaptive vs
+# exhaustive shared plan -> results/bench/multi_query_adaptive.json
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.multi_query_sharing --smoke

@@ -18,11 +18,29 @@ an upper bound no serial engine reaches (it would recompile the whole
 population on every registration), but it keeps us honest about how much
 of the win is planning vs. mere fusion.
 
-Measured: filter-evaluation throughput vs N, N in 1..64.
-Acceptance target (ISSUE 1): >= 3x vs serial at N=16.
+The second comparison (``run_adaptive``) pits the exhaustive shared plan
+against the *staged adaptive* plan (``core.plan.StagedQueryPlan``) on a
+skewed-selectivity workload: And-dominated queries guarded by a rarely-true
+count leaf, the shape a real deployment has ("alert when >= 40 cars AND
+..."), plus a sprinkle of always-true Or guards.  After a few batches of
+population statistics the staged plan decides every query at the count
+tier and skips the spatial/SAT stages entirely; the exhaustive plan pays
+for them every batch.  Also measured on the uniform workload above, where
+staging must NOT lose (all stages run; overhead is the three-valued
+propagation + one (N,) sync per stage).
+
+Measured: filter-evaluation throughput vs N, N in 1..64; staged-vs-
+exhaustive filter time at N >= 16 (acceptance, ISSUE 2), recorded in
+results/bench/multi_query_adaptive.json.
+
+    PYTHONPATH=src python -m benchmarks.multi_query_sharing [--smoke]
+
+``--smoke`` runs only the adaptive comparison at N=16 with few repeats
+(seconds) — the per-PR perf-trajectory record (``make bench-smoke``).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -31,11 +49,14 @@ import numpy as np
 
 from benchmarks.common import emit, save_result, timeit
 from repro.core import query as Q
+from repro.core.cascade import MultiQueryCascade
 from repro.core.filters import FilterOutputs
 from repro.core.plan import QueryPlan
+from repro.core.stats import SlotStats
 
 B, G, C = 64, 16, 8
 SIZES = (1, 2, 4, 8, 16, 32, 64)
+ADAPTIVE_SIZES = (16, 32, 64)
 
 
 def _leaf_pool():
@@ -85,7 +106,7 @@ def _time_serial(fns, out, repeat: int = 7) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def run() -> dict:
+def run_sharing() -> dict:
     rng = np.random.default_rng(42)
     out = FilterOutputs(
         counts=jnp.asarray(rng.normal(2, 2, (B, C)).astype(np.float32)),
@@ -128,5 +149,117 @@ def run() -> dict:
     return res
 
 
+# --------------------------------------------------------------------------
+# staged adaptive vs exhaustive shared plan (ISSUE 2 acceptance)
+# --------------------------------------------------------------------------
+
+def make_skewed_queries(n: int, seed: int = 1):
+    """And-dominated monitors guarded by a rarely-true count condition.
+
+    Most registered alerts look like "when the scene is unusually busy
+    AND <expensive spatial condition>" — the guard decides the query at
+    the count tier almost every frame, so the spatial/SAT work is pure
+    waste for an exhaustive evaluator.  A few always-true Or guards are
+    mixed in so decided-true propagation is exercised too."""
+    rng = np.random.default_rng(seed)
+    queries = []
+    for i in range(n):
+        c = int(rng.integers(0, C))
+        guard = Q.ClassCount(c, Q.Op.GE, 40)             # ~never true
+        tail = [Q.Spatial(int(rng.integers(0, C)), Q.Rel.LEFT,
+                          int(rng.integers(0, C)), radius=int(i % 3)),
+                Q.Region(int(rng.integers(0, C)),
+                         (0, 0, G // 2 + int(rng.integers(0, G // 2)), G),
+                         1, radius=int(rng.integers(0, 3)))]
+        if i % 5 == 4:        # Or guard that is ~always true
+            queries.append(Q.Or((Q.Count(Q.Op.GE, 0), tail[0], tail[1])))
+        else:
+            queries.append(Q.And((guard, *tail)))
+    return queries
+
+
+def _measure_staged(queries, out, repeat: int, warm_batches: int = 4):
+    """(us_exhaustive, us_staged, report) with warmed stats + restage."""
+    plan = QueryPlan(queries)
+    exhaustive = jax.jit(plan.evaluate)
+    stats = SlotStats()
+    staged = plan.build_staged(stats)
+    for _ in range(warm_batches):                 # learn population rates
+        staged.evaluate(out)
+        staged.flush_stats(stats)
+    staged.restage(stats)
+    np.testing.assert_array_equal(               # staging is semantics-free
+        np.asarray(staged.evaluate(out)), np.asarray(exhaustive(out)))
+    us_ex = timeit(exhaustive, out, repeat=repeat)
+    us_staged = timeit(staged.evaluate, out, repeat=repeat)
+    return us_ex, us_staged, staged.last_report
+
+
+def run_adaptive(smoke: bool = False) -> dict:
+    sizes = (16,) if smoke else ADAPTIVE_SIZES
+    repeat = 3 if smoke else 7
+    rng = np.random.default_rng(42)
+    out = FilterOutputs(
+        counts=jnp.asarray(rng.normal(2, 2, (B, C)).astype(np.float32)),
+        grid=jnp.asarray(rng.normal(0, 0.7, (B, G, G, C)).astype(np.float32)))
+
+    res = {}
+    print(f"{'workload':>10s} {'N':>4s} {'exhaustive us':>14s} "
+          f"{'staged us':>10s} {'speedup':>8s} {'cascade us':>11s} "
+          f"{'mode':>11s} {'stages':>8s}")
+    for workload, make in (("skewed", make_skewed_queries),
+                           ("uniform", make_queries)):
+        for n in sizes:
+            queries = make(n)
+            us_ex, us_staged, report = _measure_staged(
+                queries, out, repeat=repeat)
+            speedup = us_ex / us_staged
+            # the full adaptive cascade: staging + cost-model mode switch
+            # (parks staging when the workload gives it nothing to skip)
+            mqc = MultiQueryCascade(queries, adaptive=True, restage_every=8)
+            for _ in range(2 * mqc.restage_every):          # learn + decide
+                jax.block_until_ready(mqc.masks(out))
+            mode = mqc.mode
+            # freeze the decided mode: no restage boundary (and no staged
+            # probe batch) may land inside the timed window, or the JSON
+            # would blend two code paths under one label
+            mqc.restage_every = 1 << 30
+            us_casc = timeit(mqc.masks, out, repeat=repeat)
+            res[f"{workload}/N{n}"] = {
+                "us_exhaustive": us_ex, "us_staged": us_staged,
+                "speedup": speedup, "us_cascade": us_casc,
+                "cascade_speedup": us_ex / us_casc, "cascade_mode": mode,
+                "stages_run": len(report.ran),          # counts (ints) for
+                "stages_skipped": len(report.skipped),  # trajectory diffs
+                "stages_ran_names": report.ran,
+                "stages_skipped_names": report.skipped}
+            emit(f"multi_query_adaptive/{workload}/N{n}", us_staged,
+                 f"speedup={speedup:.2f}x;ran={len(report.ran)}"
+                 f"/{len(report.order)};mode={mode}")
+            print(f"{workload:>10s} {n:4d} {us_ex:14.0f} {us_staged:10.0f} "
+                  f"{speedup:7.2f}x {us_casc:11.0f} {mode:>11s} "
+                  f"{len(report.ran)}/{len(report.order)} ran")
+
+    save_result("multi_query_adaptive", res)
+    return res
+
+
+def run() -> dict:
+    res = {"sharing": run_sharing(), "adaptive": run_adaptive()}
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="adaptive comparison only, tiny budget (seconds); "
+                         "still writes results/bench/multi_query_adaptive.json")
+    args = ap.parse_args()
+    if args.smoke:
+        run_adaptive(smoke=True)
+    else:
+        run()
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -2,14 +2,25 @@
 
 Demonstrates the multi-query subsystem end to end on a synthetic stream:
 
-- ``QueryRegistry``          — live query set with epoch versioning
-- ``MultiQueryCascade``      — deduplicating shared-plan filter evaluation
-- ``MultiQueryExecutor``     — ONE union-mask oracle compaction per batch,
+- ``QueryRegistry``          — live query set with epoch versioning; owns
+                               the population ``SlotStats`` store that
+                               survives plan rebuilds
+- ``MultiQueryCascade``      — deduplicating shared-plan filter evaluation,
+                               run *staged and adaptive* here: cost tiers
+                               ordered by learned population pass rates,
+                               later tiers skipped once every query is
+                               decided (watch the staging report lines)
+- ``MultiQueryExecutor``     — ONE union-mask oracle compaction per batch
+                               (dense ``oracle_bucket`` index batches),
                                per-query attribution in the stats
 - ``MultiQueryStreamExecutor`` — hopping windows that multiplex query
                                registrations/retirements mid-stream (the
                                shared plan is rebuilt only when the
-                               registered set changes)
+                               registered set changes; each rebuild hands
+                               the registry's SlotStats to the new engine,
+                               so mid-stream registrations inherit the
+                               learned selectivities instead of starting
+                               cold)
 
 Filter outputs are derived from the stream's ground truth (oracle-grade
 branch heads) so the example runs in seconds without training; swap in
@@ -56,10 +67,13 @@ def main():
 
     engines = []
 
-    def engine_factory(queries):
-        """queries -> fn(frame_indices) -> (B, N) bool.  Rebuilt only on
-        registry epoch changes (watch ``executor.rebuilds``)."""
-        mqc = CS.MultiQueryCascade(queries)
+    def engine_factory(queries, slot_stats):
+        """(queries, registry SlotStats) -> fn(frame_indices) -> (B, N)
+        bool.  Rebuilt only on registry epoch changes (watch
+        ``executor.rebuilds``); the shared ``slot_stats`` store carries
+        the learned pass rates across rebuilds."""
+        mqc = CS.MultiQueryCascade(queries, adaptive=True,
+                                   slot_stats=slot_stats, restage_every=4)
 
         def filter_fn(idx):
             return FilterOutputs(counts=counts[idx], grid=grid[idx])
@@ -69,7 +83,8 @@ def main():
                     for j in sel]
 
         ex = CS.MultiQueryExecutor(mqc, filter_fn, oracle_fn,
-                                   scene.n_classes, scene.grid)
+                                   scene.n_classes, scene.grid,
+                                   oracle_bucket=16)
         engines.append((ex, queries))
         return lambda idx: ex.run_batch(idx).answers
 
@@ -81,11 +96,19 @@ def main():
         lo, hi = res.span
         hits = ", ".join(f"{names[qid]}={n}" for qid, n in
                          sorted(res.hits.items()))
-        print(f"window [{lo:5d}, {hi:5d})  {hits}")
+        casc = engines[-1][0].cascade
+        rep = casc.staging_report
+        # the report describes the last batch that actually ran staged;
+        # when staging is parked it would be stale — show the mode only
+        staging = (f"  [stages {len(rep.ran)}/{len(rep.order)} ran, "
+                   f"mode={casc.mode}]" if rep and casc.mode == "staged"
+                   else f"  [mode={casc.mode}]")
+        print(f"window [{lo:5d}, {hi:5d})  {hits}{staging}")
         if lo == 0:                       # mid-stream registration
             qid = registry.register(Q.Not(Q.ClassCount(1, Q.Op.GE, 1)))
             names[qid] = "no-person"
-            print("  -> registered 'no-person' (takes effect next batch)")
+            print("  -> registered 'no-person' (takes effect next batch; "
+                  f"inherits {len(registry.slot_stats)} learned slot rates)")
         if lo == args.window:             # mid-stream retirement
             registry.retire(q_busy)
             print("  -> retired 'busy'")
@@ -100,6 +123,9 @@ def main():
           f"attribution: " + ", ".join(
               f"{names[qid]}={n}" for (qid, _), n in
               zip(registry.active(), st.per_query_pass)))
+    print(f"population stats: {len(registry.slot_stats)} slots learned "
+          f"across {executor.rebuilds} engine rebuilds (stats survive "
+          f"registration churn)")
 
 
 if __name__ == "__main__":

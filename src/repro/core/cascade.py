@@ -17,9 +17,14 @@ batches.  Semantics are identical; throughput is batch-oriented.
 
 Filter ordering: the paper defers ordering optimisation to future work and
 we keep its convention (counts before locations — CF/CCF are cheaper to
-check than CLF).  ``AdaptiveOrder`` additionally reorders conjuncts by
-observed pass-rate (cheapest most-selective first), a beyond-paper
-optimisation that is measured in benchmarks/table3_query_speedup.py.
+check than CLF).  ``FilterCascade(adaptive=True)`` additionally reorders
+conjuncts by observed pass-rate (most selective first) and stops
+evaluating the remaining conjuncts once the batch's conjunction is empty
+— the batched analogue of the paper's per-frame predicate
+short-circuiting.  Those observations live in a ``SlotStats`` store
+(repro.core.stats) — the same statistics layer the staged multi-query
+planner orders its stages by, so single-query cascades and the shared
+engine learn from one ledger.
 """
 from __future__ import annotations
 
@@ -33,13 +38,15 @@ import numpy as np
 
 from repro.core import query as Q
 from repro.core.filters import FilterOutputs
+from repro.core.stats import SlotStats
 
 
 @dataclasses.dataclass
 class CascadeStats:
     frames_in: int = 0
     filter_pass: int = 0
-    oracle_calls: int = 0
+    oracle_calls: int = 0        # frames the oracle EVALUATED — includes
+                                 # bucket padding, so cost models stay honest
     oracle_positives: int = 0
     filter_time_s: float = 0.0
     oracle_time_s: float = 0.0
@@ -65,10 +72,18 @@ def _stage_cost(pred: Q.Predicate) -> int:
 
 
 class FilterCascade:
-    """Compiles a query into ordered conjunctive stages and executes them."""
+    """Compiles a query into ordered conjunctive stages and executes them.
+
+    Stage pass rates accumulate in a ``SlotStats`` store keyed by the
+    canonical stage predicate; pass ``slot_stats`` to share one
+    population-level store across cascades (and with the staged
+    multi-query planner) — a fresh cascade over a predicate the
+    population has already measured starts with its learned rate.
+    """
 
     def __init__(self, query: Q.Predicate, *, tau: float = 0.2,
-                 adaptive: bool = False):
+                 adaptive: bool = False,
+                 slot_stats: Optional[SlotStats] = None):
         self.query = query
         self.tau = tau
         self.adaptive = adaptive
@@ -78,22 +93,41 @@ class FilterCascade:
             self.stages = sorted(query.terms, key=_stage_cost)
         else:
             self.stages = [query]
-        self._pass_counts = np.ones(len(self.stages))
-        self._seen = np.ones(len(self.stages))
+        self._stage_keys = [SlotStats.key(s) for s in self.stages]
+        self.slot_stats = slot_stats if slot_stats is not None else SlotStats()
 
     def mask(self, out: FilterOutputs) -> jax.Array:
-        """(B,) candidate mask, short-circuiting stages in order."""
-        order = range(len(self.stages))
+        """(B,) candidate mask, short-circuiting stages in order.
+
+        Per-stage pass counts are kept on device while the mask is
+        assembled and pulled in ONE fetch at the end (the former
+        ``float(jnp.sum(...))`` per stage forced a host sync each
+        conjunct).  Each evaluated stage is vectorised over the whole
+        batch, so the recorded rates are *unconditional* frame-level
+        selectivities — the same quantity the staged multi-query planner
+        stores, keeping the shared ledger's entries comparable.
+
+        In adaptive mode the most-selective-first order earns its keep:
+        once the running conjunction has no survivors, the remaining
+        (costlier) conjuncts are not evaluated at all — this emptiness
+        probe is the one per-stage host sync adaptive mode pays."""
+        order = list(range(len(self.stages)))
         if self.adaptive:
-            order = np.argsort(self._pass_counts / self._seen)
+            rates = self.slot_stats.pass_rates(self._stage_keys,
+                                               canonical=True)
+            order = list(np.argsort(rates, kind="stable"))
         m = None
-        for i in order:
+        observed: List[Tuple[int, jax.Array]] = []   # deferred stat scalars
+        for k, i in enumerate(order):
             mi = Q.eval_filters(self.stages[i], out, tau=self.tau)
-            alive = mi if m is None else (m & mi)
-            self._seen[i] += float(mi.shape[0] if m is None
-                                   else jnp.sum(m))
-            self._pass_counts[i] += float(jnp.sum(alive))
-            m = alive
+            m = mi if m is None else (m & mi)
+            observed.append((i, jnp.sum(mi)))
+            if self.adaptive and k + 1 < len(order) and not bool(m.any()):
+                break              # empty conjunction: skip later conjuncts
+        counts = np.asarray(jnp.stack([c for _, c in observed]))  # ONE fetch
+        self.slot_stats.observe_many(
+            [self._stage_keys[i] for i, _ in observed], counts,
+            seen=float(m.shape[0]), canonical=True)
         return m
 
 
@@ -111,6 +145,41 @@ def compact_survivors(mask: jax.Array, *arrays: jax.Array,
     idx = order[:bucket]
     gathered = tuple(a[idx] for a in arrays)
     return n, gathered, idx
+
+
+def bucketed_oracle(oracle_fn: Callable[[Any, np.ndarray], List],
+                    batch, idx: np.ndarray,
+                    bucket: Optional[int]) -> List:
+    """Run the oracle over survivors in dense, fixed-size index batches.
+
+    With ``bucket`` set, every oracle invocation receives exactly
+    ``bucket`` indices (the tail is padded by repeating the last
+    survivor), so a jitted/compiled oracle sees one shape instead of a
+    fresh shape per batch; padded results are dropped.  Without a bucket
+    this is a single ragged call (the original behaviour).  Use
+    ``oracle_frames_evaluated`` for the true oracle workload — padding
+    frames cost oracle time even though their results are discarded."""
+    if idx.size == 0:
+        return []
+    if not bucket:
+        return list(oracle_fn(batch, idx))
+    out: List = []
+    for k in range(0, idx.size, bucket):
+        chunk = idx[k:k + bucket]
+        pad = bucket - chunk.size
+        if pad:
+            chunk = np.concatenate(
+                [chunk, np.full(pad, chunk[-1], chunk.dtype)])
+        out.extend(list(oracle_fn(batch, chunk))[:bucket - pad])
+    return out
+
+
+def oracle_frames_evaluated(n_survivors: int, bucket: Optional[int]) -> int:
+    """Frames ``bucketed_oracle`` actually runs the oracle on: survivors
+    rounded up to whole buckets (the padding is real oracle work)."""
+    if not bucket or n_survivors == 0:
+        return n_survivors
+    return -(-n_survivors // bucket) * bucket
 
 
 @dataclasses.dataclass
@@ -153,14 +222,16 @@ class CascadeExecutor:
         idx = np.nonzero(mask)[0]
         t2 = t1
         if idx.size:
-            objs = self.oracle_fn(batch, idx)
+            objs = bucketed_oracle(self.oracle_fn, batch, idx,
+                                   self.oracle_bucket)
             t2 = time.perf_counter()
             for j, obj_list in zip(idx, objs):
                 answers[j] = Q.eval_objects(self.cascade.query, obj_list,
                                             self.n_classes, self.grid)
         self.stats.frames_in += B
         self.stats.filter_pass += int(mask.sum())
-        self.stats.oracle_calls += int(idx.size)
+        self.stats.oracle_calls += oracle_frames_evaluated(
+            int(idx.size), self.oracle_bucket)
         self.stats.oracle_positives += int(answers.sum())
         self.stats.filter_time_s += t1 - t0
         self.stats.oracle_time_s += t2 - t1
@@ -180,18 +251,100 @@ class MultiQueryCascade:
     registered queries overlap.  ``masks`` returns the per-query (B, N)
     candidate matrix; derive the union a shared oracle pass needs from it
     (``masks(out).any(-1)``) rather than re-running the plan.
+
+    With ``adaptive=True`` the plan runs *staged* (plan.StagedQueryPlan):
+    cost tiers ordered by population-level pass rates from a ``SlotStats``
+    store, short-circuiting whole tiers once every query is decided.
+    Observed pass rates feed back after every batch (one deferred device
+    fetch) and the staging order is recomputed every ``restage_every``
+    batches — recompiling only the stages whose order actually moved.
+    Pass a shared ``slot_stats`` (e.g. the ``QueryRegistry``'s) so plan
+    rebuilds on registration churn inherit the learned selectivities.
+
+    Staging pays ~``step_overhead`` cost units per executed stage (the
+    three-valued propagation + the per-stage undecided sync); on a
+    workload where nothing gets skipped that is pure loss, so the cascade
+    compares the observed staged cost against the exhaustive plan's under
+    the same static cost model at every restage boundary and *parks*
+    staging when it is not earning its keep — the exhaustive path then
+    runs ``evaluate_with_counts`` so the population statistics keep
+    learning, and staging is probed again one batch per boundary in case
+    the traffic turned skewed.  ``mode`` is "staged" or "exhaustive".
     """
 
-    def __init__(self, queries: Sequence[Q.Predicate], *, tau: float = 0.2):
+    def __init__(self, queries: Sequence[Q.Predicate], *, tau: float = 0.2,
+                 adaptive: bool = False,
+                 slot_stats: Optional[SlotStats] = None,
+                 restage_every: int = 16, step_overhead: float = 4.0):
         from repro.core.plan import QueryPlan
         self.queries = tuple(queries)
         self.tau = tau
+        self.adaptive = adaptive
+        self.restage_every = restage_every
+        self.step_overhead = step_overhead
         self.plan = QueryPlan(self.queries, tau=tau)
+        if slot_stats is not None and not adaptive:
+            # a forgotten adaptive=True would otherwise silently leave the
+            # shared population store unread AND unfed for the whole stream
+            raise ValueError("slot_stats is only read/updated by the "
+                             "adaptive cascade; pass adaptive=True")
+        if restage_every < 1:
+            raise ValueError(f"restage_every must be >= 1, "
+                             f"got {restage_every}")
+        self.slot_stats = (slot_stats if slot_stats is not None
+                           else SlotStats()) if adaptive else None
+        self._staged = (self.plan.build_staged(self.slot_stats)
+                        if adaptive else None)
         self._jitted = jax.jit(self.plan.evaluate)
+        self._jitted_counts = jax.jit(self.plan.evaluate_with_counts)
+        self._batches = 0
+        self._cost_staged = 0.0      # modelled cost of staged batches
+        self._cost_exhaustive = 0.0  # modelled cost had they run exhaustive
+        self.mode = "staged" if adaptive else "exhaustive"
+        self.restages = 0
+
+    def _run_staged(self, out: FilterOutputs) -> jax.Array:
+        m = self._staged.evaluate(out)
+        self._staged.flush_stats(self.slot_stats)
+        rep = self._staged.last_report
+        self._cost_staged += (rep.cost_run
+                              + self.step_overhead * rep.stages_run)
+        self._cost_exhaustive += rep.cost_total
+        return m
+
+    def _flush_exhaustive_counts(self, counts: jax.Array, B: int) -> None:
+        self.slot_stats.observe_many(self.plan.slot_keys, np.asarray(counts),
+                                     B, canonical=True)
 
     def masks(self, out: FilterOutputs) -> jax.Array:
         """(B, N) per-query candidate masks."""
-        return self._jitted(out)
+        if self._staged is None:
+            return self._jitted(out)
+        self._batches += 1
+        boundary = self._batches % self.restage_every == 0
+        # the exhaustive program evaluates EVERY leaf, so it is infeasible
+        # on a grid-needing plan fed count-only (OD-COF) outputs — the
+        # staged path may still answer those batches from the count tier
+        # alone, so a parked mode must not crash them
+        exhaustive_infeasible = self.plan._needs_grid and out.grid is None
+        if self.mode == "staged" or boundary or exhaustive_infeasible:
+            m = self._run_staged(out)            # boundary probes staging
+        else:
+            m, counts = self._jitted_counts(out)
+            self._flush_exhaustive_counts(counts, m.shape[0])
+        if boundary:
+            # park or un-park staging on the observed cost balance, then
+            # re-sort the stages from the freshest population rates
+            self.mode = ("staged" if self._cost_staged < self._cost_exhaustive
+                         else "exhaustive")
+            self._cost_staged = self._cost_exhaustive = 0.0
+            self.restages += int(self._staged.restage(self.slot_stats))
+        return m
+
+    @property
+    def staging_report(self):
+        """Last staged batch's stage execution report (adaptive mode)."""
+        return self._staged.last_report if self._staged is not None else None
 
 
 @dataclasses.dataclass
@@ -207,17 +360,23 @@ class MultiQueryExecutor:
     The oracle runs once on frames where *any* query's filter passes;
     ``stats.per_query_pass`` attributes the surviving frames per query so
     an operator can see which registration is paying for the oracle load.
+    With ``oracle_bucket`` set, survivors are fed to the oracle in dense
+    fixed-size index batches (``bucketed_oracle``) so a compiled oracle
+    sees one shape; each surviving frame's object list is parsed into an
+    ``ObjectTable`` once and shared by every query probing that frame.
     """
 
     def __init__(self, cascade: MultiQueryCascade,
                  filter_fn: Callable[[Any], FilterOutputs],
                  oracle_fn: Callable[[Any, np.ndarray], List],
-                 n_classes: int, grid: int):
+                 n_classes: int, grid: int,
+                 oracle_bucket: Optional[int] = None):
         self.cascade = cascade
         self.filter_fn = filter_fn
         self.oracle_fn = oracle_fn
         self.n_classes = n_classes
         self.grid = grid
+        self.oracle_bucket = oracle_bucket
         self.stats = CascadeStats(
             per_query_pass=[0] * len(cascade.queries))
 
@@ -234,16 +393,19 @@ class MultiQueryExecutor:
         answers = np.zeros((B, N), bool)
         t2 = t1
         if idx.size:
-            objs = self.oracle_fn(batch, idx)
+            objs = bucketed_oracle(self.oracle_fn, batch, idx,
+                                   self.oracle_bucket)
             t2 = time.perf_counter()
             for j, obj_list in zip(idx, objs):
+                table = Q.ObjectTable.from_objects(obj_list)  # parse ONCE
                 for qi in np.nonzero(masks[j])[0]:
                     answers[j, qi] = Q.eval_objects(
-                        self.cascade.queries[qi], obj_list,
+                        self.cascade.queries[qi], table,
                         self.n_classes, self.grid)
         self.stats.frames_in += B
         self.stats.filter_pass += int(union.sum())
-        self.stats.oracle_calls += int(idx.size)
+        self.stats.oracle_calls += oracle_frames_evaluated(
+            int(idx.size), self.oracle_bucket)
         self.stats.oracle_positives += int(answers.any(1).sum())
         for qi in range(N):
             self.stats.per_query_pass[qi] += int(masks[:, qi].sum())

@@ -39,17 +39,48 @@ leaf; with N registered queries that work is repeated N times per batch.
     The Python loop is over tree *depth* (tiny), never over queries.  Root
     columns of the final value matrix are the per-query (B, N) masks.
 
+4.  **Staged adaptive execution** (``StagedQueryPlan``).  ``evaluate``
+    runs every slot every batch; the staged plan instead partitions the
+    slots into cost tiers matching the lowering groups above — count
+    gathers, then the spatial-stats tier, then one stage per Region
+    dilation radius — and evaluates stage by stage with **three-valued
+    propagation** through the NNF incidence program: after each stage,
+    two passes of the levelized program (unknown literals forced to 0,
+    then to 1) yield a lower/upper bound per (frame, query); a query
+    column whose bounds agree is *decided* (And/Or gates are monotone, so
+    the bounds are exact).  Execution stops the moment every query column
+    is decided, and a stage whose slots no longer influence any undecided
+    query column is skipped entirely — the cross-query analogue of the
+    paper's per-query cheapest-first conjunct ordering, including never
+    touching the grid when the count tier already answers everything.
+
+    Stage order, and the slot order within each stage, come from
+    **population-level statistics**: a ``SlotStats`` store
+    (repro.core.stats) keyed by canonical leaf accumulates observed pass
+    rates over every registered query's traffic, and stages are sorted by
+    static-cost / expected-decisions (cheapest, most selective, most
+    widely-referenced first).  The spatial tier is additionally
+    class-sliced (``kernels.spatial_predicate.stage_class_slice``): the
+    stats reduction only reads the grid planes the population's leaves
+    mention.  Observed per-slot pass counts are accumulated on device and
+    fetched in ONE deferred transfer per batch (``flush_stats``);
+    ``restage`` re-sorts the stages when the learned rates change the
+    order.  Within each stage the evaluation keeps the fixed-shape,
+    loop-free formulation of the exhaustive plan, so every stage function
+    jits once and stays jit-cache-stable across batches.
+
 The shared evaluation is bit-identical to running ``eval_filters`` per
-query (property-tested in tests/test_query_properties.py); it is purely a
-work-sharing transformation.  Cross-query *ordering* of the shared leaf
-set (cheapest most-selective slot first, aggregated over the whole query
-population) is an open item in ROADMAP.md.
+query, and the staged plan is bit-identical to ``evaluate`` under every
+stage order and statistics state (property-tested in
+tests/test_query_properties.py); staging is purely a work-skipping
+transformation — boolean dilation composes exactly, and the SAT /
+extremum arithmetic is integer-exact in float32.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
-from typing import Dict, List, Sequence, Tuple
+from collections import OrderedDict, defaultdict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +92,16 @@ from repro.kernels import spatial_predicate as SP
 
 _I32_MAX = np.iinfo(np.int32).max
 _I32_MIN = np.iinfo(np.int32).min
+
+# Static stage-cost model (relative units; roughly XLA-on-CPU op counts —
+# ROADMAP: calibrate from benchmarks/kernel_microbench.py).  A count stage
+# is one gather over a (B, C+1) table; the spatial tier is a full-grid
+# projection reduction; a region stage thresholds, dilates ``radius``
+# times, and builds a summed-area table with two (g, g) matmuls.
+_COST_COUNT = 1.0
+_COST_SPATIAL = 6.0
+_COST_REGION = 10.0
+_COST_DILATE_STEP = 2.0
 
 
 def _count_bounds(op: Q.Op, value: int, tol: int) -> Tuple[int, int]:
@@ -82,11 +123,23 @@ class _Level:
     required: np.ndarray        # (P,) n_children for And, 1 for Or
 
 
+@dataclasses.dataclass
+class _Stage:
+    """One cost tier of the staged plan (a lowering group of slots)."""
+    name: str
+    kind: str                   # 'count' | 'spatial' | 'region'
+    slots: np.ndarray           # slot columns this stage decides
+    cost: float
+    payload: Tuple              # kind-specific baked index arrays
+
+
 class QueryPlan:
     """Compiles N query ASTs into one shared batched evaluation.
 
     ``evaluate(out) -> (B, N) bool`` is pure and jit-compatible; all index
     arrays and incidence matrices are baked at plan-build time.
+    ``build_staged`` wraps the same lowering in the adaptive stage-by-stage
+    executor (see module docstring §4).
     """
 
     def __init__(self, queries: Sequence[Q.Predicate], *, tau: float = 0.2):
@@ -105,6 +158,18 @@ class QueryPlan:
                 if key not in self._slots:
                     self._slots[key] = len(self._slots)
         self.n_unique_leaves = len(self._slots)
+        self.slot_keys: List[Q.Predicate] = [None] * self.n_unique_leaves
+        for key, slot in self._slots.items():
+            self.slot_keys[slot] = key
+
+        # query <-> slot incidence, the population weight behind adaptive
+        # ordering and the undecided-set stage-skip test
+        self.query_slot_incidence = np.zeros(
+            (len(self.queries), self.n_unique_leaves), bool)
+        for qi, q in enumerate(self.queries):
+            for leaf in Q.leaves(q):
+                self.query_slot_incidence[qi, self._slots[Q.leaf_key(leaf)]] \
+                    = True
 
         # ---- lower slots by kind into grouped numpy index tables ----
         cnt: List[Tuple[int, int, int, int]] = []    # (slot, cls|C, lo, hi)
@@ -203,6 +268,60 @@ class QueryPlan:
                 incidence=inc,
                 required=np.array(required, np.float32)))
 
+    # -- grouped leaf evaluation ------------------------------------------
+
+    def _count_values(self, out: FilterOutputs,
+                      payload: Optional[Tuple] = None) -> jax.Array:
+        """(B, k) bool for the count-gather group (CF/CCF interval tests)."""
+        _, cls, lo, hi = payload if payload is not None else self._cnt
+        counts = out.count_pred()                          # (B, C) int32
+        ext = jnp.concatenate([counts, counts.sum(-1, keepdims=True)],
+                              axis=1)
+        x = ext[:, cls]                # cls == -1 wraps to the total col
+        return (x >= jnp.asarray(lo)) & (x <= jnp.asarray(hi))
+
+    def _spatial_values(self, out: FilterOutputs,
+                        payload: Optional[Tuple] = None,
+                        class_slice: Optional[Tuple] = None) -> jax.Array:
+        """(B, k) bool for the spatial tier from the fused (C', 5) stats.
+
+        ``class_slice=(classes, a_idx, b_idx)`` gathers only the grid
+        planes the tier's leaves reference before the reduction
+        (stage-sliced evaluation) — bit-identical, per-class stats are
+        independent."""
+        _, a, b, use_row, radius = payload if payload is not None \
+            else self._spa
+        g = out.grid.shape[1]
+        if class_slice is not None and \
+                len(class_slice[0]) < out.grid.shape[-1]:
+            classes, a, b = class_slice
+            from repro.kernels import ops as kops
+            stats = kops.spatial_stats_inline(
+                out.grid[..., jnp.asarray(classes)], self.tau)
+        else:
+            stats = out.spatial_stats(self.tau)
+        return SP.eval_spatial_leaves(
+            stats, jnp.asarray(a), jnp.asarray(b), jnp.asarray(use_row),
+            jnp.asarray(radius), grid=g)
+
+    def _region_sat_values(self, occ: jax.Array, cls: np.ndarray,
+                           rects: np.ndarray, minc: np.ndarray) -> jax.Array:
+        """(B, k) bool rectangle-count tests on an (already dilated)
+        occupancy map, via one summed-area table.
+
+        The prefix sums run as (g, g) triangular matmuls — exact for
+        0/1 cell sums and far cheaper than XLA's cumsum lowering
+        on CPU (~5 ms vs ~0.1 ms on a (64, 16, 16, 8) grid)."""
+        g = occ.shape[1]
+        tri = jnp.tril(jnp.ones((g, g), jnp.float32))
+        s = jnp.einsum("ij,bjkc->bikc", tri, occ.astype(jnp.float32))
+        s = jnp.einsum("kl,bilc->bikc", tri, s)
+        sat = jnp.pad(s, ((0, 0), (1, 0), (1, 0), (0, 0)))
+        r0, c0, r1, c1 = (rects[:, k] for k in range(4))
+        inside = (sat[:, r1, c1] - sat[:, r0, c1]
+                  - sat[:, r1, c0] + sat[:, r0, c0])       # (B, n, C)
+        return inside[:, np.arange(len(cls)), cls] >= jnp.asarray(minc)
+
     # -- leaf matrix ------------------------------------------------------
 
     def leaf_values(self, out: FilterOutputs) -> jax.Array:
@@ -216,21 +335,11 @@ class QueryPlan:
         parts: List[jax.Array] = []
         cols: List[np.ndarray] = []
         if self._cnt is not None:
-            slots, cls, lo, hi = self._cnt
-            counts = out.count_pred()                          # (B, C) int32
-            ext = jnp.concatenate([counts, counts.sum(-1, keepdims=True)],
-                                  axis=1)
-            x = ext[:, cls]                # cls == -1 wraps to the total col
-            parts.append((x >= jnp.asarray(lo)) & (x <= jnp.asarray(hi)))
-            cols.append(slots)
+            parts.append(self._count_values(out))
+            cols.append(self._cnt[0])
         if self._spa is not None:
-            slots, a, b, use_row, radius = self._spa
-            g = out.grid.shape[1]
-            stats = out.spatial_stats(self.tau)
-            parts.append(SP.eval_spatial_leaves(
-                stats, jnp.asarray(a), jnp.asarray(b), jnp.asarray(use_row),
-                jnp.asarray(radius), grid=g))
-            cols.append(slots)
+            parts.append(self._spatial_values(out))
+            cols.append(self._spa[0])
         if self._reg:
             from repro.core import cam as CAM
             occ = out.occupancy(self.tau)        # ONE threshold pass, bool
@@ -240,21 +349,7 @@ class QueryPlan:
                     occ = CAM.dilate_manhattan(  # radius r from radius r-1
                         occ, radius - prev_radius)
                     prev_radius = radius
-                # summed-area table: every rectangle count of this radius
-                # is 4 gathers, no per-leaf grid scan / mask einsum.  The
-                # prefix sums run as (g, g) triangular matmuls — exact for
-                # 0/1 cell sums and far cheaper than XLA's cumsum lowering
-                # on CPU (~5 ms vs ~0.1 ms on a (64, 16, 16, 8) grid).
-                g = occ.shape[1]
-                tri = jnp.tril(jnp.ones((g, g), jnp.float32))
-                s = jnp.einsum("ij,bjkc->bikc", tri, occ.astype(jnp.float32))
-                s = jnp.einsum("kl,bilc->bikc", tri, s)
-                sat = jnp.pad(s, ((0, 0), (1, 0), (1, 0), (0, 0)))
-                r0, c0, r1, c1 = (rects[:, k] for k in range(4))
-                inside = (sat[:, r1, c1] - sat[:, r0, c1]
-                          - sat[:, r1, c0] + sat[:, r0, c0])   # (B, n, C)
-                parts.append(inside[:, np.arange(len(cls)), cls]
-                             >= jnp.asarray(minc))
+                parts.append(self._region_sat_values(occ, cls, rects, minc))
                 cols.append(slots)
         order = np.concatenate(cols)
         inv = np.empty(self.n_unique_leaves, np.int64)
@@ -263,9 +358,10 @@ class QueryPlan:
 
     # -- full evaluation --------------------------------------------------
 
-    def evaluate(self, out: FilterOutputs) -> jax.Array:
-        """(B, N) per-query candidate masks from one shared leaf pass."""
-        leaf = self.leaf_values(out).astype(jnp.float32)
+    def _assemble(self, leaf: jax.Array) -> jax.Array:
+        """(B, L) bool leaf matrix -> (B, N) root masks via the levelized
+        incidence program."""
+        leaf = leaf.astype(jnp.float32)
         B = leaf.shape[0]
         vals = jnp.concatenate(
             [leaf, jnp.zeros((B, self.n_internal), jnp.float32)], axis=1)
@@ -279,10 +375,365 @@ class QueryPlan:
         masks = vals[:, self._roots] > 0.5
         return masks ^ jnp.asarray(self._root_neg)
 
+    def evaluate(self, out: FilterOutputs) -> jax.Array:
+        """(B, N) per-query candidate masks from one shared leaf pass."""
+        return self._assemble(self.leaf_values(out))
+
+    def evaluate_with_counts(self, out: FilterOutputs
+                             ) -> Tuple[jax.Array, jax.Array]:
+        """``(masks (B, N), per-slot pass counts (L,))`` in one program —
+        the exhaustive path of the adaptive cascade uses this so the
+        population statistics keep learning while staging is parked."""
+        leaf = self.leaf_values(out)
+        return self._assemble(leaf), leaf.sum(0)
+
+    # -- three-valued propagation (staged execution) ----------------------
+
+    def propagate_bounds(self, leaf_vals: jax.Array,
+                         known: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Partial-knowledge evaluation of every query.
+
+        ``leaf_vals``: (B, L) bool with arbitrary values at unknown slots;
+        ``known``: (L,) bool.  Returns ``(value, decided)``, both (B, N)
+        bool: the levelized program runs twice — unknown literals forced
+        to 0 (lower bound) then to 1 (upper bound).  And/Or gates are
+        monotone in their children, so the two runs bracket the true
+        value exactly and agreement means *decided* (``value`` is then
+        the exact answer, bit-identical to ``evaluate``)."""
+        leaf = leaf_vals.astype(jnp.float32)
+        B = leaf.shape[0]
+        known_ext = jnp.concatenate(
+            [known, jnp.ones((self.n_internal,), bool)])
+
+        def run(fill: float) -> jax.Array:
+            vals = jnp.concatenate(
+                [leaf, jnp.zeros((B, self.n_internal), jnp.float32)], axis=1)
+            for lev in self._levels:
+                child = vals[:, lev.child_idx]
+                child = jnp.where(jnp.asarray(lev.child_neg),
+                                  1.0 - child, child)
+                child = jnp.where(known_ext[lev.child_idx], child,
+                                  jnp.float32(fill))
+                sums = jnp.einsum("bk,pk->bp", child,
+                                  jnp.asarray(lev.incidence))
+                newv = (sums >= jnp.asarray(lev.required) - 0.5)
+                vals = vals.at[:, lev.node_ids].set(newv.astype(jnp.float32))
+            root = vals[:, self._roots] > 0.5
+            return jnp.where(known_ext[self._roots], root, fill > 0.5)
+
+        lo_raw = run(0.0)
+        hi_raw = run(1.0)
+        # a negated root literal (NNF Not over a bare-leaf query) swaps
+        # the bounds: lower(~x) = ~upper(x)
+        neg = jnp.asarray(self._root_neg)
+        lo = jnp.where(neg, ~hi_raw, lo_raw)
+        hi = jnp.where(neg, ~lo_raw, hi_raw)
+        return lo, lo == hi
+
+    # -- staging ----------------------------------------------------------
+
+    def stage_descriptors(self) -> List[_Stage]:
+        """The plan's cost tiers, unordered (lowering-group granularity)."""
+        stages: List[_Stage] = []
+        if self._cnt is not None:
+            stages.append(_Stage("counts", "count", self._cnt[0],
+                                 _COST_COUNT, self._cnt))
+        if self._spa is not None:
+            stages.append(_Stage("spatial", "spatial", self._spa[0],
+                                 _COST_SPATIAL, self._spa))
+        for radius, slots, cls, rects, minc in self._reg:
+            stages.append(_Stage(f"region@r{radius}", "region", slots,
+                                 _COST_REGION + _COST_DILATE_STEP * radius,
+                                 (radius, slots, cls, rects, minc)))
+        return stages
+
+    def exhaustive_cost_model(self) -> float:
+        """Static-model cost of one ``evaluate`` call.  Differs from the
+        sum of staged stage costs: the exhaustive program thresholds the
+        grid once and dilates incrementally radius-to-radius, while each
+        staged region stage dilates from scratch (it must be skippable
+        and reorderable) — the mode-switch comparison in the adaptive
+        cascade has to use THIS as the exhaustive baseline or staging
+        looks better than it is on multi-radius plans."""
+        cost = 0.0
+        if self._cnt is not None:
+            cost += _COST_COUNT
+        if self._spa is not None:
+            cost += _COST_SPATIAL
+        prev_radius = 0
+        for radius, *_ in self._reg:
+            cost += _COST_REGION + _COST_DILATE_STEP * (radius - prev_radius)
+            prev_radius = radius
+        return cost
+
+    def build_staged(self, stats=None, *,
+                     order: Optional[Sequence[int]] = None
+                     ) -> "StagedQueryPlan":
+        """Adaptive stage-by-stage executor over this plan's lowering."""
+        return StagedQueryPlan(self, stats, order=order)
+
     @property
     def sharing_factor(self) -> float:
         """total leaves across queries / unique evaluated leaves (>= 1)."""
         return self.n_total_leaves / max(self.n_unique_leaves, 1)
+
+
+# --------------------------------------------------------------------------
+# Staged adaptive execution
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StageReport:
+    """What one ``StagedQueryPlan.evaluate`` call actually did."""
+    order: List[str] = dataclasses.field(default_factory=list)
+    ran: List[str] = dataclasses.field(default_factory=list)
+    skipped: List[str] = dataclasses.field(default_factory=list)
+    undecided_after: List[int] = dataclasses.field(default_factory=list)
+    cost_run: float = 0.0       # static-model cost of executed stages
+    cost_total: float = 0.0     # static-model cost of the EXHAUSTIVE plan
+                                # (shared threshold, incremental dilation —
+                                # less than the sum of staged stage costs)
+
+    @property
+    def stages_run(self) -> int:
+        return len(self.ran)
+
+
+class StagedQueryPlan:
+    """Stage-by-stage evaluation of a ``QueryPlan`` with short-circuiting.
+
+    Evaluation walks the cost tiers in ``self.order`` (population-level
+    cheapest/most-decisive first, from a ``SlotStats`` store); after each
+    tier, three-valued propagation (``QueryPlan.propagate_bounds``) marks
+    every (frame, query) cell decided-true / decided-false / undecided.
+    The walk stops once every query column is decided, and skips any tier
+    none of whose slots appears in a still-undecided query — decidedness
+    is monotone in the known-slot set, so skipped tiers can never affect
+    the result, and the returned masks are bit-identical to
+    ``QueryPlan.evaluate``.
+
+    Each executed tier is ONE jitted *step*: stage evaluation, scatter
+    into the leaf matrix, both propagation passes, the per-column
+    undecided reduction, and the per-slot pass-count accumulation, fused
+    into a single fixed-shape program with the known-slot mask baked as
+    a constant (steps are cached per (stage, set-of-stages-already-run),
+    and real traffic revisits a handful of such prefixes).  The only
+    host round-trip per executed tier is the tiny (N,) undecided-columns
+    fetch that drives the short-circuit.  Per-slot pass counts stay on
+    device until ``flush_stats`` pulls them in one deferred transfer.
+    """
+
+    def __init__(self, plan: QueryPlan, stats=None, *,
+                 order: Optional[Sequence[int]] = None):
+        self.plan = plan
+        self.stages = plan.stage_descriptors()
+        # (N, n_stages) — does query q own a slot in stage s?
+        self._uses_stage = np.stack(
+            [plan.query_slot_incidence[:, st.slots].any(1)
+             for st in self.stages], axis=1)
+        # population weight per slot: how many registered queries read it
+        self._slot_weight = plan.query_slot_incidence.sum(0).astype(float)
+        self.order, self._perms = self._staging_order(stats)
+        self._forced_order = order is not None
+        if order is not None:
+            if sorted(order) != list(range(len(self.stages))):
+                raise ValueError(f"order must permute stages "
+                                 f"0..{len(self.stages) - 1}, got {order!r}")
+            self.order = list(order)
+        # fused step cache: (stage, frozenset(stages already run)) -> fn.
+        # LRU-bounded: the key space is exponential in the stage count in
+        # the worst case (every undecided pattern is a distinct prefix),
+        # but real traffic revisits a handful of prefixes — evicting cold
+        # entries caps compiled-program memory over a long-running stream
+        # at the price of a re-trace if an evicted pattern ever recurs.
+        self._steps: "OrderedDict[Tuple[int, frozenset], Callable]" = \
+            OrderedDict()
+        self.step_cache_max = 32
+        self.last_report: Optional[StageReport] = None
+        self._pending: Optional[Tuple[List[Tuple[np.ndarray, jax.Array]],
+                                      int]] = None
+
+    # -- ordering ---------------------------------------------------------
+
+    def _slot_rates(self, stats) -> np.ndarray:
+        """(L,) prior-smoothed pass rate per slot, quantized so a stable
+        order does not flap (and re-jit) on statistical noise."""
+        if stats is None:
+            return np.full(self.plan.n_unique_leaves, 0.5)
+        rates = stats.pass_rates(self.plan.slot_keys, canonical=True)
+        return np.round(rates, 3)
+
+    def _staging_order(self, stats
+                       ) -> Tuple[List[int], Dict[int, np.ndarray]]:
+        """Sort stages by cost per expected decision; slots within a stage
+        most-selective first.
+
+        A stage's *benefit* aggregates over the registered population:
+        sum over its slots of (queries referencing the slot) x (1 - pass
+        rate) — a cheap stage whose slots fail often for many queries
+        runs first, the classic cascade rule lifted from one query's
+        conjuncts to the whole query set."""
+        rates = self._slot_rates(stats)
+        scores = []
+        for si, st in enumerate(self.stages):
+            benefit = float(np.sum(self._slot_weight[st.slots]
+                                   * (1.0 - rates[st.slots])))
+            scores.append(st.cost / (benefit + 1e-3))
+        order = sorted(range(len(self.stages)), key=lambda s: (scores[s], s))
+        perms = {si: np.argsort(rates[st.slots], kind="stable")
+                 for si, st in enumerate(self.stages)}
+        return order, perms
+
+    def restage(self, stats) -> bool:
+        """Re-sort stages/slots from the population stats.  Returns True
+        when anything changed.  A stage whose within-stage slot order
+        moved re-jits lazily (its cached steps are dropped); a pure stage
+        re-ordering keeps every compiled step — step identity is (stage,
+        set of stages already run), not position.  An explicit ``order=``
+        given at construction is sticky: restage only refreshes the
+        within-stage slot permutations, never the forced stage order."""
+        order, perms = self._staging_order(stats)
+        if self._forced_order:
+            order = self.order
+        changed = order != self.order
+        for si in range(len(self.stages)):
+            if not np.array_equal(perms[si], self._perms[si]):
+                self._perms[si] = perms[si]
+                self._steps = OrderedDict(
+                    (k, f) for k, f in self._steps.items() if k[0] != si)
+                changed = True
+        self.order = order
+        return changed
+
+    # -- stage compilation ------------------------------------------------
+
+    def _stage_body(self, si: int) -> Callable:
+        """``out -> (B, k) bool`` for one stage, slot-permuted (unjitted)."""
+        plan = self.plan
+        st = self.stages[si]
+        perm = self._perms[si]
+        if st.kind == "count":
+            slots, cls, lo, hi = st.payload
+            payload = (slots[perm], cls[perm], lo[perm], hi[perm])
+            return lambda out: plan._count_values(out, payload)
+        if st.kind == "spatial":
+            slots, a, b, use_row, radius = st.payload
+            payload = (slots[perm], a[perm], b[perm], use_row[perm],
+                       radius[perm])
+            classes, a_idx, b_idx = SP.stage_class_slice(payload[1],
+                                                         payload[2])
+            cs = (classes, a_idx, b_idx)
+            return lambda out: plan._spatial_values(out, payload,
+                                                    class_slice=cs)
+        from repro.core import cam as CAM
+        radius, slots, cls, rects, minc = st.payload
+        cls, rects, minc = cls[perm], rects[perm], minc[perm]
+
+        def body(out, radius=radius, cls=cls, rects=rects, minc=minc):
+            occ = out.occupancy(plan.tau)
+            if radius:              # boolean dilation composes exactly, so
+                occ = CAM.dilate_manhattan(occ, radius)     # from-scratch
+            return plan._region_sat_values(occ, cls, rects, minc)
+
+        return body
+
+    def _stage_slots(self, si: int) -> np.ndarray:
+        return self.stages[si].slots[self._perms[si]]
+
+    def _get_step(self, si: int, ran: frozenset) -> Callable:
+        """Fused jitted step for stage ``si`` given the set of stages that
+        already ran: eval + scatter + both propagation passes + undecided
+        reduction + pass counts, one program.  The known-slot mask is a
+        trace-time constant, so the propagation's unknown-literal selects
+        fold away."""
+        step = self._steps.get((si, ran))
+        if step is not None:
+            self._steps.move_to_end((si, ran))
+            return step
+        plan = self.plan
+        body = self._stage_body(si)
+        slots = self._stage_slots(si)
+        known = np.zeros(plan.n_unique_leaves, bool)
+        for sj in ran:
+            known[self.stages[sj].slots] = True
+        known[slots] = True
+
+        def step_fn(out, leaf_vals):
+            vals = body(out)                               # (B, k) bool
+            leaf_vals = leaf_vals.at[:, slots].set(vals)
+            value, decided = plan.propagate_bounds(leaf_vals, known)
+            return leaf_vals, value, ~decided.all(0), vals.sum(0)
+
+        step = jax.jit(step_fn)
+        self._steps[(si, ran)] = step
+        while len(self._steps) > self.step_cache_max:
+            self._steps.popitem(last=False)              # evict coldest
+        return step
+
+    # -- execution --------------------------------------------------------
+
+    def evaluate(self, out: FilterOutputs) -> jax.Array:
+        """(B, N) bool masks, bit-identical to ``QueryPlan.evaluate`` —
+        but stages stop/skip as soon as the undecided set allows."""
+        plan = self.plan
+        B = out.counts.shape[0]
+        leaf_vals = jnp.zeros((B, plan.n_unique_leaves), bool)
+        undecided = np.ones(len(plan.queries), bool)
+        report = StageReport(order=[self.stages[s].name for s in self.order],
+                             cost_total=plan.exhaustive_cost_model())
+        pending: List[Tuple[np.ndarray, jax.Array]] = []
+        ran: frozenset = frozenset()
+        value = None
+        for si in self.order:
+            st = self.stages[si]
+            if not (self._uses_stage[:, si] & undecided).any():
+                report.skipped.append(st.name)
+                continue
+            if st.kind != "count" and out.grid is None:
+                raise ValueError(
+                    f"stage {st.name!r} has Spatial/Region leaves of an "
+                    f"undecided query but the filter head emits no grid "
+                    f"(OD-COF)")
+            step = self._get_step(si, ran)
+            leaf_vals, value, undec, counts = step(out, leaf_vals)
+            pending.append((self._stage_slots(si), counts))  # deferred stats
+            undecided = np.asarray(undec)                    # (N,) fetch
+            ran = ran | {si}
+            report.ran.append(st.name)
+            report.cost_run += st.cost
+            report.undecided_after.append(int(undecided.sum()))
+            if not undecided.any():
+                break
+        assert value is not None, "every query owns at least one slot"
+        report.skipped.extend(self.stages[si].name for si in
+                              self.order[len(report.ran)
+                                         + len(report.skipped):])
+        self.last_report = report
+        self._pending = (pending, B)
+        return value
+
+    def flush_stats(self, stats) -> None:
+        """Fold the last batch's per-slot pass counts into ``stats`` with
+        ONE device fetch (counts were accumulated on device per stage)."""
+        if not self._pending:
+            return
+        pending, B = self._pending
+        self._pending = None
+        if not pending:
+            return
+        counts = np.asarray(jnp.concatenate([c for _, c in pending]))
+        slots = np.concatenate([s for s, _ in pending])
+        stats.observe_many([self.plan.slot_keys[s] for s in slots], counts,
+                           B, canonical=True)
+
+    def describe(self) -> List[Dict]:
+        """Operator view of the current staging (order, cost, slots)."""
+        return [{"stage": self.stages[si].name,
+                 "kind": self.stages[si].kind,
+                 "cost": self.stages[si].cost,
+                 "slots": [repr(self.plan.slot_keys[s])
+                           for s in self._stage_slots(si)]}
+                for si in self.order]
 
 
 def plan_queries(queries: Sequence[Q.Predicate], *,

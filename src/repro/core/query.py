@@ -130,6 +130,22 @@ def leaf_key(q: Predicate):
     return canonicalize_leaf(q)
 
 
+def canonicalize(q: Predicate) -> Predicate:
+    """Recursive canonicalization: every leaf of the tree is replaced by
+    its ``canonicalize_leaf`` spelling, connectives preserved.
+
+    Idempotent, and equal to ``leaf_key`` on leaves — this is the key
+    function of the population statistics store (repro.core.stats), so a
+    cascade stage over RIGHT(a, b) and a plan slot over LEFT(b, a)
+    accumulate into one entry."""
+    if isinstance(q, (And, Or)):
+        terms = tuple(canonicalize(t) for t in q.terms)
+        return And(terms) if isinstance(q, And) else Or(terms)
+    if isinstance(q, Not):
+        return Not(canonicalize(q.term))
+    return canonicalize_leaf(q)
+
+
 def to_nnf(q: Predicate, negate: bool = False) -> Predicate:
     """Negation normal form: push Not down to the leaves (De Morgan).
 
@@ -236,24 +252,61 @@ def objects_to_grid(objs: np.ndarray, n_classes: int, grid: int) -> np.ndarray:
     return occ
 
 
-def eval_objects(q: Predicate, objs: Sequence[Tuple[int, int, int]],
-                 n_classes: int, grid: int) -> bool:
-    """Exact semantics on an oracle object list [(cls, row, col), ...]."""
-    arr = np.asarray(list(objs), dtype=np.int64).reshape(-1, 3)
+class ObjectTable:
+    """An oracle object list parsed ONCE into a (n, 3) int64 table.
+
+    ``eval_objects`` historically re-materialized ``np.asarray(list(objs))``
+    at every node of the recursion, for every (frame, query) pair; a shared
+    multi-query oracle pass evaluates many queries on the same surviving
+    frame, so the executor builds one table per frame and every query (and
+    every node within a query) reuses it.  Per-class row subsets are memoized
+    too — Spatial/Region leaves of different queries about the same class
+    share the filter."""
+
+    __slots__ = ("arr", "_by_class")
+
+    def __init__(self, arr: np.ndarray):
+        self.arr = arr
+        self._by_class: Dict[int, np.ndarray] = {}
+
+    @classmethod
+    def from_objects(cls, objs) -> "ObjectTable":
+        if isinstance(objs, ObjectTable):
+            return objs
+        return cls(np.asarray(list(objs), dtype=np.int64).reshape(-1, 3))
+
+    def of_class(self, c: int) -> np.ndarray:
+        sub = self._by_class.get(c)
+        if sub is None:
+            sub = self.arr[self.arr[:, 0] == c]
+            self._by_class[c] = sub
+        return sub
+
+    def __len__(self) -> int:
+        return len(self.arr)
+
+
+def eval_objects(q: Predicate, objs, n_classes: int, grid: int) -> bool:
+    """Exact semantics on an oracle object list [(cls, row, col), ...] or a
+    pre-parsed ``ObjectTable`` (hoisted parsing for shared oracle passes)."""
+    return _eval_table(q, ObjectTable.from_objects(objs), n_classes, grid)
+
+
+def _eval_table(q: Predicate, t: ObjectTable, n_classes: int,
+                grid: int) -> bool:
     if isinstance(q, And):
-        return all(eval_objects(t, objs, n_classes, grid) for t in q.terms)
+        return all(_eval_table(x, t, n_classes, grid) for x in q.terms)
     if isinstance(q, Or):
-        return any(eval_objects(t, objs, n_classes, grid) for t in q.terms)
+        return any(_eval_table(x, t, n_classes, grid) for x in q.terms)
     if isinstance(q, Not):
-        return not eval_objects(q.term, objs, n_classes, grid)
+        return not _eval_table(q.term, t, n_classes, grid)
     if isinstance(q, Count):
-        return bool(_cmp(np.int64(len(arr)), q.op, q.value, 0))
+        return bool(_cmp(np.int64(len(t)), q.op, q.value, 0))
     if isinstance(q, ClassCount):
-        return bool(_cmp(np.int64((arr[:, 0] == q.cls).sum()), q.op,
-                         q.value, 0))
+        return bool(_cmp(np.int64(len(t.of_class(q.cls))), q.op, q.value, 0))
     if isinstance(q, Spatial):
-        a = arr[arr[:, 0] == q.cls_a]
-        b = arr[arr[:, 0] == q.cls_b]
+        a = t.of_class(q.cls_a)
+        b = t.of_class(q.cls_b)
         if len(a) == 0 or len(b) == 0:
             return False
         if q.rel == Rel.LEFT:
@@ -264,7 +317,7 @@ def eval_objects(q: Predicate, objs: Sequence[Tuple[int, int, int]],
             return bool(a[:, 1].min() < b[:, 1].max())
         return bool(a[:, 1].max() > b[:, 1].min())
     if isinstance(q, Region):
-        a = arr[arr[:, 0] == q.cls]
+        a = t.of_class(q.cls)
         r0, c0, r1, c1 = q.rect
         inside = ((a[:, 1] >= r0) & (a[:, 1] < r1) &
                   (a[:, 2] >= c0) & (a[:, 2] < c1))

@@ -1,0 +1,110 @@
+"""Unified cascade statistics: population-level pass rates per predicate.
+
+``SlotStats`` is the one store behind every adaptive-ordering decision in
+the system.  It maps a *canonical* predicate (``query.canonicalize`` —
+e.g. RIGHT(a, b) and LEFT(b, a) share one entry) to observed
+(passed, seen) frame counts, aggregated over the **whole registered query
+population** rather than per query:
+
+- ``FilterCascade(adaptive=True)`` records per-stage unconditional
+  frame-level pass rates here (replacing its former private
+  ``_pass_counts/_seen`` arrays), so a single-query cascade and the
+  shared multi-query plan learn from — and agree on — one ledger.
+- ``StagedQueryPlan`` (repro.core.plan) orders its cost-tier stages and
+  the slots within them by these rates, and feeds observations back in
+  one deferred device fetch per batch.
+- ``QueryRegistry`` (repro.core.streaming) owns a store that outlives
+  epoch-lazy plan rebuilds, so a query registered mid-stream inherits the
+  population's learned selectivities instead of restarting cold.
+
+Rates are smoothed by a weak prior (``prior_pass/prior_seen``, default
+1/2 -> cold rate 0.5) so a slot never divides by zero and cold slots sort
+deterministically between observed extremes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, Sequence
+
+import numpy as np
+
+from repro.core import query as Q
+
+
+class SlotStats:
+    """Pass-rate store keyed by canonical predicate (``query.canonicalize``).
+
+    ``passed``/``seen`` are float frame counts; ``pass_rate`` is the
+    prior-smoothed ratio.  Keys may be handed in as raw predicates —
+    they are canonicalized on every access, so mirror spellings of the
+    same test always hit the same entry.
+    """
+
+    def __init__(self, *, prior_pass: float = 1.0, prior_seen: float = 2.0):
+        if prior_seen <= 0:
+            raise ValueError("prior_seen must be positive")
+        self.prior_pass = float(prior_pass)
+        self.prior_seen = float(prior_seen)
+        self._passed: Dict[Hashable, float] = {}
+        self._seen: Dict[Hashable, float] = {}
+
+    @staticmethod
+    def key(pred) -> Hashable:
+        """Canonical, hashable identity of a predicate (leaf or tree)."""
+        return Q.canonicalize(pred)
+
+    # ``canonical=True`` on the accessors below skips re-canonicalization
+    # for callers whose keys were precomputed with ``key()`` at build time
+    # (the per-batch feedback loops: StagedQueryPlan.flush_stats,
+    # FilterCascade.mask) — canonicalizing a query tree allocates a fresh
+    # dataclass tree, which has no place in a per-slot-per-batch loop.
+
+    # -- updates ----------------------------------------------------------
+
+    def observe(self, pred, passed: float, seen: float, *,
+                canonical: bool = False) -> None:
+        """Record that ``pred`` was evaluated on ``seen`` frames and let
+        ``passed`` of them through."""
+        if seen <= 0:
+            return
+        k = pred if canonical else self.key(pred)
+        self._passed[k] = self._passed.get(k, 0.0) + float(passed)
+        self._seen[k] = self._seen.get(k, 0.0) + float(seen)
+
+    def observe_many(self, preds: Sequence, passed, seen: float, *,
+                     canonical: bool = False) -> None:
+        """Batch update: every predicate was evaluated on the same
+        ``seen`` frames.  The ONE place the per-batch feedback loops
+        (FilterCascade.mask, StagedQueryPlan.flush_stats, the adaptive
+        cascade's exhaustive path) fold fetched counts into the ledger —
+        future changes to the feedback contract (decay, windowing) land
+        here once."""
+        for p, n in zip(preds, passed):
+            self.observe(p, float(n), seen, canonical=canonical)
+
+    # -- reads ------------------------------------------------------------
+
+    def pass_rate(self, pred, *, canonical: bool = False) -> float:
+        k = pred if canonical else self.key(pred)
+        return ((self._passed.get(k, 0.0) + self.prior_pass)
+                / (self._seen.get(k, 0.0) + self.prior_seen))
+
+    def pass_rates(self, preds: Sequence, *,
+                   canonical: bool = False) -> np.ndarray:
+        return np.array([self.pass_rate(p, canonical=canonical)
+                         for p in preds], np.float64)
+
+    def seen(self, pred, *, canonical: bool = False) -> float:
+        return self._seen.get(pred if canonical else self.key(pred), 0.0)
+
+    def snapshot(self) -> Dict[Hashable, Dict[str, float]]:
+        """Reporting view: key -> {passed, seen, rate}."""
+        return {k: {"passed": self._passed[k], "seen": self._seen[k],
+                    "rate": (self._passed[k] + self.prior_pass)
+                            / (self._seen[k] + self.prior_seen)}
+                for k in self._seen}
+
+    def __len__(self) -> int:
+        return len(self._seen)
+
+    def __repr__(self) -> str:
+        return f"SlotStats({len(self)} slots)"

@@ -11,10 +11,13 @@ engine is rebuilt only when the registered set actually changes).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
+
+from repro.core.stats import SlotStats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,17 +119,38 @@ class StreamExecutor:
 # Multi-query multiplexing (queries come and go mid-stream)
 # --------------------------------------------------------------------------
 
+def _accepts_stats(factory: Callable) -> bool:
+    """Does the engine factory opt into the (queries, slot_stats) contract?
+
+    Opt-in is by parameter NAME — a parameter called ``slot_stats`` —
+    never by arity: a legacy one-arg factory that happens to carry an
+    unrelated second default (``def factory(queries, tau=0.2)``) must not
+    silently receive a SlotStats object as ``tau``."""
+    try:
+        params = inspect.signature(factory).parameters
+    except (TypeError, ValueError):
+        return False
+    p = params.get("slot_stats")
+    return p is not None and p.kind in (
+        inspect.Parameter.POSITIONAL_OR_KEYWORD,
+        inspect.Parameter.KEYWORD_ONLY)
+
 class QueryRegistry:
     """Live set of registered queries with epoch versioning.
 
     ``epoch`` bumps on every register/retire, so executors can rebuild
     their shared-cascade plan lazily — only when the set changed, never
-    per batch."""
+    per batch.  The registry also owns the population's ``SlotStats``
+    store: plan rebuilds triggered by registration churn hand the same
+    store to the next engine, so a query registered mid-stream inherits
+    the learned per-slot selectivities instead of re-observing them from
+    a cold start."""
 
-    def __init__(self):
+    def __init__(self, slot_stats: Optional[SlotStats] = None):
         self._next_id = 0
         self._active: Dict[int, Any] = {}
         self.epoch = 0
+        self.slot_stats = slot_stats if slot_stats is not None else SlotStats()
 
     def register(self, query) -> int:
         qid = self._next_id
@@ -136,6 +160,11 @@ class QueryRegistry:
         return qid
 
     def retire(self, qid: int) -> None:
+        if qid not in self._active:
+            raise ValueError(
+                f"cannot retire query id {qid}: not registered (already "
+                f"retired, or never issued by this registry); active ids: "
+                f"{sorted(self._active)}")
         del self._active[qid]
         self.epoch += 1
 
@@ -166,12 +195,20 @@ class MultiQueryStreamExecutor:
     so registrations/retirements take effect at the next batch boundary
     without recompiling anything while the query set is stable.
 
+    A factory whose signature declares a parameter named ``slot_stats``
+    is called as ``engine_factory(queries, slot_stats=...)`` with the
+    registry's population statistics store — adaptive engines built
+    across epoch rebuilds then share one learned-selectivity ledger
+    (pass it to ``MultiQueryCascade(..., adaptive=True, slot_stats=...)``).
+    The opt-in is by parameter name, never arity, so legacy factories
+    with unrelated defaults keep the one-argument contract.
+
     ``on_window(result)`` fires after each hopping window and may
     register/retire queries (mid-stream multiplexing).
     """
 
     def __init__(self, registry: QueryRegistry,
-                 engine_factory: Callable[[Tuple[Any, ...]],
+                 engine_factory: Callable[...,
                                           Callable[[np.ndarray], np.ndarray]],
                  window: HoppingWindow, batch: int):
         self.registry = registry
@@ -182,13 +219,21 @@ class MultiQueryStreamExecutor:
         self._epoch = -1
         self._engine: Optional[Callable] = None
         self._qids: Tuple[int, ...] = ()
+        self._factory_takes_stats = _accepts_stats(engine_factory)
 
     def _refresh(self):
         if self.registry.epoch != self._epoch:
             items = self.registry.active()
             self._qids = tuple(qid for qid, _ in items)
-            self._engine = (self.engine_factory(
-                tuple(q for _, q in items)) if items else None)
+            if not items:
+                self._engine = None
+            else:
+                queries = tuple(q for _, q in items)
+                self._engine = (
+                    self.engine_factory(
+                        queries, slot_stats=self.registry.slot_stats)
+                    if self._factory_takes_stats
+                    else self.engine_factory(queries))
             self._epoch = self.registry.epoch
             self.rebuilds += 1
         return self._engine, self._qids

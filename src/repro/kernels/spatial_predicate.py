@@ -15,9 +15,11 @@ Grid (B,): one frame per step; the (g^2 x C) logits tile lives in VMEM
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 
@@ -53,6 +55,28 @@ def spatial_stats_bgc(grid_logits: jax.Array, *, tau: float = 0.2,
         out_shape=jax.ShapeDtypeStruct((B, C, 5), jnp.float32),
         interpret=interpret,
     )(flat)
+
+
+def stage_class_slice(cls_a: np.ndarray, cls_b: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stage-sliced leaf evaluation: compact the class set a stage touches.
+
+    The staged planner (repro.core.plan.StagedQueryPlan) evaluates the
+    spatial tier as its own stage; when the registered population only
+    references a few of the C classes, reducing the full (B, g, g, C) grid
+    wastes VMEM bandwidth on planes no leaf reads.  Returns
+    ``(classes, a_idx, b_idx)``: the sorted unique class ids the stage's
+    leaves mention, and the leaf arrays remapped into that compact set.
+    The caller gathers ``grid[..., classes]`` *before* the stats reduction
+    (so the kernel reduces C' <= C planes) and feeds ``a_idx``/``b_idx`` to
+    ``eval_spatial_leaves`` — per-class statistics are independent, so the
+    sliced evaluation is bit-identical to the full one.
+    """
+    classes, inv = np.unique(np.concatenate([cls_a, cls_b]),
+                             return_inverse=True)
+    a_idx = inv[:len(cls_a)].astype(np.int32)
+    b_idx = inv[len(cls_a):].astype(np.int32)
+    return classes.astype(np.int32), a_idx, b_idx
 
 
 def eval_spatial_leaves(stats: jax.Array, cls_a: jax.Array, cls_b: jax.Array,

@@ -1,8 +1,10 @@
-"""Synthetic streams, windows, straggler mitigation."""
+"""Synthetic streams, windows, straggler mitigation, query registry."""
 import numpy as np
 import pytest
 
+from repro.core.stats import SlotStats
 from repro.core.streaming import (FrameSampler, HoppingWindow,
+                                  MultiQueryStreamExecutor, QueryRegistry,
                                   StragglerPolicy, StreamExecutor)
 from repro.data.synthetic import (PRESETS, SceneConfig, VideoStream,
                                   collect, class_weights)
@@ -117,3 +119,123 @@ def test_straggler_exact_deadline_boundary():
     assert stats2.frames_dropped > 0                  # past the boundary
     assert (stats2.frames_processed + stats2.frames_dropped
             == stats2.frames_seen)
+
+
+# ---------------------------------------------------------------------------
+# QueryRegistry: retire semantics + population stats carry
+# ---------------------------------------------------------------------------
+
+def test_registry_retire_unknown_and_double_raise_value_error():
+    reg = QueryRegistry()
+    qid = reg.register("q0")
+    with pytest.raises(ValueError, match="not registered"):
+        reg.retire(qid + 1)                     # never issued
+    reg.retire(qid)
+    with pytest.raises(ValueError, match=f"retire query id {qid}"):
+        reg.retire(qid)                         # double retire
+    # failed retires must not bump the epoch (no spurious plan rebuilds)
+    assert reg.epoch == 2                       # register + one real retire
+
+
+def test_registry_retire_during_on_window():
+    """Retiring (and double-retiring) from the on_window callback: the
+    next window runs with the smaller set; the error is catchable and
+    leaves the registry usable."""
+    reg = QueryRegistry()
+    qa = reg.register("a")
+    qb = reg.register("b")
+    widths = []
+
+    def engine_factory(queries):
+        n = len(queries)
+        return lambda idx: np.ones((len(idx), n), bool)
+
+    ex = MultiQueryStreamExecutor(reg, engine_factory,
+                                  HoppingWindow(size=10, advance=10),
+                                  batch=5)
+    errors = []
+
+    def on_window(res):
+        widths.append(sorted(res.hits))
+        if len(widths) == 1:
+            reg.retire(qa)
+            try:
+                reg.retire(qa)                  # double retire, mid-window
+            except ValueError as e:
+                errors.append(e)
+
+    results = ex.run(30, on_window)
+    assert widths == [[qa, qb], [qb], [qb]]
+    assert len(errors) == 1
+    assert ex.rebuilds == 2                     # initial + post-retire only
+    assert [r.hits[qb] for r in results] == [10, 10, 10]
+
+
+def test_registry_slot_stats_carried_across_rebuilds():
+    """A stats-aware engine factory receives the registry's OWN SlotStats
+    store on every epoch rebuild (mid-stream registrations inherit the
+    learned selectivities); a 1-arg factory keeps the old contract."""
+    reg = QueryRegistry()
+    reg.register("a")
+    seen_stats = []
+
+    def factory(queries, slot_stats):
+        seen_stats.append(slot_stats)
+        slot_stats.observe("leaf", passed=3, seen=10)
+        return lambda idx: np.ones((len(idx), len(queries)), bool)
+
+    ex = MultiQueryStreamExecutor(reg, factory,
+                                  HoppingWindow(size=4, advance=4), batch=4)
+
+    def on_window(res):
+        if len(seen_stats) == 1:
+            reg.register("b")                   # forces an engine rebuild
+
+    ex.run(12, on_window)
+    assert len(seen_stats) == 2                 # one per epoch rebuild
+    assert all(s is reg.slot_stats for s in seen_stats)
+    assert reg.slot_stats.seen("leaf") == 20    # accumulated, never reset
+
+    legacy_calls = []
+
+    def legacy_factory(queries):
+        legacy_calls.append(queries)
+        return lambda idx: np.ones((len(idx), len(queries)), bool)
+
+    ex2 = MultiQueryStreamExecutor(QueryRegistry(), legacy_factory,
+                                   HoppingWindow(size=4, advance=4), batch=4)
+    reg2 = ex2.registry
+    reg2.register("only")
+    ex2.run(4)
+    assert legacy_calls == [("only",)]
+
+
+def test_stats_opt_in_is_by_name_not_arity():
+    """A factory with an unrelated second default (def f(queries, tau=..))
+    must NOT receive the SlotStats store — opt-in is the parameter name
+    ``slot_stats`` only."""
+    taus = []
+
+    def factory_with_default(queries, tau=0.2):
+        taus.append(tau)
+        return lambda idx: np.ones((len(idx), len(queries)), bool)
+
+    reg = QueryRegistry()
+    reg.register("q")
+    ex = MultiQueryStreamExecutor(reg, factory_with_default,
+                                  HoppingWindow(size=4, advance=4), batch=4)
+    ex.run(4)
+    assert taus == [0.2]                        # default untouched
+
+    stores = []
+
+    def kw_only_factory(queries, *, slot_stats):
+        stores.append(slot_stats)
+        return lambda idx: np.ones((len(idx), len(queries)), bool)
+
+    reg2 = QueryRegistry()
+    reg2.register("q")
+    ex2 = MultiQueryStreamExecutor(reg2, kw_only_factory,
+                                   HoppingWindow(size=4, advance=4), batch=4)
+    ex2.run(4)
+    assert stores == [reg2.slot_stats]          # keyword-only opt-in works

@@ -24,6 +24,7 @@ from repro.core import cascade as CS
 from repro.core import query as Q
 from repro.core.filters import FilterOutputs
 from repro.core.plan import QueryPlan
+from repro.core.stats import SlotStats
 
 GRID, C = 6, 3
 
@@ -139,6 +140,158 @@ def test_plan_handles_count_only_heads():
 
 
 # ---------------------------------------------------------------------------
+# invariant 3: staged adaptive plan ≡ exhaustive plan (bit-identical)
+# ---------------------------------------------------------------------------
+
+def rand_stat_state(rng, plan) -> SlotStats:
+    """A random but plausible statistics state over the plan's slots."""
+    stats = SlotStats()
+    for key in plan.slot_keys:
+        if rng.random() < 0.8:        # some slots stay cold
+            seen = float(rng.integers(1, 500))
+            stats.observe(key, passed=float(rng.integers(0, int(seen) + 1)),
+                          seen=seen)
+    return stats
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_staged_plan_identical_to_exhaustive(seed):
+    """Staging is a pure work-skipping transformation: for ANY query set,
+    ANY stage order, and ANY statistics state, the staged plan's masks are
+    bit-identical to ``QueryPlan.evaluate`` — including after observing
+    real traffic and restaging."""
+    rng = np.random.default_rng(200 + seed)
+    queries = [rand_query(rng, relaxed=True) for _ in range(6)]
+    plan = QueryPlan(queries)
+    out = rand_outputs(rng, B=16)
+    want = np.asarray(plan.evaluate(out))
+
+    # (a) cold stats, default order
+    stats = SlotStats()
+    staged = plan.build_staged(stats)
+    np.testing.assert_array_equal(np.asarray(staged.evaluate(out)), want)
+
+    # (b) an explicit random stage ordering (adversarial: expensive first)
+    order = list(rng.permutation(len(staged.stages)))
+    forced = plan.build_staged(stats, order=order)
+    np.testing.assert_array_equal(np.asarray(forced.evaluate(out)), want)
+
+    # (c) a random statistics state (random induced order), then learn
+    # from observed traffic and restage
+    st = rand_stat_state(rng, plan)
+    adaptive = plan.build_staged(st)
+    np.testing.assert_array_equal(np.asarray(adaptive.evaluate(out)), want)
+    adaptive.flush_stats(st)
+    adaptive.restage(st)
+    np.testing.assert_array_equal(np.asarray(adaptive.evaluate(out)), want)
+
+
+def test_staged_plan_rejects_bad_order():
+    plan = QueryPlan([Q.Count(Q.Op.GE, 1), Q.ClassCount(0, Q.Op.GE, 1)])
+    with pytest.raises(ValueError):
+        plan.build_staged(None, order=[0, 0])
+
+
+def test_staged_plan_explicit_order_sticky_across_restage():
+    """restage() must not clobber an explicitly forced stage order."""
+    rng = np.random.default_rng(77)
+    plan = QueryPlan([Q.And((Q.Count(Q.Op.GE, 1),
+                             Q.Spatial(0, Q.Rel.LEFT, 1)))])
+    stats = SlotStats()
+    forced = plan.build_staged(stats, order=[1, 0])   # expensive tier first
+    assert forced.order == [1, 0]
+    out = rand_outputs(rng, B=16)
+    want = np.asarray(plan.evaluate(out))
+    np.testing.assert_array_equal(np.asarray(forced.evaluate(out)), want)
+    forced.flush_stats(stats)
+    forced.restage(stats)
+    assert forced.order == [1, 0]                     # still forced
+    np.testing.assert_array_equal(np.asarray(forced.evaluate(out)), want)
+
+
+def test_stage1_decided_batch_never_touches_grid_stages():
+    """When the count tier decides every query, the spatial/SAT stages are
+    skipped outright — proven by evaluating with NO grid at all (any grid
+    touch would raise), and by the stage report."""
+    queries = [
+        Q.And((Q.ClassCount(0, Q.Op.GE, 50),          # ~never true -> False
+               Q.Spatial(0, Q.Rel.LEFT, 1))),
+        Q.Or((Q.Count(Q.Op.GE, 0),                    # always true -> True
+              Q.Region(1, (0, 0, 3, 3), 1, radius=1))),
+        Q.Not(Q.ClassCount(2, Q.Op.GE, 50)),          # decided-true
+    ]
+    plan = QueryPlan(queries)
+    out = FilterOutputs(counts=jnp.asarray(np.ones((8, C), np.float32)),
+                        grid=None)
+    with pytest.raises(ValueError):                   # exhaustive needs grid
+        plan.evaluate(out)
+    staged = plan.build_staged(SlotStats())
+    masks = np.asarray(staged.evaluate(out))
+    np.testing.assert_array_equal(masks,
+                                  np.tile([False, True, True], (8, 1)))
+    rep = staged.last_report
+    assert rep.ran == ["counts"]
+    assert set(rep.skipped) == {"spatial", "region@r1"}
+    assert rep.undecided_after == [0]
+
+
+def test_staged_stats_feedback_one_fetch_and_rates():
+    """flush_stats folds the batch's per-slot pass counts into the store;
+    learned rates match the actual leaf pass rates."""
+    rng = np.random.default_rng(5)
+    leaf_a = Q.ClassCount(0, Q.Op.GE, 2)
+    leaf_b = Q.Spatial(0, Q.Rel.RIGHT, 1)     # canonicalizes to LEFT(1, 0)
+    plan = QueryPlan([Q.And((leaf_a, leaf_b))])
+    out = rand_outputs(rng, B=40)
+    stats = SlotStats()
+    staged = plan.build_staged(stats)
+    staged.evaluate(out)
+    staged.flush_stats(stats)
+    truth_a = float(np.asarray(Q.eval_filters(leaf_a, out)).sum())
+    assert stats.seen(leaf_a) == 40
+    assert stats.pass_rate(leaf_a) == pytest.approx(
+        (truth_a + 1.0) / (40 + 2.0))
+    # mirror spelling accumulates into the same canonical entry
+    if stats.seen(leaf_b):
+        assert stats.seen(Q.Spatial(1, Q.Rel.LEFT, 0)) == stats.seen(leaf_b)
+
+
+def test_adaptive_cascade_never_parks_onto_infeasible_exhaustive_path():
+    """A grid-needing plan fed OD-COF (grid=None) outputs can only run
+    staged (count tier decides everything); the mode switch must keep
+    answering those batches even if it decides to park staging."""
+    queries = [Q.And((Q.ClassCount(0, Q.Op.GE, 50),
+                      Q.Spatial(0, Q.Rel.LEFT, 1))),
+               Q.Or((Q.Count(Q.Op.GE, 0), Q.Region(1, (0, 0, 3, 3), 1)))]
+    # step_overhead high enough that the cost model WANTS to park
+    mqc = CS.MultiQueryCascade(queries, adaptive=True, restage_every=2,
+                               step_overhead=1000.0)
+    out = FilterOutputs(counts=jnp.asarray(np.ones((8, C), np.float32)),
+                        grid=None)
+    for _ in range(6):                        # crosses several boundaries
+        masks = np.asarray(mqc.masks(out))
+        np.testing.assert_array_equal(masks, np.tile([False, True], (8, 1)))
+    assert mqc.mode == "exhaustive"           # parked, yet still answering
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_adaptive_cascade_matches_exhaustive_across_batches(seed):
+    """MultiQueryCascade(adaptive=True) stays bit-identical to the
+    exhaustive cascade across batches, stat feedback, restages, and the
+    staged<->exhaustive mode switch."""
+    rng = np.random.default_rng(300 + seed)
+    queries = [rand_query(rng, relaxed=True) for _ in range(6)]
+    adaptive = CS.MultiQueryCascade(queries, adaptive=True, restage_every=3)
+    exhaustive = CS.MultiQueryCascade(queries)
+    for _ in range(8):
+        out = rand_outputs(rng, B=16)
+        np.testing.assert_array_equal(np.asarray(adaptive.masks(out)),
+                                      np.asarray(exhaustive.masks(out)))
+    assert adaptive.mode in ("staged", "exhaustive")
+    assert len(adaptive.slot_stats) > 0
+
+
+# ---------------------------------------------------------------------------
 # canonicalization + dedup
 # ---------------------------------------------------------------------------
 
@@ -236,3 +389,89 @@ def test_multi_query_executor_shares_oracle():
     # per-query attribution: perfect filters => pass == per-query truth
     assert ex.stats.per_query_pass == [int(truth[:, i].sum())
                                        for i in range(len(queries))]
+
+
+def test_multi_query_executor_oracle_bucket():
+    """With oracle_bucket set, every oracle invocation receives a dense
+    fixed-size index batch (padded tail) and answers are unchanged."""
+    rng = np.random.default_rng(9)
+    n_classes, grid, B, bucket = 3, 6, 40, 8
+    frames = []
+    for _ in range(B):
+        n = rng.integers(0, 5)
+        frames.append([(int(rng.integers(0, n_classes)),
+                        int(rng.integers(0, grid)),
+                        int(rng.integers(0, grid))) for _ in range(n)])
+
+    queries = [Q.ClassCount(0, Q.Op.GE, 1), Q.Count(Q.Op.GE, 2)]
+    mqc = CS.MultiQueryCascade(queries)
+
+    def filter_fn(batch):
+        counts = np.zeros((B, n_classes), np.float32)
+        occ = np.zeros((B, grid, grid, n_classes), np.float32)
+        for i, objs in enumerate(frames):
+            for c, r, cc in objs:
+                counts[i, c] += 1
+                occ[i, r, cc, c] = 1
+        return FilterOutputs(counts=jnp.asarray(counts),
+                             grid=jnp.where(jnp.asarray(occ) > 0, 10., -10.))
+
+    call_sizes = []
+
+    def oracle_fn(batch, idx):
+        call_sizes.append(len(idx))
+        return [frames[j] for j in idx]
+
+    ex = CS.MultiQueryExecutor(mqc, filter_fn, oracle_fn, n_classes, grid,
+                               oracle_bucket=bucket)
+    res = ex.run_batch(jnp.zeros((B, 1)))
+
+    truth = np.stack([[Q.eval_objects(q, o, n_classes, grid) for q in queries]
+                      for o in frames])
+    np.testing.assert_array_equal(res.answers, truth)
+    n_survivors = int(truth.any(1).sum())
+    assert call_sizes and all(s == bucket for s in call_sizes)
+    assert len(call_sizes) == -(-n_survivors // bucket)      # ceil division
+    # cost accounting is honest: padding frames ARE oracle work
+    assert ex.stats.oracle_calls == len(call_sizes) * bucket
+    assert ex.stats.filter_pass == n_survivors
+
+
+def test_filter_cascade_adaptive_short_circuits_empty_conjunction():
+    """Once the batch conjunction is empty, later conjuncts are not
+    evaluated; the returned mask is still exactly eval_filters'."""
+    rng = np.random.default_rng(13)
+    out = rand_outputs(rng, B=32)
+    evaluated = []
+    orig = Q.eval_filters
+
+    def spy(q, o, **kw):
+        evaluated.append(type(q).__name__)
+        return orig(q, o, **kw)
+
+    query = Q.And((Q.ClassCount(0, Q.Op.GE, 99),      # ~never true guard
+                   Q.Spatial(0, Q.Rel.LEFT, 1),
+                   Q.Region(1, (0, 0, 4, 4), 1)))
+    casc = CS.FilterCascade(query, adaptive=True)
+    m1 = np.asarray(casc.mask(out))                   # learn the rates
+    np.testing.assert_array_equal(m1, np.asarray(orig(query, out)))
+    CS.Q.eval_filters, evaluated[:] = spy, []
+    try:
+        m2 = np.asarray(casc.mask(out))
+    finally:
+        CS.Q.eval_filters = orig
+    np.testing.assert_array_equal(m2, m1)
+    assert evaluated == ["ClassCount"]                # guard emptied the mask
+
+
+def test_object_table_matches_raw_lists():
+    """ObjectTable-backed evaluation is the same exact semantics; the
+    table is reusable across queries (parse-once hoist)."""
+    rng = np.random.default_rng(21)
+    for _ in range(50):
+        objs = rand_objects(rng)
+        table = Q.ObjectTable.from_objects(objs)
+        assert Q.ObjectTable.from_objects(table) is table    # idempotent
+        q = rand_query(rng, relaxed=False)
+        assert (Q.eval_objects(q, table, C, GRID)
+                == Q.eval_objects(q, objs, C, GRID))
