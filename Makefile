@@ -2,11 +2,17 @@
 
 PY ?= python
 
-.PHONY: test test-deps bench bench-smoke
+.PHONY: test test-fast test-deps bench bench-smoke
 
-# tier-1 verify
+# tier-1 verify (full hypothesis profile — the default)
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# quick iteration: trimmed hypothesis example budgets (tests/conftest.py
+# registers the profiles; without hypothesis installed this just runs the
+# seeded fallbacks, same as `make test`)
+test-fast:
+	REPRO_HYPOTHESIS_PROFILE=ci PYTHONPATH=src $(PY) -m pytest -x -q
 
 # optional extras (hypothesis) — the suite is green without them
 test-deps:

@@ -27,10 +27,20 @@ population statistics the staged plan decides every query at the count
 tier and skips the spatial/SAT stages entirely; the exhaustive plan pays
 for them every batch.  Also measured on the uniform workload above, where
 staging must NOT lose (all stages run; overhead is the three-valued
-propagation + one (N,) sync per stage).
+propagation + one (N + B,) sync per stage).
+
+The third workload (``rowskew``) is the row-level short-circuiting case
+(ISSUE 3): a shared "scene is busy" count guard that is true on ~10% of
+frames, so the count tier decides ~90% of the *rows* but the spatial/SAT
+tiers are still needed for the rest.  PR 2's tier-granular executor
+(reproduced with ``min_bucket >= B``, i.e. row compaction disabled) runs
+those tiers on the full batch; the row-compacting executor runs them on a
+power-of-two bucket of undecided rows.  ``row_compaction_speedup`` in the
+JSON is that head-to-head on identical queries and batches — the
+filter-time improvement over the PR 2 staged numbers.
 
 Measured: filter-evaluation throughput vs N, N in 1..64; staged-vs-
-exhaustive filter time at N >= 16 (acceptance, ISSUE 2), recorded in
+exhaustive filter time and row-compaction speedup at N >= 16, recorded in
 results/bench/multi_query_adaptive.json.
 
     PYTHONPATH=src python -m benchmarks.multi_query_sharing [--smoke]
@@ -178,19 +188,55 @@ def make_skewed_queries(n: int, seed: int = 1):
     return queries
 
 
-def _measure_staged(queries, out, repeat: int, warm_batches: int = 4):
-    """(us_exhaustive, us_staged, report) with warmed stats + restage."""
+def make_rowskewed_queries(n: int, seed: int = 2):
+    """Row-skewed monitors: one shared busy-scene guard, ~10% selective.
+
+    Every And alert gates on the same "unusually busy" total-count guard
+    (realistic: alerts fire on the same traffic surges), so ~90% of each
+    batch's ROWS are decided at the count tier while the spatial/SAT
+    tiers still run for the busy remainder — the workload where
+    tier-granular skipping buys nothing and row compaction is the whole
+    win."""
+    rng = np.random.default_rng(seed)
+    busy = Q.Count(Q.Op.GE, 24)                   # ~10% of frames
+    queries = []
+    for i in range(n):
+        tail = [Q.Spatial(int(rng.integers(0, C)), Q.Rel.LEFT,
+                          int(rng.integers(0, C)), radius=int(i % 3)),
+                Q.Region(int(rng.integers(0, C)),
+                         (0, 0, G // 2 + int(rng.integers(0, G // 2)), G),
+                         1, radius=int(rng.integers(0, 3)))]
+        if i % 5 == 4:        # Or guard that is ~always true
+            queries.append(Q.Or((Q.Count(Q.Op.GE, 0), tail[0], tail[1])))
+        else:
+            queries.append(Q.And((busy, *tail)))
+    return queries
+
+
+# row compaction amortizes per-stage dispatch over the batch: measure the
+# rowskew workload at production batch size (the regime it targets)
+B_ROWSKEW = 256
+
+
+def _measure_staged(queries, out, repeat: int, warm_batches: int = 4,
+                    min_bucket: int = 8, measure_exhaustive: bool = True):
+    """(us_exhaustive, us_staged, report) with warmed stats + restage.
+
+    ``measure_exhaustive=False`` skips timing the exhaustive program
+    (returns None for it) — the tier-only baseline call reuses the
+    exhaustive number already measured on the same queries/batch."""
     plan = QueryPlan(queries)
     exhaustive = jax.jit(plan.evaluate)
     stats = SlotStats()
-    staged = plan.build_staged(stats)
+    staged = plan.build_staged(stats, min_bucket=min_bucket)
     for _ in range(warm_batches):                 # learn population rates
         staged.evaluate(out)
         staged.flush_stats(stats)
     staged.restage(stats)
     np.testing.assert_array_equal(               # staging is semantics-free
         np.asarray(staged.evaluate(out)), np.asarray(exhaustive(out)))
-    us_ex = timeit(exhaustive, out, repeat=repeat)
+    us_ex = (timeit(exhaustive, out, repeat=repeat)
+             if measure_exhaustive else None)
     us_staged = timeit(staged.evaluate, out, repeat=repeat)
     return us_ex, us_staged, staged.last_report
 
@@ -199,21 +245,39 @@ def run_adaptive(smoke: bool = False) -> dict:
     sizes = (16,) if smoke else ADAPTIVE_SIZES
     repeat = 3 if smoke else 7
     rng = np.random.default_rng(42)
-    out = FilterOutputs(
-        counts=jnp.asarray(rng.normal(2, 2, (B, C)).astype(np.float32)),
-        grid=jnp.asarray(rng.normal(0, 0.7, (B, G, G, C)).astype(np.float32)))
+
+    def rand_out(batch):
+        return FilterOutputs(
+            counts=jnp.asarray(rng.normal(2, 2,
+                                          (batch, C)).astype(np.float32)),
+            grid=jnp.asarray(rng.normal(0, 0.7,
+                                        (batch, G, G, C)).astype(np.float32)))
+
+    out64 = rand_out(B)
+    out_rowskew = rand_out(B_ROWSKEW)
 
     res = {}
     print(f"{'workload':>10s} {'N':>4s} {'exhaustive us':>14s} "
-          f"{'staged us':>10s} {'speedup':>8s} {'cascade us':>11s} "
-          f"{'mode':>11s} {'stages':>8s}")
+          f"{'staged us':>10s} {'speedup':>8s} {'tieronly us':>12s} "
+          f"{'rowspeed':>9s} {'cascade us':>11s} {'mode':>11s} "
+          f"{'stages':>8s}")
     for workload, make in (("skewed", make_skewed_queries),
+                           ("rowskew", make_rowskewed_queries),
                            ("uniform", make_queries)):
+        out = out_rowskew if workload == "rowskew" else out64
         for n in sizes:
             queries = make(n)
             us_ex, us_staged, report = _measure_staged(
                 queries, out, repeat=repeat)
+            # PR 2's tier-granular executor on the SAME queries/batch:
+            # min_bucket >= B disables row compaction, so needed stages
+            # run full-batch — the baseline row_compaction_speedup is
+            # measured against
+            _, us_tier_only, _ = _measure_staged(
+                queries, out, repeat=repeat, min_bucket=1 << 30,
+                measure_exhaustive=False)
             speedup = us_ex / us_staged
+            row_speedup = us_tier_only / us_staged
             # the full adaptive cascade: staging + cost-model mode switch
             # (parks staging when the workload gives it nothing to skip)
             mqc = MultiQueryCascade(queries, adaptive=True, restage_every=8)
@@ -227,17 +291,24 @@ def run_adaptive(smoke: bool = False) -> dict:
             us_casc = timeit(mqc.masks, out, repeat=repeat)
             res[f"{workload}/N{n}"] = {
                 "us_exhaustive": us_ex, "us_staged": us_staged,
-                "speedup": speedup, "us_cascade": us_casc,
+                "speedup": speedup,
+                "us_staged_tier_only": us_tier_only,    # PR 2 executor
+                "row_compaction_speedup": row_speedup,
+                "us_cascade": us_casc,
                 "cascade_speedup": us_ex / us_casc, "cascade_mode": mode,
                 "stages_run": len(report.ran),          # counts (ints) for
                 "stages_skipped": len(report.skipped),  # trajectory diffs
                 "stages_ran_names": report.ran,
-                "stages_skipped_names": report.skipped}
+                "stages_skipped_names": report.skipped,
+                "rows_evaluated": report.rows_evaluated,
+                "undecided_rows_in": report.undecided_rows_in,
+                "batch": report.batch}
             emit(f"multi_query_adaptive/{workload}/N{n}", us_staged,
-                 f"speedup={speedup:.2f}x;ran={len(report.ran)}"
-                 f"/{len(report.order)};mode={mode}")
+                 f"speedup={speedup:.2f}x;rows={row_speedup:.2f}x;"
+                 f"ran={len(report.ran)}/{len(report.order)};mode={mode}")
             print(f"{workload:>10s} {n:4d} {us_ex:14.0f} {us_staged:10.0f} "
-                  f"{speedup:7.2f}x {us_casc:11.0f} {mode:>11s} "
+                  f"{speedup:7.2f}x {us_tier_only:12.0f} {row_speedup:8.2f}x "
+                  f"{us_casc:11.0f} {mode:>11s} "
                   f"{len(report.ran)}/{len(report.order)} ran")
 
     save_result("multi_query_adaptive", res)

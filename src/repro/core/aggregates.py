@@ -41,7 +41,15 @@ class CVEstimate:
         return min(self.naive_var / max(self.var, 1e-30), 1e4)
 
     def ci95(self) -> Tuple[float, float]:
-        h = 1.96 * math.sqrt(max(self.var, 0.0))
+        """95% CI with the Student-t quantile on the residual degrees of
+        freedom (n - 1 - d for d control variates, the variance having
+        been estimated from the same sample).  The API admits n as small
+        as 3, where the fixed z=1.96 understates the interval badly —
+        t_{.975}(1) is 12.7; the quantile converges to 1.96 for large n,
+        so well-sampled windows are unchanged."""
+        from scipy import stats as sps          # jax already depends on scipy
+        df = max(int(self.n) - 1 - int(np.asarray(self.beta).size), 1)
+        h = float(sps.t.ppf(0.975, df)) * math.sqrt(max(self.var, 0.0))
         return self.mean - h, self.mean + h
 
 
@@ -102,17 +110,29 @@ class CVAccumulator:
 
     @staticmethod
     def init(d: int) -> "CVAccumulator":
+        """Fresh accumulator with float64 moments when x64 is enabled.
+
+        Welford co-moments accumulated in float32 drift on million-frame
+        streams (catastrophic cancellation in M2 once mean*n dwarfs the
+        per-batch deltas), and a float32 ``n`` stops counting exactly past
+        2^24 frames.  All three fields therefore share ONE dtype: float64
+        under ``jax_enable_x64``, else a *deliberate* float32 fallback —
+        jit's dtype rules silently demote f64 arrays when x64 is off, so
+        requesting f64 there would only feign precision (the former init
+        did exactly that for ``n`` while leaving mean/M2 f32)."""
         k = 1 + d
-        return CVAccumulator(n=jnp.zeros((), jnp.float64)
-                             if jax.config.jax_enable_x64 else
-                             jnp.zeros((), jnp.float32),
-                             mean=jnp.zeros((k,), jnp.float32),
-                             M2=jnp.zeros((k, k), jnp.float32))
+        dt = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+        return CVAccumulator(n=jnp.zeros((), dt),
+                             mean=jnp.zeros((k,), dt),
+                             M2=jnp.zeros((k, k), dt))
 
     def update(self, y: jax.Array, z: jax.Array) -> "CVAccumulator":
-        """Batch update. y: (b,), z: (b, d)."""
-        v = jnp.concatenate([y[:, None].astype(jnp.float32),
-                             z.astype(jnp.float32)], axis=1)    # (b, k)
+        """Batch update. y: (b,), z: (b, d).  Inputs are promoted to the
+        accumulator dtype so f32 filter/oracle samples accumulate in f64
+        whenever the state is f64."""
+        dt = self.mean.dtype
+        v = jnp.concatenate([y[:, None].astype(dt), z.astype(dt)],
+                            axis=1)                             # (b, k)
         b = jnp.asarray(v.shape[0], self.n.dtype)
         bm = v.mean(0)
         vc = v - bm

@@ -137,14 +137,64 @@ def compact_survivors(mask: jax.Array, *arrays: jax.Array,
 
     Returns (n_survivors, gathered arrays, original indices) — jit-friendly
     (fixed shapes).
+
+    ``bucket`` must hold every survivor: the ``order[:bucket]`` gather
+    keeps only the first ``bucket`` rows, so an overflowing bucket would
+    silently DROP real survivors.  Outside jit that is checked eagerly
+    and raises; under jit the count is a tracer and cannot be checked
+    here — callers with data-dependent survivor counts must size the
+    bucket for the worst case (``bucket >= mask.shape[0]``) or chunk the
+    work like ``bucketed_oracle`` does.
     """
     B = mask.shape[0]
     order = jnp.argsort(~mask)                 # True first (False=1 sorts last)
     n = jnp.sum(mask)
     bucket = bucket or B
+    if bucket < B:
+        try:
+            overflow = int(n) > bucket
+        except jax.errors.ConcretizationTypeError:
+            overflow = False                   # traced: caller's contract
+        if overflow:
+            raise ValueError(
+                f"compact_survivors: {int(n)} survivors exceed "
+                f"bucket={bucket}; the order[:bucket] gather would drop "
+                f"{int(n) - bucket} of them — raise the bucket (or loop "
+                f"over fixed-size chunks like bucketed_oracle)")
     idx = order[:bucket]
     gathered = tuple(a[idx] for a in arrays)
     return n, gathered, idx
+
+
+def compact_indices(mask: np.ndarray, *, min_bucket: int = 8,
+                    cap: Optional[int] = None) -> Tuple[np.ndarray, int]:
+    """Host-side power-of-two bucketing of a boolean row mask.
+
+    The generalization of ``compact_survivors``'s padding discipline used
+    by the staged planner's row-level short-circuiting
+    (repro.core.plan.StagedQueryPlan): returns ``(idx, n)`` where ``idx``
+    is the (bucket,) int32 vector of True-row indices padded by repeating
+    the last survivor — so duplicate scatters write identical values —
+    and ``n`` is the real survivor count.  The bucket is the smallest
+    power of two >= max(n, min_bucket), capped at ``cap`` (default: the
+    mask length), so a jitted consumer sees one shape per bucket size
+    instead of one per batch.
+    """
+    mask = np.asarray(mask)
+    idx = np.nonzero(mask)[0]
+    n = int(idx.size)
+    cap = int(cap) if cap is not None else int(mask.shape[0])
+    bucket = max(1, int(min_bucket))
+    while bucket < n:
+        bucket <<= 1
+    bucket = min(bucket, cap)
+    if bucket < n:
+        raise ValueError(f"compact_indices: cap={cap} cannot hold the "
+                         f"{n} surviving rows")
+    out = np.empty(bucket, np.int32)
+    out[:n] = idx
+    out[n:] = idx[-1] if n else 0
+    return out, n
 
 
 def bucketed_oracle(oracle_fn: Callable[[Any, np.ndarray], List],
@@ -264,18 +314,27 @@ class MultiQueryCascade:
     Staging pays ~``step_overhead`` cost units per executed stage (the
     three-valued propagation + the per-stage undecided sync); on a
     workload where nothing gets skipped that is pure loss, so the cascade
-    compares the observed staged cost against the exhaustive plan's under
-    the same static cost model at every restage boundary and *parks*
-    staging when it is not earning its keep — the exhaustive path then
-    runs ``evaluate_with_counts`` so the population statistics keep
-    learning, and staging is probed again one batch per boundary in case
-    the traffic turned skewed.  ``mode`` is "staged" or "exhaustive".
+    compares the staged cost against the exhaustive plan's under the same
+    static cost model at every restage boundary and *parks* staging when
+    it is not earning its keep — the exhaustive path then runs
+    ``evaluate_with_counts`` so the population statistics keep learning,
+    and staging is probed again one batch per boundary in case the
+    traffic turned skewed.  The comparison accounts for row compaction
+    twice over: observed staged batches report costs scaled by the rows
+    each stage actually evaluated, and the per-stage row ledger in
+    ``slot_stats`` gives a *predicted* staged cost
+    (``StagedQueryPlan.predicted_batch_cost``) so a parked cascade whose
+    ledger says the expensive tiers would only see a sliver of each batch
+    un-parks without waiting for a lucky probe.  ``mode`` is "staged" or
+    "exhaustive".  ``min_bucket`` is the row-compaction bucket floor
+    (>= batch size disables row compaction).
     """
 
     def __init__(self, queries: Sequence[Q.Predicate], *, tau: float = 0.2,
                  adaptive: bool = False,
                  slot_stats: Optional[SlotStats] = None,
-                 restage_every: int = 16, step_overhead: float = 4.0):
+                 restage_every: int = 16, step_overhead: float = 4.0,
+                 min_bucket: int = 8):
         from repro.core.plan import QueryPlan
         self.queries = tuple(queries)
         self.tau = tau
@@ -293,13 +352,14 @@ class MultiQueryCascade:
                              f"got {restage_every}")
         self.slot_stats = (slot_stats if slot_stats is not None
                            else SlotStats()) if adaptive else None
-        self._staged = (self.plan.build_staged(self.slot_stats)
+        self._staged = (self.plan.build_staged(self.slot_stats,
+                                               min_bucket=min_bucket)
                         if adaptive else None)
         self._jitted = jax.jit(self.plan.evaluate)
         self._jitted_counts = jax.jit(self.plan.evaluate_with_counts)
         self._batches = 0
         self._cost_staged = 0.0      # modelled cost of staged batches
-        self._cost_exhaustive = 0.0  # modelled cost had they run exhaustive
+        self._staged_batches = 0     # batches behind _cost_staged
         self.mode = "staged" if adaptive else "exhaustive"
         self.restages = 0
 
@@ -309,7 +369,7 @@ class MultiQueryCascade:
         rep = self._staged.last_report
         self._cost_staged += (rep.cost_run
                               + self.step_overhead * rep.stages_run)
-        self._cost_exhaustive += rep.cost_total
+        self._staged_batches += 1
         return m
 
     def _flush_exhaustive_counts(self, counts: jax.Array, B: int) -> None:
@@ -333,11 +393,30 @@ class MultiQueryCascade:
             m, counts = self._jitted_counts(out)
             self._flush_exhaustive_counts(counts, m.shape[0])
         if boundary:
-            # park or un-park staging on the observed cost balance, then
-            # re-sort the stages from the freshest population rates
-            self.mode = ("staged" if self._cost_staged < self._cost_exhaustive
-                         else "exhaustive")
-            self._cost_staged = self._cost_exhaustive = 0.0
+            # park or un-park staging on the cost balance, then re-sort
+            # the stages from the freshest population rates.  While
+            # STAGED, the decision uses only the window's observed
+            # per-batch cost (row-compaction-scaled) — fresh evidence, so
+            # a workload that drifted uniform parks immediately.  While
+            # PARKED, the single probe batch may have run before the
+            # rates were learned, so the ledger-predicted cost can also
+            # vote to un-park; the prediction is a lifetime average and
+            # may be stale after drift, but a wrong un-park is corrected
+            # one window later by the observed path, while letting it
+            # veto parking could pin a drifted stream to staging for the
+            # ledger's whole memory.
+            exhaustive_cost = self.plan.exhaustive_cost_model()
+            observed = (self._cost_staged / self._staged_batches
+                        if self._staged_batches else float("inf"))
+            if self.mode == "staged":
+                decide = observed
+            else:
+                decide = min(observed, self._staged.predicted_batch_cost(
+                    self.slot_stats, self.step_overhead))
+            self.mode = "staged" if decide < exhaustive_cost \
+                else "exhaustive"
+            self._cost_staged = 0.0
+            self._staged_batches = 0
             self.restages += int(self._staged.restage(self.slot_stats))
         return m
 

@@ -69,6 +69,26 @@ leaf; with N registered queries that work is repeated N times per batch.
     loop-free formulation of the exhaustive plan, so every stage function
     jits once and stays jit-cache-stable across batches.
 
+    **Row-level short-circuiting.**  Tier-granular skipping still runs a
+    needed stage on the whole batch even when 90% of the *frames* are
+    already decided.  The staged executor therefore compacts the
+    undecided rows between tiers: after each stage's bounds propagation,
+    the surviving row indices are gathered (``cascade.compact_indices``,
+    the host-side generalization of ``compact_survivors``'s bucketing)
+    into fixed-size power-of-two buckets — jit-cache-stable shapes, one
+    compiled step per (stage, prefix, bucket) — and the next, more
+    expensive tier evaluates only those rows: the count gather and SAT
+    stages index their row subset directly, and the spatial tier's stats
+    reduction rides the scalar-prefetched row-gather kernel
+    (``kernels.spatial_predicate.spatial_stats_rows_bgc``).  Leaf values
+    and bounds are scattered back into the full-batch (B, N) masks, so
+    the result stays bit-identical while per-stage work scales with the
+    *undecided* fraction instead of the batch size.  Reported stage costs
+    (and the adaptive cascade's park/un-park decision) scale with rows
+    actually evaluated, and every batch feeds the per-stage row ledger in
+    ``SlotStats`` so a parked cascade can predict the staged cost without
+    probing.
+
 The shared evaluation is bit-identical to running ``eval_filters`` per
 query, and the staged plan is bit-identical to ``evaluate`` under every
 stage order and statistics state (property-tested in
@@ -87,6 +107,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import query as Q
+from repro.core.cascade import compact_indices
 from repro.core.filters import FilterOutputs
 from repro.kernels import spatial_predicate as SP
 
@@ -282,24 +303,32 @@ class QueryPlan:
 
     def _spatial_values(self, out: FilterOutputs,
                         payload: Optional[Tuple] = None,
-                        class_slice: Optional[Tuple] = None) -> jax.Array:
+                        class_slice: Optional[Tuple] = None,
+                        rows: Optional[jax.Array] = None) -> jax.Array:
         """(B, k) bool for the spatial tier from the fused (C', 5) stats.
 
         ``class_slice=(classes, a_idx, b_idx)`` gathers only the grid
         planes the tier's leaves reference before the reduction
         (stage-sliced evaluation) — bit-identical, per-class stats are
-        independent."""
+        independent.  ``rows`` restricts the reduction to a gathered row
+        subset (row-level short-circuiting): the stats run through the
+        scalar-prefetched row kernel and the result is (R, k)."""
         _, a, b, use_row, radius = payload if payload is not None \
             else self._spa
         g = out.grid.shape[1]
+        grid = out.grid
         if class_slice is not None and \
                 len(class_slice[0]) < out.grid.shape[-1]:
             classes, a, b = class_slice
+            grid = grid[..., jnp.asarray(classes)]
+        if rows is not None:
             from repro.kernels import ops as kops
-            stats = kops.spatial_stats_inline(
-                out.grid[..., jnp.asarray(classes)], self.tau)
-        else:
+            stats = kops.spatial_stats_rows_inline(grid, rows, self.tau)
+        elif grid is out.grid:
             stats = out.spatial_stats(self.tau)
+        else:
+            from repro.kernels import ops as kops
+            stats = kops.spatial_stats_inline(grid, self.tau)
         return SP.eval_spatial_leaves(
             stats, jnp.asarray(a), jnp.asarray(b), jnp.asarray(use_row),
             jnp.asarray(radius), grid=g)
@@ -467,10 +496,11 @@ class QueryPlan:
         return cost
 
     def build_staged(self, stats=None, *,
-                     order: Optional[Sequence[int]] = None
-                     ) -> "StagedQueryPlan":
+                     order: Optional[Sequence[int]] = None,
+                     min_bucket: int = 8) -> "StagedQueryPlan":
         """Adaptive stage-by-stage executor over this plan's lowering."""
-        return StagedQueryPlan(self, stats, order=order)
+        return StagedQueryPlan(self, stats, order=order,
+                               min_bucket=min_bucket)
 
     @property
     def sharing_factor(self) -> float:
@@ -489,7 +519,15 @@ class StageReport:
     ran: List[str] = dataclasses.field(default_factory=list)
     skipped: List[str] = dataclasses.field(default_factory=list)
     undecided_after: List[int] = dataclasses.field(default_factory=list)
-    cost_run: float = 0.0       # static-model cost of executed stages
+    rows_evaluated: List[int] = dataclasses.field(default_factory=list)
+    # rows each executed stage actually processed: the compacted bucket
+    # size, padding included (padded rows are real work — the same honest
+    # accounting as ``oracle_frames_evaluated``); batch for full steps
+    undecided_rows_in: List[int] = dataclasses.field(default_factory=list)
+    # true undecided-row count when the stage ran (<= its bucket)
+    batch: int = 0              # B of the evaluated batch
+    cost_run: float = 0.0       # static-model cost of executed stages,
+                                # scaled per stage by rows_evaluated/batch
     cost_total: float = 0.0     # static-model cost of the EXHAUSTIVE plan
                                 # (shared threshold, incremental dilation —
                                 # less than the sum of staged stage costs)
@@ -512,19 +550,47 @@ class StagedQueryPlan:
     the result, and the returned masks are bit-identical to
     ``QueryPlan.evaluate``.
 
+    Between tiers the executor additionally compacts at ROW granularity:
+    frames whose every query column is decided are dropped from the next
+    stage's evaluation.  The undecided row indices are bucketed host-side
+    into power-of-two sizes (``cascade.compact_indices``, padding by
+    repeating the last undecided row so duplicate scatters are benign) and
+    the stage body evaluates only the gathered rows — the spatial tier via
+    the scalar-prefetched row kernel, count/SAT tiers via direct row
+    indexing — then scatters leaf values, bounds, and decidedness back
+    into the persistent full-batch state.  Correctness rests on the same
+    monotonicity that makes tier skipping sound: a decided (frame, query)
+    cell is invariant to every still-unknown slot, so excluding that frame
+    from later stages (or re-propagating it with arbitrary values at
+    slots it never evaluated) cannot change its answer.
+
     Each executed tier is ONE jitted *step*: stage evaluation, scatter
-    into the leaf matrix, both propagation passes, the per-column
-    undecided reduction, and the per-slot pass-count accumulation, fused
-    into a single fixed-shape program with the known-slot mask baked as
-    a constant (steps are cached per (stage, set-of-stages-already-run),
-    and real traffic revisits a handful of such prefixes).  The only
-    host round-trip per executed tier is the tiny (N,) undecided-columns
-    fetch that drives the short-circuit.  Per-slot pass counts stay on
-    device until ``flush_stats`` pulls them in one deferred transfer.
+    into the leaf matrix, both propagation passes, the per-column and
+    per-row undecided reductions, and the per-slot pass-count
+    accumulation, fused into a single fixed-shape program with the
+    known-slot mask baked as a constant (steps are cached per (stage,
+    set-of-stages-already-run, bucket), and real traffic revisits a
+    handful of such prefixes x a couple of bucket sizes).  The only host
+    round-trip per executed tier is the tiny (N + B,) undecided fetch
+    that drives both the short-circuit and the next stage's compaction.
+    Per-slot pass counts stay on device until ``flush_stats`` pulls them
+    in one deferred transfer; only FULL-BATCH stage evaluations feed the
+    per-slot store (a compacted stage sees its slots conditioned on the
+    row being undecided — not the unconditional frame-level selectivity
+    the shared ledger holds), while per-stage row traffic always feeds
+    the ``SlotStats`` stage ledger for ``predicted_batch_cost``.
+
+    ``min_bucket`` floors the bucket size (default 8; tiny buckets would
+    multiply compiled variants for little win).  Setting it >= B disables
+    row compaction entirely and reproduces the tier-granular executor.
     """
 
     def __init__(self, plan: QueryPlan, stats=None, *,
-                 order: Optional[Sequence[int]] = None):
+                 order: Optional[Sequence[int]] = None,
+                 min_bucket: int = 8):
+        if min_bucket < 1:
+            raise ValueError(f"min_bucket must be >= 1, got {min_bucket}")
+        self.min_bucket = min_bucket
         self.plan = plan
         self.stages = plan.stage_descriptors()
         # (N, n_stages) — does query q own a slot in stage s?
@@ -540,18 +606,21 @@ class StagedQueryPlan:
                 raise ValueError(f"order must permute stages "
                                  f"0..{len(self.stages) - 1}, got {order!r}")
             self.order = list(order)
-        # fused step cache: (stage, frozenset(stages already run)) -> fn.
-        # LRU-bounded: the key space is exponential in the stage count in
-        # the worst case (every undecided pattern is a distinct prefix),
-        # but real traffic revisits a handful of prefixes — evicting cold
-        # entries caps compiled-program memory over a long-running stream
-        # at the price of a re-trace if an evicted pattern ever recurs.
-        self._steps: "OrderedDict[Tuple[int, frozenset], Callable]" = \
-            OrderedDict()
-        self.step_cache_max = 32
+        # fused step cache: (stage, frozenset(stages already run), bucket
+        # or None for a full-batch step) -> fn.  LRU-bounded: the key
+        # space is exponential in the stage count in the worst case
+        # (every undecided pattern is a distinct prefix, times the
+        # power-of-two bucket sizes), but real traffic revisits a handful
+        # of prefixes and one or two buckets — evicting cold entries caps
+        # compiled-program memory over a long-running stream at the price
+        # of a re-trace if an evicted pattern ever recurs.
+        self._steps: "OrderedDict[Tuple[int, frozenset, Optional[int]]," \
+                     " Callable]" = OrderedDict()
+        self.step_cache_max = 64
         self.last_report: Optional[StageReport] = None
-        self._pending: Optional[Tuple[List[Tuple[np.ndarray, jax.Array]],
-                                      int]] = None
+        self._pending: Optional[Tuple[
+            List[Tuple[np.ndarray, jax.Array, int]],
+            List[Tuple[str, int, int]]]] = None
 
     # -- ordering ---------------------------------------------------------
 
@@ -608,14 +677,22 @@ class StagedQueryPlan:
     # -- stage compilation ------------------------------------------------
 
     def _stage_body(self, si: int) -> Callable:
-        """``out -> (B, k) bool`` for one stage, slot-permuted (unjitted)."""
+        """``(out, rows=None) -> (B|R, k) bool`` for one stage,
+        slot-permuted (unjitted).  ``rows`` restricts evaluation to a
+        gathered row subset (row-level short-circuiting)."""
         plan = self.plan
         st = self.stages[si]
         perm = self._perms[si]
         if st.kind == "count":
             slots, cls, lo, hi = st.payload
             payload = (slots[perm], cls[perm], lo[perm], hi[perm])
-            return lambda out: plan._count_values(out, payload)
+
+            def body(out, rows=None, payload=payload):
+                if rows is not None:
+                    out = FilterOutputs(counts=out.counts[rows])
+                return plan._count_values(out, payload)
+
+            return body
         if st.kind == "spatial":
             slots, a, b, use_row, radius = st.payload
             payload = (slots[perm], a[perm], b[perm], use_row[perm],
@@ -623,14 +700,16 @@ class StagedQueryPlan:
             classes, a_idx, b_idx = SP.stage_class_slice(payload[1],
                                                          payload[2])
             cs = (classes, a_idx, b_idx)
-            return lambda out: plan._spatial_values(out, payload,
-                                                    class_slice=cs)
+            return lambda out, rows=None: plan._spatial_values(
+                out, payload, class_slice=cs, rows=rows)
         from repro.core import cam as CAM
         radius, slots, cls, rects, minc = st.payload
         cls, rects, minc = cls[perm], rects[perm], minc[perm]
 
-        def body(out, radius=radius, cls=cls, rects=rects, minc=minc):
-            occ = out.occupancy(plan.tau)
+        def body(out, rows=None, radius=radius, cls=cls, rects=rects,
+                 minc=minc):
+            grid = out.grid if rows is None else out.grid[rows]
+            occ = CAM.threshold_map(grid, plan.tau, logits=False)
             if radius:              # boolean dilation composes exactly, so
                 occ = CAM.dilate_manhattan(occ, radius)     # from-scratch
             return plan._region_sat_values(occ, cls, rects, minc)
@@ -640,15 +719,24 @@ class StagedQueryPlan:
     def _stage_slots(self, si: int) -> np.ndarray:
         return self.stages[si].slots[self._perms[si]]
 
-    def _get_step(self, si: int, ran: frozenset) -> Callable:
+    def _get_step(self, si: int, ran: frozenset,
+                  bucket: Optional[int]) -> Callable:
         """Fused jitted step for stage ``si`` given the set of stages that
         already ran: eval + scatter + both propagation passes + undecided
-        reduction + pass counts, one program.  The known-slot mask is a
+        reductions + pass counts, one program.  The known-slot mask is a
         trace-time constant, so the propagation's unknown-literal selects
-        fold away."""
-        step = self._steps.get((si, ran))
+        fold away.
+
+        ``bucket=None`` is the full-batch step (every row still
+        undecided).  With a bucket, the step takes a padded (bucket,)
+        row-index vector plus the real survivor count and evaluates /
+        propagates only the gathered rows, scattering results back into
+        the persistent (B, ...) state — decided rows are invariant to the
+        slots they never evaluated, so the scatter-back is exact."""
+        key = (si, ran, bucket)
+        step = self._steps.get(key)
         if step is not None:
-            self._steps.move_to_end((si, ran))
+            self._steps.move_to_end(key)
             return step
         plan = self.plan
         body = self._stage_body(si)
@@ -658,14 +746,32 @@ class StagedQueryPlan:
             known[self.stages[sj].slots] = True
         known[slots] = True
 
-        def step_fn(out, leaf_vals):
-            vals = body(out)                               # (B, k) bool
-            leaf_vals = leaf_vals.at[:, slots].set(vals)
-            value, decided = plan.propagate_bounds(leaf_vals, known)
-            return leaf_vals, value, ~decided.all(0), vals.sum(0)
+        if bucket is None:
+            # full-batch step: every row is (re)evaluated and the bounds
+            # derive from leaf_vals alone, so no prior value/decided
+            # state is threaded in
+            def step_fn(out, leaf_vals):
+                vals = body(out)                           # (B, k) bool
+                leaf_vals = leaf_vals.at[:, slots].set(vals)
+                value, decided = plan.propagate_bounds(leaf_vals, known)
+                undec = jnp.concatenate([~decided.all(0), ~decided.all(1)])
+                return leaf_vals, value, decided, undec, vals.sum(0)
+        else:
+            def step_fn(out, leaf_vals, value, decided, idx, n_real):
+                vals = body(out, rows=idx)                 # (R, k) bool
+                sub = leaf_vals[idx].at[:, slots].set(vals)
+                leaf_vals = leaf_vals.at[idx].set(sub)
+                v, dec = plan.propagate_bounds(sub, known)
+                value = value.at[idx].set(v)
+                decided = decided.at[idx].set(dec)
+                undec = jnp.concatenate([~decided.all(0), ~decided.all(1)])
+                # padded duplicate rows must not inflate the pass counts
+                valid = jnp.arange(vals.shape[0]) < n_real
+                return (leaf_vals, value, decided, undec,
+                        (vals & valid[:, None]).sum(0))
 
         step = jax.jit(step_fn)
-        self._steps[(si, ran)] = step
+        self._steps[key] = step
         while len(self._steps) > self.step_cache_max:
             self._steps.popitem(last=False)              # evict coldest
         return step
@@ -674,57 +780,127 @@ class StagedQueryPlan:
 
     def evaluate(self, out: FilterOutputs) -> jax.Array:
         """(B, N) bool masks, bit-identical to ``QueryPlan.evaluate`` —
-        but stages stop/skip as soon as the undecided set allows."""
+        but stages stop/skip as soon as the undecided set allows, and
+        each stage evaluates only the rows still undecided (compacted
+        into a power-of-two bucket) once the first tiers have decided
+        part of the batch."""
         plan = self.plan
         B = out.counts.shape[0]
+        N = len(plan.queries)
         leaf_vals = jnp.zeros((B, plan.n_unique_leaves), bool)
-        undecided = np.ones(len(plan.queries), bool)
+        value = jnp.zeros((B, N), bool)
+        decided = jnp.zeros((B, N), bool)
+        undecided_cols = np.ones(N, bool)
+        undecided_rows = np.ones(B, bool)
         report = StageReport(order=[self.stages[s].name for s in self.order],
-                             cost_total=plan.exhaustive_cost_model())
-        pending: List[Tuple[np.ndarray, jax.Array]] = []
+                             cost_total=plan.exhaustive_cost_model(),
+                             batch=B)
+        pending: List[Tuple[np.ndarray, jax.Array, int]] = []
+        stage_rows: List[Tuple[str, int, int]] = []
         ran: frozenset = frozenset()
-        value = None
         for si in self.order:
             st = self.stages[si]
-            if not (self._uses_stage[:, si] & undecided).any():
+            if not (self._uses_stage[:, si] & undecided_cols).any():
                 report.skipped.append(st.name)
+                stage_rows.append((st.name, 0, B))
                 continue
             if st.kind != "count" and out.grid is None:
                 raise ValueError(
                     f"stage {st.name!r} has Spatial/Region leaves of an "
                     f"undecided query but the filter head emits no grid "
                     f"(OD-COF)")
-            step = self._get_step(si, ran)
-            leaf_vals, value, undec, counts = step(out, leaf_vals)
-            pending.append((self._stage_slots(si), counts))  # deferred stats
-            undecided = np.asarray(undec)                    # (N,) fetch
+            n_rows = int(undecided_rows.sum())
+            if n_rows < B:
+                idx, _ = compact_indices(undecided_rows,
+                                         min_bucket=self.min_bucket, cap=B)
+            else:                   # every row undecided (first stage /
+                idx = None          # uniform traffic): skip the nonzero+
+            if idx is None or idx.size >= B:        # pad bookkeeping
+                step = self._get_step(si, ran, None)
+                leaf_vals, value, decided, undec, counts = step(
+                    out, leaf_vals)
+                rows_eval, seen = B, B
+            else:
+                step = self._get_step(si, ran, idx.size)
+                leaf_vals, value, decided, undec, counts = step(
+                    out, leaf_vals, value, decided, jnp.asarray(idx),
+                    jnp.asarray(n_rows, jnp.int32))
+                rows_eval, seen = idx.size, n_rows
+            if seen == B:
+                # only full-batch evaluations feed the per-slot ledger: a
+                # compacted stage observes its slots CONDITIONED on the
+                # row being undecided, and folding that into the shared
+                # store would corrupt the unconditional frame-level
+                # selectivities every adaptive ordering (FilterCascade
+                # conjuncts, _staging_order benefits) is keyed on — a
+                # leaf that passes 60% of busy frames but 6% of all
+                # frames must not converge to 0.6.  Cold-neutral beats
+                # wrong-converged; the exhaustive path and full-batch
+                # stages keep those slots learning.
+                pending.append((self._stage_slots(si), counts, seen))
+            stage_rows.append((st.name, rows_eval, B))
+            undec = np.asarray(undec)               # ONE (N + B,) fetch
+            undecided_cols, undecided_rows = undec[:N], undec[N:]
             ran = ran | {si}
             report.ran.append(st.name)
-            report.cost_run += st.cost
-            report.undecided_after.append(int(undecided.sum()))
-            if not undecided.any():
+            report.rows_evaluated.append(rows_eval)
+            report.undecided_rows_in.append(n_rows)
+            report.cost_run += st.cost * (rows_eval / B)
+            report.undecided_after.append(int(undecided_cols.sum()))
+            if not undecided_cols.any():
                 break
-        assert value is not None, "every query owns at least one slot"
-        report.skipped.extend(self.stages[si].name for si in
-                              self.order[len(report.ran)
-                                         + len(report.skipped):])
+        assert report.ran, "every query owns at least one slot, so the " \
+                           "first ordered stage always runs"
+        for sj in self.order[len(report.ran) + len(report.skipped):]:
+            report.skipped.append(self.stages[sj].name)
+            stage_rows.append((self.stages[sj].name, 0, B))
         self.last_report = report
-        self._pending = (pending, B)
+        self._pending = (pending, stage_rows)
         return value
 
     def flush_stats(self, stats) -> None:
         """Fold the last batch's per-slot pass counts into ``stats`` with
-        ONE device fetch (counts were accumulated on device per stage)."""
+        ONE device fetch (counts were accumulated on device per stage).
+        Only full-batch stage evaluations contribute (see ``evaluate`` —
+        compacted stages observe conditional rates the shared ledger must
+        not absorb); per-stage row traffic (including skipped stages at
+        0 rows) goes to the stage ledger behind
+        ``predicted_batch_cost``."""
         if not self._pending:
             return
-        pending, B = self._pending
+        pending, stage_rows = self._pending
         self._pending = None
-        if not pending:
-            return
-        counts = np.asarray(jnp.concatenate([c for _, c in pending]))
-        slots = np.concatenate([s for s, _ in pending])
-        stats.observe_many([self.plan.slot_keys[s] for s in slots], counts,
-                           B, canonical=True)
+        if pending:
+            counts = np.asarray(jnp.concatenate([c for _, c, _ in pending]))
+            off = 0
+            for slots, _, seen in pending:
+                stats.observe_many(
+                    [self.plan.slot_keys[s] for s in slots],
+                    counts[off:off + len(slots)], seen, canonical=True)
+                off += len(slots)
+        for name, rows, batch in stage_rows:
+            stats.observe_stage_rows(name, rows, batch)
+
+    def predicted_batch_cost(self, stats, step_overhead: float = 0.0
+                             ) -> float:
+        """Ledger-predicted static-model cost of one staged batch: each
+        stage's cost scaled by its learned row fraction, plus
+        ``step_overhead`` per expected execution.  This is how a *parked*
+        adaptive cascade keeps re-deciding the staged-vs-exhaustive mode
+        switch between probe batches — the per-stage undecided-rate
+        feedback accumulated by ``flush_stats`` substitutes for running
+        the staged path (cold ledger -> full-batch assumption, matching
+        the pre-compaction cost model)."""
+        cost = 0.0
+        for si in self.order:
+            st = self.stages[si]
+            if stats is None:
+                frac, execd = 1.0, 1.0
+            else:
+                frac = stats.stage_row_frac(st.name)
+                execd = stats.stage_exec_rate(st.name)
+            cost += st.cost * frac + step_overhead * execd
+        return cost
 
     def describe(self) -> List[Dict]:
         """Operator view of the current staging (order, cost, slots)."""

@@ -20,6 +20,17 @@ population** rather than per query:
 Rates are smoothed by a weak prior (``prior_pass/prior_seen``, default
 1/2 -> cold rate 0.5) so a slot never divides by zero and cold slots sort
 deterministically between observed extremes.
+
+Beyond per-predicate pass rates, the store also keeps a **per-stage row
+ledger** (``observe_stage_rows``/``stage_row_frac``/``stage_exec_rate``):
+for every cost tier of the staged planner, what fraction of each batch's
+rows the tier actually had to evaluate after row-level compaction, and
+how often it executed at all (vs being tier-skipped).  Those rates feed
+the restage-boundary decisions in ``MultiQueryCascade`` — a parked
+cascade predicts the staged plan's per-batch cost from the ledger
+(``StagedQueryPlan.predicted_batch_cost``) instead of relying only on
+probe batches — and, because ``QueryRegistry`` owns the store, they
+survive epoch-lazy plan rebuilds just like the slot rates do.
 """
 from __future__ import annotations
 
@@ -39,13 +50,29 @@ class SlotStats:
     same test always hit the same entry.
     """
 
-    def __init__(self, *, prior_pass: float = 1.0, prior_seen: float = 2.0):
+    def __init__(self, *, prior_pass: float = 1.0, prior_seen: float = 2.0,
+                 stage_decay: float = 0.9):
         if prior_seen <= 0:
             raise ValueError("prior_seen must be positive")
+        if not 0.0 < stage_decay <= 1.0:
+            raise ValueError("stage_decay must be in (0, 1]")
         self.prior_pass = float(prior_pass)
         self.prior_seen = float(prior_seen)
+        self.stage_decay = float(stage_decay)
         self._passed: Dict[Hashable, float] = {}
         self._seen: Dict[Hashable, float] = {}
+        # per-stage row ledger (staged planner feedback; keys are stage
+        # names — "counts", "spatial", "region@r2" — stable across plan
+        # rebuilds that keep the same tier structure).  Unlike the
+        # per-slot pass counts, these accumulators DECAY (EWMA with
+        # effective window ~1/(1 - stage_decay) observations): the ledger
+        # drives the staged-vs-exhaustive mode prediction, and a lifetime
+        # average would let a long-dead traffic pattern veto that
+        # decision for as long again — after workload drift the
+        # prediction must converge to the new regime in bounded time.
+        self._stage_rows: Dict[str, float] = {}
+        self._stage_batch: Dict[str, float] = {}
+        self._stage_exec: Dict[str, float] = {}
 
     @staticmethod
     def key(pred) -> Hashable:
@@ -81,7 +108,34 @@ class SlotStats:
         for p, n in zip(preds, passed):
             self.observe(p, float(n), seen, canonical=canonical)
 
+    def observe_stage_rows(self, stage: str, rows: float,
+                           batch: float) -> None:
+        """Record that one cost tier evaluated ``rows`` of a ``batch``-row
+        batch (``rows`` includes bucket padding — it is the work actually
+        paid, the same convention as ``oracle_frames_evaluated``; 0 means
+        the tier was skipped outright)."""
+        if batch <= 0:
+            return
+        g = self.stage_decay
+        self._stage_rows[stage] = g * self._stage_rows.get(stage, 0.0) \
+            + float(rows)
+        self._stage_batch[stage] = g * self._stage_batch.get(stage, 0.0) \
+            + float(batch)
+        self._stage_exec[stage] = g * self._stage_exec.get(stage, 0.0) \
+            + (float(batch) if rows > 0 else 0.0)
+
     # -- reads ------------------------------------------------------------
+
+    def stage_row_frac(self, stage: str) -> float:
+        """Smoothed expected fraction of a batch's rows the tier evaluates
+        (cold default 1.0 — assume full-batch work until observed)."""
+        return ((self._stage_rows.get(stage, 0.0) + self.prior_seen)
+                / (self._stage_batch.get(stage, 0.0) + self.prior_seen))
+
+    def stage_exec_rate(self, stage: str) -> float:
+        """Smoothed probability the tier executes at all (cold 1.0)."""
+        return ((self._stage_exec.get(stage, 0.0) + self.prior_seen)
+                / (self._stage_batch.get(stage, 0.0) + self.prior_seen))
 
     def pass_rate(self, pred, *, canonical: bool = False) -> float:
         k = pred if canonical else self.key(pred)

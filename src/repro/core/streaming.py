@@ -40,8 +40,13 @@ class FrameSampler:
         self.rng = np.random.default_rng(seed)
 
     def sample(self, lo: int, hi: int, n: int) -> np.ndarray:
-        n = min(n, hi - lo)
-        return np.sort(self.rng.choice(np.arange(lo, hi), size=n,
+        """n distinct sorted indices from [lo, hi); clamped to the window.
+
+        A degenerate window (``hi <= lo`` — e.g. the fresh part of a
+        fully-overlapped hopping window, or a stream tail) yields an
+        empty sample rather than feeding ``rng.choice`` a negative size."""
+        n = max(min(n, hi - lo), 0)
+        return np.sort(self.rng.choice(np.arange(lo, max(hi, lo)), size=n,
                                        replace=False))
 
 
@@ -144,7 +149,11 @@ class QueryRegistry:
     store: plan rebuilds triggered by registration churn hand the same
     store to the next engine, so a query registered mid-stream inherits
     the learned per-slot selectivities instead of re-observing them from
-    a cold start."""
+    a cold start.  The store's per-stage row ledger rides along: the
+    rebuilt engine's staged executor predicts its undecided-row traffic
+    (and hence its park/un-park restage decisions) from the previous
+    epoch's observations, since the cost-tier names are stable across
+    plans with the same tier structure."""
 
     def __init__(self, slot_stats: Optional[SlotStats] = None):
         self._next_id = 0

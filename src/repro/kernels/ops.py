@@ -18,7 +18,8 @@ from repro.kernels.cam_head import cam_head_bgd
 from repro.kernels.decode_attention import decode_attention_bkgd
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.rwkv6_scan import rwkv6_scan_bhtk
-from repro.kernels.spatial_predicate import spatial_stats_bgc
+from repro.kernels.spatial_predicate import (spatial_stats_bgc,
+                                             spatial_stats_rows_bgc)
 
 
 def _interpret() -> bool:
@@ -112,6 +113,23 @@ def spatial_stats_inline(grid_logits: jax.Array,
     if _interpret():
         return _spatial_stats_proj(grid_logits, tau)
     return spatial_stats_bgc(grid_logits, tau=tau, interpret=False)
+
+
+def spatial_stats_rows_inline(grid_logits: jax.Array, rows: jax.Array,
+                              tau: float = 0.2) -> jax.Array:
+    """Spatial stats over a gathered row subset: (B, g, g, C) x (R,) ->
+    (R, C, 5).  Un-jitted for the same CSE reason as
+    ``spatial_stats_inline`` — the staged planner traces this inside its
+    per-stage step functions.  On TPU the gather rides the kernel's
+    scalar-prefetched index map (no (R, g, g, C) intermediate); every
+    other backend uses the projection reduction on the explicitly
+    gathered rows, which XLA fuses with the threshold pass
+    (``pltpu.PrefetchScalarGridSpec`` is TPU-only — the GPU Pallas
+    backend cannot lower it, so gating on "not CPU" would crash there)."""
+    if jax.default_backend() == "tpu":
+        return spatial_stats_rows_bgc(grid_logits, rows, tau=tau,
+                                      interpret=False)
+    return _spatial_stats_proj(grid_logits[rows], tau)
 
 
 @functools.partial(jax.jit, static_argnames=("tau",))

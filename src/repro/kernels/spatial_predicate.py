@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, o_ref, *, tau: float, g: int):
@@ -55,6 +56,47 @@ def spatial_stats_bgc(grid_logits: jax.Array, *, tau: float = 0.2,
         out_shape=jax.ShapeDtypeStruct((B, C, 5), jnp.float32),
         interpret=interpret,
     )(flat)
+
+
+def _rows_kernel(rows_ref, x_ref, o_ref, *, tau: float, g: int):
+    del rows_ref        # consumed by the BlockSpec index maps, not the body
+    _kernel(x_ref, o_ref, tau=tau, g=g)
+
+
+def spatial_stats_rows_bgc(grid_logits: jax.Array, rows: jax.Array, *,
+                           tau: float = 0.2,
+                           interpret: bool = False) -> jax.Array:
+    """Stats reduction over a gathered row subset.
+
+    grid_logits: (B, g, g, C); rows: (R,) int32 frame indices (duplicates
+    allowed — the staged planner pads its undecided-row buckets by
+    repeating the last survivor) -> (R, C, 5) float32.
+
+    The gather happens in the BlockSpec index map: ``rows`` is
+    scalar-prefetched, so each grid step DMAs exactly the one frame it
+    reduces straight from the full (B, g^2, C) tensor in HBM — the
+    compacted (R, g, g, C) intermediate is never materialized.  This is
+    the kernel behind row-level short-circuiting: the expensive tiers of
+    ``repro.core.plan.StagedQueryPlan`` touch only the frames the cheap
+    tiers left undecided.
+    """
+    B, g, g2_, C = grid_logits.shape
+    assert g == g2_
+    R = rows.shape[0]
+    flat = grid_logits.reshape(B, g * g, C)
+    kernel = functools.partial(_rows_kernel, tau=tau, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((1, g * g, C),
+                               lambda r, rows_ref: (rows_ref[r], 0, 0))],
+        out_specs=pl.BlockSpec((1, C, 5), lambda r, rows_ref: (r, 0, 0)))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, C, 5), jnp.float32),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), flat)
 
 
 def stage_class_slice(cls_a: np.ndarray, cls_b: np.ndarray

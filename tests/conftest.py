@@ -21,6 +21,18 @@ try:
 except ModuleNotFoundError:
     HAS_HYPOTHESIS = False
 
+if HAS_HYPOTHESIS:
+    # Env-gated example budgets: the full profile is the default
+    # (``make test``); REPRO_HYPOTHESIS_PROFILE=ci (``make test-fast``)
+    # trims the property sweeps for quick iteration.  Tests must NOT pin
+    # ``max_examples`` in their own @settings or the profile cannot
+    # override it — use ``@settings(deadline=None)`` only.
+    from hypothesis import settings as _hyp_settings
+    _hyp_settings.register_profile("full", max_examples=100, deadline=None)
+    _hyp_settings.register_profile("ci", max_examples=10, deadline=None)
+    _hyp_settings.load_profile(
+        os.environ.get("REPRO_HYPOTHESIS_PROFILE", "full"))
+
 from repro.models.config import BlockKind, ModelConfig
 
 

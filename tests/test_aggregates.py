@@ -75,13 +75,13 @@ def _check_accumulator_merge_associative(n1, n2, seed):
 
 
 if HAS_HYPOTHESIS:
-    @settings(max_examples=30, deadline=None)
+    @settings(deadline=None)   # example budget: profile-governed (conftest)
     @given(st.integers(10, 200), st.floats(0.0, 3.0),
            st.integers(0, 2 ** 31 - 1))
     def test_cv_variance_never_worse_hypothesis(n, noise, seed):
         _check_cv_variance_never_worse(n, noise, seed)
 
-    @settings(max_examples=25, deadline=None)
+    @settings(deadline=None)   # example budget: profile-governed (conftest)
     @given(st.integers(4, 64), st.integers(4, 64),
            st.integers(0, 2 ** 31 - 1))
     def test_accumulator_merge_associative(n1, n2, seed):
@@ -121,6 +121,66 @@ def test_distributed_reduce_matches_merge():
     n2, m2, M22 = g(acc.n, acc.mean, acc.M2)
     np.testing.assert_allclose(m2, acc.mean, atol=1e-6)
     np.testing.assert_allclose(M22, acc.M2, atol=1e-4)
+
+
+def test_accumulator_init_dtypes_consistent():
+    """n, mean, M2 share one dtype (the former init mixed an x64-gated n
+    with always-f32 moments)."""
+    acc = AGG.CVAccumulator.init(2)
+    assert acc.n.dtype == acc.mean.dtype == acc.M2.dtype
+    from jax.experimental import enable_x64
+    with enable_x64():
+        acc64 = AGG.CVAccumulator.init(2)
+        assert acc64.n.dtype == acc64.mean.dtype == acc64.M2.dtype
+        assert acc64.n.dtype == jnp.float64
+
+
+def test_accumulator_long_stream_matches_mcv():
+    """Long-stream regression (satellite, ISSUE 3): streaming moments in
+    float64 agree with the one-shot float64 ``mcv_estimate`` on identical
+    data — the float32 accumulator drifted (Welford co-moments cancel
+    catastrophically once mean*n dwarfs the per-batch deltas) and lost
+    exact integer counting of n past 2^24."""
+    from jax.experimental import enable_x64
+    rng = np.random.default_rng(7)
+    n_chunks, chunk = 60, 4096                       # ~250k frames
+    # large common mean maximizes f32 cancellation in the co-moments
+    x = rng.normal(0, 1, n_chunks * chunk)
+    y = 1e4 + 0.8 * x + rng.normal(0, 0.5, n_chunks * chunk)
+    z = (1e4 + x)[:, None]
+    with enable_x64():
+        acc = AGG.CVAccumulator.init(1)
+        for k in range(n_chunks):
+            sl = slice(k * chunk, (k + 1) * chunk)
+            acc = acc.update(jnp.asarray(y[sl]), jnp.asarray(z[sl]))
+        assert float(acc.n) == n_chunks * chunk      # exact count
+        est = acc.estimate()
+    ref = AGG.mcv_estimate(y, z)
+    assert est.mean == pytest.approx(ref.mean, rel=1e-9, abs=1e-6)
+    assert est.beta[0] == pytest.approx(ref.beta[0], rel=1e-6)
+    assert est.var == pytest.approx(ref.var, rel=1e-6)
+    assert est.naive_var == pytest.approx(ref.naive_var, rel=1e-6)
+
+
+def test_ci95_student_t_widens_small_n():
+    """At the small n the API admits (n >= 3), the CI uses the Student-t
+    quantile — wider than the fixed z=1.96 — and converges back to the
+    normal quantile for large n."""
+    import math
+
+    def width(n, seed=0):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(0, 1, n)
+        y = x + rng.normal(0, 1, n)
+        est = AGG.cv_estimate(y, x)
+        lo, hi = est.ci95()
+        assert hi >= lo
+        return (hi - lo) / (2 * math.sqrt(est.var))  # the applied quantile
+
+    assert width(3) == pytest.approx(12.706, rel=1e-3)    # t_{.975}(df=1)
+    assert width(5) == pytest.approx(3.182, rel=1e-3)     # df=3
+    assert width(20000) == pytest.approx(1.96, rel=1e-2)  # -> normal z
+    assert width(3) > width(5) > width(20000)
 
 
 def test_ci_covers_truth():

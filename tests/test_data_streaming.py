@@ -97,6 +97,42 @@ def test_frame_sampler_n_exceeds_window():
     np.testing.assert_array_equal(s.sample(3, 4, 1), [3])
 
 
+def test_frame_sampler_degenerate_window_empty_and_end_to_end():
+    """A degenerate window (hi <= lo) yields an empty sample instead of
+    feeding rng.choice a negative size; exercised end-to-end through
+    MultiQueryStreamExecutor by an auditing engine that samples only the
+    frames beyond the previous batches' high-water mark — overlapping
+    hopping windows make that range empty (and briefly inverted) for
+    every revisited batch."""
+    s = FrameSampler(seed=3)
+    np.testing.assert_array_equal(s.sample(10, 10, 4), np.empty(0, int))
+    np.testing.assert_array_equal(s.sample(10, 7, 4), np.empty(0, int))
+    assert s.sample(10, 10, 0).size == 0
+
+    reg = QueryRegistry()
+    qid = reg.register("q")
+    hwm = {"hi": 0}
+    sample_sizes = []
+
+    def factory(queries):
+        def engine(idx):
+            lo, hi = int(idx[0]), int(idx[-1]) + 1
+            fresh = s.sample(max(lo, hwm["hi"]), hi, 2)    # empty on overlap
+            sample_sizes.append(fresh.size)
+            if fresh.size:
+                assert fresh.min() >= hwm["hi"]            # truly fresh
+            hwm["hi"] = max(hwm["hi"], hi)
+            return np.ones((len(idx), len(queries)), bool)
+        return engine
+
+    ex = MultiQueryStreamExecutor(reg, factory,
+                                  HoppingWindow(size=8, advance=4), batch=4)
+    results = ex.run(16)
+    assert 0 in sample_sizes            # overlapped batches sampled nothing
+    assert max(sample_sizes) > 0        # fresh batches sampled fine
+    assert [r.hits[qid] for r in results] == [8, 8, 8]
+
+
 def test_straggler_exact_deadline_boundary():
     """Dropping is strictly-behind-schedule: a pipeline that costs EXACTLY
     the arrival budget per batch keeps up (no drops); one just past it

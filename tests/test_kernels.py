@@ -113,6 +113,28 @@ def test_spatial_stats_interpret_parity_random_occupancy(seed):
     np.testing.assert_allclose(s_kernel[..., 4][empty], 0.0)
 
 
+@pytest.mark.parametrize("seed", range(3))
+def test_spatial_stats_rows_gathered_subset_parity(seed):
+    """The scalar-prefetched row-gather kernel (row-level
+    short-circuiting's stats reduction) equals gather-then-reduce for
+    arbitrary row subsets — out-of-order, duplicated (bucket padding),
+    and smaller or larger than the batch — in both the Pallas interpreter
+    and the CPU projection path used under jit."""
+    from repro.kernels.spatial_predicate import (spatial_stats_bgc,
+                                                 spatial_stats_rows_bgc)
+
+    rng = np.random.default_rng(100 + seed)
+    B, g, C = 6, 8, 4
+    gl = jnp.asarray(rng.normal(0, 0.7, (B, g, g, C)).astype(np.float32))
+    for rows in ([4, 1, 1, 3], [0], list(rng.integers(0, B, 2 * B))):
+        rows_j = jnp.asarray(np.asarray(rows, np.int32))
+        want = np.asarray(spatial_stats_bgc(gl, interpret=True))[rows]
+        got = np.asarray(spatial_stats_rows_bgc(gl, rows_j, interpret=True))
+        np.testing.assert_array_equal(got, want)
+        got_inline = np.asarray(ops.spatial_stats_rows_inline(gl, rows_j))
+        np.testing.assert_array_equal(got_inline, want)
+
+
 def test_eval_spatial_leaves_matches_per_leaf_eval():
     """Batched-leaf ORDER() evaluation over kernel stats == scalar
     ``eval_filters`` on each Spatial leaf (all relations, with dilation)."""

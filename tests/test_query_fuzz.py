@@ -60,7 +60,7 @@ def perfect_outputs(objs):
                          grid=jnp.where(jnp.asarray(occ)[None], 1.0, 0.0))
 
 
-@settings(max_examples=150, deadline=None)
+@settings(deadline=None)   # example budget: profile-governed (conftest)
 @given(query_strategy, objects_strategy)
 def test_filter_eval_equals_exact_semantics(query, objs):
     """Perfect filters => eval_filters == eval_objects for ANY query tree.

@@ -292,6 +292,201 @@ def test_adaptive_cascade_matches_exhaustive_across_batches(seed):
 
 
 # ---------------------------------------------------------------------------
+# invariant 4: row-level short-circuiting is invisible in the results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,min_bucket,B",
+                         [(0, 1, 16), (1, 2, 7), (2, 4, 33), (3, 8, 16),
+                          (4, 64, 16), (5, 1, 1), (6, 3, 24)])
+def test_staged_row_compaction_identical_across_bucket_sizes(seed,
+                                                             min_bucket, B):
+    """Staged-with-row-compaction ≡ exhaustive ``QueryPlan.evaluate``
+    bit-identically for random query sets, adversarial stage orders,
+    random stat states, every bucket floor (including non-power-of-two
+    floors and min_bucket >= B, which disables compaction), and odd batch
+    sizes that never align with the power-of-two buckets."""
+    rng = np.random.default_rng(400 + seed)
+    queries = [rand_query(rng, relaxed=True) for _ in range(6)]
+    plan = QueryPlan(queries)
+    out = rand_outputs(rng, B=B)
+    want = np.asarray(plan.evaluate(out))
+
+    stats = rand_stat_state(rng, plan)
+    staged = plan.build_staged(stats, min_bucket=min_bucket)
+    np.testing.assert_array_equal(np.asarray(staged.evaluate(out)), want)
+    staged.flush_stats(stats)               # learn (incl. the row ledger)
+    staged.restage(stats)
+    np.testing.assert_array_equal(np.asarray(staged.evaluate(out)), want)
+
+    order = list(rng.permutation(len(staged.stages)))   # expensive first
+    forced = plan.build_staged(stats, order=order, min_bucket=min_bucket)
+    np.testing.assert_array_equal(np.asarray(forced.evaluate(out)), want)
+
+
+def test_row_compaction_runs_expensive_tiers_on_survivors_only():
+    """A shared rarely-true count guard decides most frames at the count
+    tier; the spatial/SAT tiers must then evaluate only the compacted
+    undecided rows (power-of-two bucket), with honest cost/row reporting
+    and stats recorded against the real (unpadded) row count."""
+    rng = np.random.default_rng(42)
+    B = 64
+    busy = Q.Count(Q.Op.GE, 9)              # true on a minority of frames
+    spa = Q.Spatial(0, Q.Rel.LEFT, 1)
+    queries = [Q.And((busy, spa)),
+               Q.And((busy, Q.Region(1, (0, 0, 4, 4), 1, radius=1))),
+               Q.And((busy, Q.Spatial(1, Q.Rel.ABOVE, 2, radius=1)))]
+    plan = QueryPlan(queries)
+    out = rand_outputs(rng, B=B)
+    n_busy = int(np.asarray(Q.eval_filters(busy, out)).sum())
+    assert 0 < n_busy < B // 2              # genuinely skewed batch
+
+    stats = SlotStats()
+    staged = plan.build_staged(stats)
+    masks = np.asarray(staged.evaluate(out))
+    np.testing.assert_array_equal(masks, np.asarray(plan.evaluate(out)))
+
+    rep = staged.last_report
+    assert rep.ran[0] == "counts"
+    assert rep.rows_evaluated[0] == B == rep.batch
+    assert rep.undecided_rows_in[0] == B
+    # every later tier ran on a compacted power-of-two bucket, not B
+    assert len(rep.ran) > 1
+    for rows, undecided in zip(rep.rows_evaluated[1:],
+                               rep.undecided_rows_in[1:]):
+        assert undecided == n_busy          # guard-failed rows dropped out
+        assert undecided <= rows < B
+        assert rows & (rows - 1) == 0       # power of two
+    # cost scales with rows actually evaluated, not the batch
+    full_cost = sum(staged.stages[si].cost for si in range(len(staged.stages)))
+    assert rep.cost_run < full_cost
+
+    staged.flush_stats(stats)
+    assert stats.seen(busy) == B            # count tier saw every frame
+    # the compacted spatial tier observed spa only on undecided rows — a
+    # CONDITIONAL rate that must NOT pollute the shared unconditional
+    # ledger (it would mislead every adaptive ordering keyed on it)
+    assert stats.seen(spa) == 0
+    assert stats.pass_rate(spa) == pytest.approx(0.5)   # stays cold/neutral
+    assert stats.stage_row_frac("counts") == pytest.approx(1.0)
+    assert stats.stage_row_frac("spatial") < 0.5
+
+
+def test_predicted_batch_cost_tracks_stage_row_ledger():
+    """The per-stage undecided-rate feedback makes ``predicted_batch_cost``
+    fall from the cold full-batch assumption once traffic shows the
+    expensive tiers are skipped/compacted — the signal a parked adaptive
+    cascade uses to un-park without a lucky probe batch."""
+    queries = [Q.And((Q.ClassCount(0, Q.Op.GE, 50),   # ~never true guard
+                      Q.Spatial(0, Q.Rel.LEFT, 1))),
+               Q.Or((Q.Count(Q.Op.GE, 0),
+                     Q.Region(1, (0, 0, 3, 3), 1, radius=1)))]
+    plan = QueryPlan(queries)
+    stats = SlotStats()
+    staged = plan.build_staged(stats)
+    cold = staged.predicted_batch_cost(stats, step_overhead=4.0)
+    assert cold == pytest.approx(
+        sum(staged.stages[si].cost for si in range(len(staged.stages)))
+        + 4.0 * len(staged.stages))
+    out = FilterOutputs(counts=jnp.asarray(np.ones((32, C), np.float32)),
+                        grid=None)
+    for _ in range(4):                       # guard decides everything
+        staged.evaluate(out)
+        staged.flush_stats(stats)
+    warm = staged.predicted_batch_cost(stats, step_overhead=4.0)
+    assert warm < cold / 2
+    assert stats.stage_row_frac("spatial") < 0.1
+    assert stats.stage_exec_rate("spatial") < 0.1
+    assert stats.stage_row_frac("counts") == pytest.approx(1.0)
+
+
+def test_adaptive_cascade_parks_after_workload_drift():
+    """The stage-row ledger is a lifetime average: after a long skewed
+    phase it still predicts staging is cheap.  When the traffic drifts
+    uniform, the park decision must follow the fresh *observed* window
+    cost — the stale prediction may only vote to un-park, never to veto
+    parking."""
+    rng = np.random.default_rng(55)
+    queries = [Q.And((Q.ClassCount(0, Q.Op.GE, 50),
+                      Q.Spatial(0, Q.Rel.LEFT, 1),
+                      Q.Region(1, (0, 0, 3, 3), 1, radius=1)))]
+    mqc = CS.MultiQueryCascade(queries, adaptive=True, restage_every=2)
+    grid = jnp.asarray(rng.normal(0, 0.5, (8, 6, 6, C)).astype(np.float32))
+    skewed = FilterOutputs(                      # guard false everywhere:
+        counts=jnp.asarray(np.ones((8, C), np.float32)),   # count tier
+        grid=grid)                                         # decides all
+    uniform = FilterOutputs(                     # guard true everywhere:
+        counts=jnp.asarray(np.full((8, C), 60.0, np.float32)),
+        grid=grid)                               # every stage must run
+    for _ in range(40):                          # LONG skewed history
+        mqc.masks(skewed)
+    assert mqc.mode == "staged"                  # skewed traffic: cheap
+    assert mqc.slot_stats.stage_row_frac("spatial") < 0.5  # ledger: cheap
+    exhaustive = CS.MultiQueryCascade(queries)
+    modes = []
+    for _ in range(30):                          # drift: nothing decided
+        np.testing.assert_array_equal(np.asarray(mqc.masks(uniform)),
+                                      np.asarray(exhaustive.masks(uniform)))
+        modes.append(mqc.mode)
+    assert mqc.mode == "exhaustive"              # parked despite the stale
+                                                 # cheap ledger prediction
+    # ... and the park STICKS: the decaying stage ledger converges to the
+    # new regime instead of un-park/park oscillating for as long as the
+    # skewed history (the probe-fed prediction may flip it briefly, but
+    # the tail must be solidly parked)
+    assert all(m == "exhaustive" for m in modes[-10:])
+
+
+# ---------------------------------------------------------------------------
+# compaction helpers (satellites: bucket overflow + padded-tail accounting)
+# ---------------------------------------------------------------------------
+
+def test_compact_survivors_bucket_overflow_raises():
+    """A bucket smaller than the survivor count would silently drop real
+    survivors in the order[:bucket] gather — it must raise instead."""
+    mask = jnp.asarray(np.array([True] * 5 + [False] * 3))
+    arr = jnp.arange(8.0)
+    with pytest.raises(ValueError, match="survivors exceed"):
+        CS.compact_survivors(mask, arr, bucket=4)
+    n, (g,), idx = CS.compact_survivors(mask, arr, bucket=8)
+    assert int(n) == 5
+    np.testing.assert_array_equal(np.sort(np.asarray(idx[:5])),
+                                  np.arange(5))
+
+
+def test_compact_indices_pow2_padding():
+    mask = np.zeros(64, bool)
+    mask[[3, 17, 40]] = True
+    idx, n = CS.compact_indices(mask, min_bucket=2)
+    assert n == 3 and idx.size == 4          # next power of two
+    np.testing.assert_array_equal(idx, [3, 17, 40, 40])   # pad = last row
+    idx_full, n_full = CS.compact_indices(np.ones(10, bool), min_bucket=2)
+    assert n_full == 10 and idx_full.size == 10           # capped at B
+    idx0, n0 = CS.compact_indices(np.zeros(8, bool), min_bucket=4)
+    assert n0 == 0 and idx0.size == 4 and (idx0 == 0).all()
+    with pytest.raises(ValueError, match="cannot hold"):
+        CS.compact_indices(mask, min_bucket=2, cap=2)
+
+
+def test_bucketed_oracle_padding_accounting_matches():
+    """``bucketed_oracle``'s padded-tail work agrees with
+    ``oracle_frames_evaluated`` for every survivor count."""
+    for n_surv in [0, 1, 5, 8, 9, 16, 17]:
+        idx = np.arange(n_surv)
+        sizes = []
+
+        def oracle(batch, chunk):
+            sizes.append(chunk.size)
+            return list(chunk)
+
+        out = CS.bucketed_oracle(oracle, None, idx, 8)
+        assert out == list(idx)              # padding results dropped
+        assert sum(sizes) == CS.oracle_frames_evaluated(n_surv, 8)
+        assert all(s == 8 for s in sizes)    # dense fixed-size batches
+    assert CS.oracle_frames_evaluated(5, None) == 5
+    assert CS.oracle_frames_evaluated(0, 8) == 0
+
+
+# ---------------------------------------------------------------------------
 # canonicalization + dedup
 # ---------------------------------------------------------------------------
 
