@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-deps bench bench-smoke
+.PHONY: test test-fast test-deps bench bench-smoke calibrate
 
 # tier-1 verify (full hypothesis profile — the default)
 test:
@@ -23,5 +23,13 @@ bench:
 
 # seconds-scale perf trajectory record, run per PR: staged-adaptive vs
 # exhaustive shared plan -> results/bench/multi_query_adaptive.json
+# (each entry records which calibration — measured vs static-fallback —
+# produced it, so the trajectory stays interpretable across boxes)
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.multi_query_sharing --smoke
+
+# measure the staged planner's stage-body costs on THIS backend and write
+# results/calibration/<backend>.json; the adaptive engine loads it on the
+# next start (falls back to static constants when missing/stale/foreign)
+calibrate:
+	PYTHONPATH=src $(PY) -m benchmarks.calibrate

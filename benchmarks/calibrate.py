@@ -1,0 +1,61 @@
+"""Calibrate the staged planner's cost model on the active backend.
+
+Runs ``repro.core.costmodel.calibrate()``: microbenchmarks of the actual
+stage bodies (count gather, full-batch + row-gathered spatial stats,
+threshold+SAT region body, one dilation step) at several row counts,
+plus the staged executor's per-stage propagation overhead, fitted to
+``cost(rows) = overhead + per_row * rows`` per stage and written to
+``results/calibration/<backend>.json`` with a backend fingerprint.  The
+adaptive engine (``costmodel.default_cost_model()``) loads that file on
+the next start — and falls back to the static constants whenever it is
+missing, corrupt, stale, or fingerprinted for a different backend.
+
+    PYTHONPATH=src python -m benchmarks.calibrate   # == make calibrate
+
+On this CPU container the Pallas kernels run through their XLA fallback
+paths, so the measured coefficients describe THIS box — which is the
+point: each deployment calibrates where it runs.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import costmodel
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=256,
+                    help="largest row count measured (power of two "
+                         "sub-points are derived from it)")
+    ap.add_argument("--grid", type=int, default=16)
+    ap.add_argument("--classes", type=int, default=8)
+    ap.add_argument("--repeat", type=int, default=3,
+                    help="timing repeats per (body, rows) point (median)")
+    ap.add_argument("--path", default=None,
+                    help="output path (default: "
+                         "results/calibration/<backend>.json)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="measure and print, write nothing")
+    args = ap.parse_args()
+
+    model = costmodel.calibrate(
+        batch=args.batch, grid=args.grid, classes=args.classes,
+        repeat=args.repeat, save=not args.dry_run, path=args.path)
+
+    print(f"backend: {model.backend}   fingerprint: {model.fingerprint}")
+    print(f"{'stage body':>14s} {'overhead us':>12s} {'per-row us':>11s}")
+    for key in costmodel.STAGE_COEFF_KEYS:
+        c = model.coeffs[key]
+        print(f"{key:>14s} {c.overhead:12.1f} {c.per_row:11.3f}")
+    print(f"{'step overhead':>14s} {model.step_overhead():12.1f}")
+    if not args.dry_run:
+        path = args.path or costmodel.calibration_path(model.backend)
+        print(f"\nwrote {path} — the adaptive engine loads it on the next "
+              f"start (stale after "
+              f"{costmodel.DEFAULT_MAX_AGE_S / 86400:.0f} days or any "
+              f"backend/jax change; re-run `make calibrate` then)")
+
+
+if __name__ == "__main__":
+    main()

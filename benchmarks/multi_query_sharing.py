@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, save_result, timeit
+from repro.core import costmodel
 from repro.core import query as Q
 from repro.core.cascade import MultiQueryCascade
 from repro.core.filters import FilterOutputs
@@ -219,7 +220,8 @@ B_ROWSKEW = 256
 
 
 def _measure_staged(queries, out, repeat: int, warm_batches: int = 4,
-                    min_bucket: int = 8, measure_exhaustive: bool = True):
+                    min_bucket: int = 8, measure_exhaustive: bool = True,
+                    cost_model=None):
     """(us_exhaustive, us_staged, report) with warmed stats + restage.
 
     ``measure_exhaustive=False`` skips timing the exhaustive program
@@ -228,7 +230,8 @@ def _measure_staged(queries, out, repeat: int, warm_batches: int = 4,
     plan = QueryPlan(queries)
     exhaustive = jax.jit(plan.evaluate)
     stats = SlotStats()
-    staged = plan.build_staged(stats, min_bucket=min_bucket)
+    staged = plan.build_staged(stats, min_bucket=min_bucket,
+                               cost_model=cost_model)
     for _ in range(warm_batches):                 # learn population rates
         staged.evaluate(out)
         staged.flush_stats(stats)
@@ -245,6 +248,13 @@ def run_adaptive(smoke: bool = False) -> dict:
     sizes = (16,) if smoke else ADAPTIVE_SIZES
     repeat = 3 if smoke else 7
     rng = np.random.default_rng(42)
+    # which cost model prices the staging decisions in this run: the
+    # measured per-backend calibration when results/calibration/ holds a
+    # trustworthy one (make calibrate), else the static fallback — each
+    # JSON entry records it so the perf trajectory stays interpretable
+    # across boxes and calibration states
+    cm = costmodel.default_cost_model()
+    print(f"cost model: {cm.source} (backend={cm.backend})")
 
     def rand_out(batch):
         return FilterOutputs(
@@ -268,19 +278,20 @@ def run_adaptive(smoke: bool = False) -> dict:
         for n in sizes:
             queries = make(n)
             us_ex, us_staged, report = _measure_staged(
-                queries, out, repeat=repeat)
+                queries, out, repeat=repeat, cost_model=cm)
             # PR 2's tier-granular executor on the SAME queries/batch:
             # min_bucket >= B disables row compaction, so needed stages
             # run full-batch — the baseline row_compaction_speedup is
             # measured against
             _, us_tier_only, _ = _measure_staged(
                 queries, out, repeat=repeat, min_bucket=1 << 30,
-                measure_exhaustive=False)
+                measure_exhaustive=False, cost_model=cm)
             speedup = us_ex / us_staged
             row_speedup = us_tier_only / us_staged
             # the full adaptive cascade: staging + cost-model mode switch
             # (parks staging when the workload gives it nothing to skip)
-            mqc = MultiQueryCascade(queries, adaptive=True, restage_every=8)
+            mqc = MultiQueryCascade(queries, adaptive=True, restage_every=8,
+                                    cost_model=cm)
             for _ in range(2 * mqc.restage_every):          # learn + decide
                 jax.block_until_ready(mqc.masks(out))
             mode = mqc.mode
@@ -302,7 +313,10 @@ def run_adaptive(smoke: bool = False) -> dict:
                 "stages_skipped_names": report.skipped,
                 "rows_evaluated": report.rows_evaluated,
                 "undecided_rows_in": report.undecided_rows_in,
-                "batch": report.batch}
+                "batch": report.batch,
+                # provenance: measured calibration vs static fallback
+                "calibration": cm.source,
+                "calibration_backend": cm.backend}
             emit(f"multi_query_adaptive/{workload}/N{n}", us_staged,
                  f"speedup={speedup:.2f}x;rows={row_speedup:.2f}x;"
                  f"ran={len(report.ran)}/{len(report.order)};mode={mode}")
@@ -311,6 +325,7 @@ def run_adaptive(smoke: bool = False) -> dict:
                   f"{us_casc:11.0f} {mode:>11s} "
                   f"{len(report.ran)}/{len(report.order)} ran")
 
+    res["calibration_info"] = cm.describe()
     save_result("multi_query_adaptive", res)
     return res
 

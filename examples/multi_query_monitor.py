@@ -28,6 +28,11 @@ branch heads) so the example runs in seconds without training; swap in
 learned-filter version.
 
     PYTHONPATH=src python examples/multi_query_monitor.py [--frames 1024]
+
+``--stats PATH`` persists the population store across runs
+(``SlotStats.save``/``load`` via ``QueryRegistry(stats_path=...)``): the
+second invocation resumes with the first one's learned selectivities and
+row ledger instead of relearning them from the prior.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -50,6 +55,9 @@ def main():
     ap.add_argument("--frames", type=int, default=1024)
     ap.add_argument("--window", type=int, default=256)
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--stats", default=None, metavar="PATH",
+                    help="persist SlotStats here across runs (loaded at "
+                         "start when present, saved at exit)")
     args = ap.parse_args()
 
     scene = PRESETS["jackson-like"]
@@ -57,7 +65,10 @@ def main():
     counts = jnp.asarray(data["counts"].astype(np.float32))
     grid = jnp.where(jnp.asarray(data["occupancy"]), 1.0, 0.0)
 
-    registry = QueryRegistry()
+    registry = QueryRegistry(stats_path=args.stats)
+    if args.stats and len(registry.slot_stats):
+        print(f"resumed {len(registry.slot_stats)} learned slot rates "
+              f"from {args.stats}")
     q_busy = registry.register(Q.Count(Q.Op.GE, 3))
     q_car = registry.register(Q.ClassCount(0, Q.Op.GE, 1))
     q_order = registry.register(
@@ -126,6 +137,10 @@ def main():
     print(f"population stats: {len(registry.slot_stats)} slots learned "
           f"across {executor.rebuilds} engine rebuilds (stats survive "
           f"registration churn)")
+    if args.stats:
+        registry.save_stats()
+        print(f"saved population stats to {args.stats} — the next run "
+              f"resumes warm (stats survive restarts too)")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,21 @@ short-circuiting.  Those observations live in a ``SlotStats`` store
 (repro.core.stats) — the same statistics layer the staged multi-query
 planner orders its stages by, so single-query cascades and the shared
 engine learn from one ledger.
+
+The multi-query half of this module (``MultiQueryCascade`` /
+``MultiQueryExecutor``) drives N registered queries off ONE shared filter
+evaluation (repro.core.plan): deduplicated leaves, staged adaptive
+execution with tier- and row-level short-circuiting (the ``min_bucket``
+knob floors the row-compaction buckets; >= batch disables compaction and
+reproduces the tier-granular executor), and a cost-model mode switch that
+*parks* staging on workloads where it cannot win.  Since the cost-model
+subsystem landed (repro.core.costmodel), every quantity in that switch —
+per-stage run costs, the exhaustive baseline, the per-stage step
+overhead, and the ledger-predicted staged cost a parked cascade un-parks
+on — comes from one ``CostModel`` instance: a per-backend *measured*
+calibration when ``results/calibration/<backend>.json`` is present and
+trustworthy, else the static hand-picked constants the engine originally
+shipped with (``costmodel.default_cost_model()``).
 """
 from __future__ import annotations
 
@@ -315,7 +330,7 @@ class MultiQueryCascade:
     three-valued propagation + the per-stage undecided sync); on a
     workload where nothing gets skipped that is pure loss, so the cascade
     compares the staged cost against the exhaustive plan's under the same
-    static cost model at every restage boundary and *parks* staging when
+    ``cost_model`` at every restage boundary and *parks* staging when
     it is not earning its keep — the exhaustive path then runs
     ``evaluate_with_counts`` so the population statistics keep learning,
     and staging is probed again one batch per boundary in case the
@@ -327,37 +342,62 @@ class MultiQueryCascade:
     ledger says the expensive tiers would only see a sliver of each batch
     un-parks without waiting for a lucky probe.  ``mode`` is "staged" or
     "exhaustive".  ``min_bucket`` is the row-compaction bucket floor
-    (>= batch size disables row compaction).
+    (>= batch size disables row compaction; smaller floors trade a few
+    extra compiled step variants for less padded work per stage).
+
+    ``cost_model`` prices every side of that balance (stage runs, step
+    overhead, exhaustive baseline, ledger prediction) in one unit
+    system; the default loads the measured per-backend calibration when
+    one is present and provably falls back to the legacy static
+    constants when not (repro.core.costmodel).  ``step_overhead=None``
+    takes the model's measured/static per-stage overhead; passing a
+    number overrides it *in the model's units*.
     """
 
     def __init__(self, queries: Sequence[Q.Predicate], *, tau: float = 0.2,
                  adaptive: bool = False,
                  slot_stats: Optional[SlotStats] = None,
-                 restage_every: int = 16, step_overhead: float = 4.0,
-                 min_bucket: int = 8):
+                 restage_every: int = 16,
+                 step_overhead: Optional[float] = None,
+                 min_bucket: int = 8, cost_model=None):
+        from repro.core import costmodel as CM
         from repro.core.plan import QueryPlan
         self.queries = tuple(queries)
         self.tau = tau
         self.adaptive = adaptive
         self.restage_every = restage_every
-        self.step_overhead = step_overhead
         self.plan = QueryPlan(self.queries, tau=tau)
-        if slot_stats is not None and not adaptive:
+        if not adaptive:
             # a forgotten adaptive=True would otherwise silently leave the
-            # shared population store unread AND unfed for the whole stream
-            raise ValueError("slot_stats is only read/updated by the "
-                             "adaptive cascade; pass adaptive=True")
+            # shared population store unread AND unfed (and the cost model
+            # unconsulted) for the whole stream
+            if slot_stats is not None:
+                raise ValueError("slot_stats is only read/updated by the "
+                                 "adaptive cascade; pass adaptive=True")
+            if cost_model is not None:
+                raise ValueError("cost_model only drives the adaptive "
+                                 "cascade's staging decisions; pass "
+                                 "adaptive=True")
         if restage_every < 1:
             raise ValueError(f"restage_every must be >= 1, "
                              f"got {restage_every}")
+        # default: the measured per-backend calibration when present,
+        # else the static constants (only consulted when adaptive)
+        self.cost_model = (cost_model if cost_model is not None
+                           else CM.default_cost_model() if adaptive
+                           else CM.static_cost_model())
+        self.step_overhead = (step_overhead if step_overhead is not None
+                              else self.cost_model.step_overhead())
         self.slot_stats = (slot_stats if slot_stats is not None
                            else SlotStats()) if adaptive else None
         self._staged = (self.plan.build_staged(self.slot_stats,
-                                               min_bucket=min_bucket)
+                                               min_bucket=min_bucket,
+                                               cost_model=self.cost_model)
                         if adaptive else None)
         self._jitted = jax.jit(self.plan.evaluate)
         self._jitted_counts = jax.jit(self.plan.evaluate_with_counts)
         self._batches = 0
+        self._last_batch: Optional[int] = None
         self._cost_staged = 0.0      # modelled cost of staged batches
         self._staged_batches = 0     # batches behind _cost_staged
         self.mode = "staged" if adaptive else "exhaustive"
@@ -381,6 +421,7 @@ class MultiQueryCascade:
         if self._staged is None:
             return self._jitted(out)
         self._batches += 1
+        self._last_batch = int(out.counts.shape[0])
         boundary = self._batches % self.restage_every == 0
         # the exhaustive program evaluates EVERY leaf, so it is infeasible
         # on a grid-needing plan fed count-only (OD-COF) outputs — the
@@ -405,14 +446,16 @@ class MultiQueryCascade:
             # one window later by the observed path, while letting it
             # veto parking could pin a drifted stream to staging for the
             # ledger's whole memory.
-            exhaustive_cost = self.plan.exhaustive_cost_model()
+            exhaustive_cost = self.plan.exhaustive_cost_model(
+                self.cost_model, batch=self._last_batch)
             observed = (self._cost_staged / self._staged_batches
                         if self._staged_batches else float("inf"))
             if self.mode == "staged":
                 decide = observed
             else:
                 decide = min(observed, self._staged.predicted_batch_cost(
-                    self.slot_stats, self.step_overhead))
+                    self.slot_stats, self.step_overhead,
+                    batch=self._last_batch))
             self.mode = "staged" if decide < exhaustive_cost \
                 else "exhaustive"
             self._cost_staged = 0.0

@@ -1,0 +1,578 @@
+"""Measured cost model for the staged multi-query planner.
+
+Every staging decision in the adaptive engine is a cost comparison: the
+stage order in ``StagedQueryPlan._staging_order`` ranks tiers by cost per
+expected decision, ``StageReport.cost_run`` accumulates what a staged
+batch actually paid, ``predicted_batch_cost`` projects that cost from the
+row ledger, and ``MultiQueryCascade`` parks staging when the staged cost
+stops beating the exhaustive plan's.  Until this module existed, all of
+those used hand-picked relative constants (count=1, spatial=6,
+region=10+2·radius, step_overhead=4) tuned for one CPU box — BlazeIt
+(Kang et al.) and ExSample (Moll et al.) both show that cascade ordering
+is only robust when the cost side of the cost/benefit ratio is *measured*
+on the backend doing the work.
+
+``CostModel`` answers every such query through one interface with two
+sources:
+
+- **static** — the legacy constants, reproduced *exactly* (same relative
+  costs, same rows-fraction scaling), so a deployment without a
+  calibration file behaves bit-for-bit like the hand-tuned engine.  This
+  is the guaranteed fallback: missing, corrupt, stale, version-mismatched
+  or wrong-backend calibrations all degrade here (tested in
+  tests/test_costmodel.py).
+- **measured** — per-stage affine coefficients ``cost(rows) = overhead +
+  per_row · rows`` in microseconds, fitted by ``calibrate()`` from
+  microbenchmarks of the actual stage bodies (the count gather, the
+  full-batch and row-gathered spatial-stats reductions, the
+  threshold+summed-area-table region body, and one Manhattan-dilation
+  step) at several row counts on the active backend, plus a measured
+  per-stage step overhead (the two-pass three-valued propagation + the
+  per-stage undecided fetch).
+
+The *overhead* term is why measurement changes behaviour rather than just
+units: with purely proportional costs (the static model) the greedy
+position-aware order search in ``StagedQueryPlan`` provably reduces to
+the classic cost/benefit ratio sort, but a measured fixed overhead makes
+a stage's cost depend on how many undecided rows reach its position —
+an overhead-dominated SAT stage that looks cheap at full batch is
+expensive relative to a row-dominated spatial stage once the count tier
+has compacted the batch to a sliver, and vice versa.
+
+Calibrations serialize to ``results/calibration/<backend>.json`` with a
+backend fingerprint (platform, device kind, jax version) and a timestamp;
+``load_calibration`` refuses fingerprints that do not match the running
+process and files older than ``max_age_s`` (default 30 days), so a
+redeploy on the same box loads instead of re-measuring while a migrated
+or upgraded deployment silently falls back to static until re-calibrated
+(``make calibrate``).  The env var ``REPRO_CALIBRATION`` overrides the
+default path; the values ``off``/``0``/``none`` disable loading entirely
+(the test suite pins this so operator-local calibration artifacts cannot
+change test-time staging decisions).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# static fallback constants (the pre-calibration hand-picked model)
+# ---------------------------------------------------------------------------
+
+# Relative units; roughly XLA-on-CPU op counts.  A count stage is one
+# gather over a (B, C+1) table; the spatial tier is a full-grid projection
+# reduction; a region stage thresholds, dilates ``radius`` times, and
+# builds a summed-area table with two (g, g) matmuls.  These moved here
+# from repro.core.plan (where they were ``_COST_*``) — nothing in the
+# planner reads them directly any more; they exist only as the static
+# CostModel's coefficients.
+STATIC_COST_COUNT = 1.0
+STATIC_COST_SPATIAL = 6.0
+STATIC_COST_REGION = 10.0
+STATIC_COST_DILATE_STEP = 2.0
+# The adaptive cascade's historical default step overhead (three-valued
+# propagation + the per-stage (N + B,) undecided fetch), in the same
+# relative units.
+STATIC_STEP_OVERHEAD = 4.0
+
+#: Reference batch size for batch-agnostic cost queries (stage ranking
+#: before any traffic has been seen).  The static model is scale-free in
+#: the batch, so this only matters for measured models.
+REF_BATCH = 64
+
+CALIBRATION_VERSION = 1
+CALIBRATION_DIR = os.path.join("results", "calibration")
+DEFAULT_MAX_AGE_S = 30 * 86400.0
+
+#: Coefficient keys a complete calibration must provide.
+STAGE_COEFF_KEYS = ("count", "spatial", "spatial_rows", "region", "dilate")
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCoeff:
+    """Affine per-stage cost: ``cost(rows) = overhead + per_row * rows``.
+
+    For measured models both terms are microseconds; the fixed
+    ``overhead`` is the dispatch + kernel-launch + fixed-shape work that
+    does not shrink when row compaction hands the stage fewer rows."""
+    per_row: float
+    overhead: float = 0.0
+
+    def cost(self, rows: float) -> float:
+        return self.overhead + self.per_row * float(rows)
+
+
+class CostModel:
+    """One interface for every staging-cost question.
+
+    ``stage_cost(kind, rows=, batch=, radius=)`` is the cost of running
+    one stage body on ``rows`` (possibly compacted) rows of a
+    ``batch``-row batch; ``exhaustive_cost`` is the cost of the
+    exhaustive shared plan on the same batch (shared threshold,
+    incremental dilation — less than the sum of staged stage costs);
+    ``step_overhead()`` is the per-executed-stage overhead the staged
+    path pays on top of the stage bodies.  All three are in one unit
+    system per model instance (abstract units for static, microseconds
+    for measured), so every comparison the planner/cascade makes —
+    ordering scores, the staged-vs-exhaustive park switch, the
+    ledger-predicted cost — is internally consistent as long as a single
+    model instance is used throughout, which is what
+    ``StagedQueryPlan``/``MultiQueryCascade`` enforce.
+
+    Static semantics reproduce the legacy arithmetic exactly:
+    ``stage_cost = unit_cost(kind, radius) * rows / batch`` (the old
+    ``st.cost * rows_evaluated / B`` scaling), making the fallback
+    behaviour bit-identical to the pre-calibration engine.
+    """
+
+    def __init__(self, *, source: str, backend: str = "static",
+                 coeffs: Optional[Dict[str, StageCoeff]] = None,
+                 step_overhead_cost: float = STATIC_STEP_OVERHEAD,
+                 fingerprint: Optional[Dict[str, str]] = None,
+                 calibrated_at: Optional[float] = None,
+                 samples: Optional[Dict[str, List]] = None):
+        if source not in ("static", "measured"):
+            raise ValueError(f"source must be 'static' or 'measured', "
+                             f"got {source!r}")
+        if source == "measured":
+            missing = [k for k in STAGE_COEFF_KEYS
+                       if coeffs is None or k not in coeffs]
+            if missing:
+                raise ValueError(f"measured CostModel missing stage "
+                                 f"coefficients: {missing}")
+        self.source = source
+        self.backend = backend
+        self.coeffs = dict(coeffs or {})
+        self._step_overhead = float(step_overhead_cost)
+        self.fingerprint = dict(fingerprint or {})
+        self.calibrated_at = calibrated_at
+        self.samples = samples or {}
+
+    # -- queries ----------------------------------------------------------
+
+    @staticmethod
+    def _static_unit(kind: str, radius: int) -> float:
+        if kind == "count":
+            return STATIC_COST_COUNT
+        if kind == "spatial":
+            return STATIC_COST_SPATIAL
+        if kind == "region":
+            return STATIC_COST_REGION + STATIC_COST_DILATE_STEP * radius
+        raise ValueError(f"unknown stage kind {kind!r}")
+
+    def stage_cost(self, kind: str, *, rows: float, batch: float,
+                   radius: int = 0) -> float:
+        """Cost of one stage-body invocation on ``rows`` rows of a
+        ``batch``-row batch.  ``rows < batch`` means the stage runs
+        compacted (row-level short-circuiting): the measured model then
+        prices the spatial tier with the row-gathered kernel's
+        coefficients, which have a different fixed/variable split than
+        the full-batch reduction."""
+        if self.source == "static":
+            return self._static_unit(kind, radius) \
+                * float(rows) / max(float(batch), 1.0)
+        if kind == "count":
+            return self.coeffs["count"].cost(rows)
+        if kind == "spatial":
+            key = "spatial_rows" if rows < batch else "spatial"
+            return self.coeffs[key].cost(rows)
+        if kind == "region":
+            return self.coeffs["region"].cost(rows) \
+                + radius * self.coeffs["dilate"].cost(rows)
+        raise ValueError(f"unknown stage kind {kind!r}")
+
+    def stage_rank_cost(self, kind: str, *, radius: int = 0,
+                        batch: float = REF_BATCH) -> float:
+        """Full-batch stage cost — the batch-level number ``_Stage.cost``
+        carries for reporting/describe and the cold ordering score."""
+        if self.source == "static":
+            return self._static_unit(kind, radius)    # batch-scale-free
+        return self.stage_cost(kind, rows=batch, batch=batch, radius=radius)
+
+    def exhaustive_cost(self, *, has_counts: bool, has_spatial: bool,
+                        radii: Sequence[int],
+                        batch: float = REF_BATCH) -> float:
+        """Cost of one exhaustive ``QueryPlan.evaluate`` call.  Differs
+        from the sum of staged stage costs: the exhaustive program
+        thresholds the grid once and dilates incrementally
+        radius-to-radius, while each staged region stage dilates from
+        scratch (it must be skippable and reorderable) — the mode-switch
+        comparison in the adaptive cascade has to use THIS as the
+        exhaustive baseline or staging looks better than it is on
+        multi-radius plans."""
+        cost = 0.0
+        prev = 0
+        if self.source == "static":
+            if has_counts:
+                cost += STATIC_COST_COUNT
+            if has_spatial:
+                cost += STATIC_COST_SPATIAL
+            for r in radii:
+                cost += STATIC_COST_REGION \
+                    + STATIC_COST_DILATE_STEP * (r - prev)
+                prev = r
+            return cost
+        B = float(batch)
+        if has_counts:
+            cost += self.coeffs["count"].cost(B)
+        if has_spatial:
+            cost += self.coeffs["spatial"].cost(B)
+        for r in radii:
+            cost += self.coeffs["region"].cost(B) \
+                + (r - prev) * self.coeffs["dilate"].cost(B)
+            prev = r
+        return cost
+
+    def step_overhead(self) -> float:
+        """Per-executed-stage overhead of the staged path (two-pass
+        three-valued propagation + the per-stage undecided fetch), in
+        this model's cost units."""
+        return self._step_overhead
+
+    def describe(self) -> Dict:
+        """Operator/provenance view (recorded next to bench results)."""
+        return {
+            "source": self.source,
+            "backend": self.backend,
+            "step_overhead": self._step_overhead,
+            "coeffs": {k: dataclasses.asdict(c)
+                       for k, c in self.coeffs.items()},
+            "calibrated_at": self.calibrated_at,
+            "fingerprint": self.fingerprint,
+        }
+
+    def __repr__(self) -> str:
+        return f"CostModel(source={self.source!r}, backend={self.backend!r})"
+
+
+def static_cost_model() -> CostModel:
+    """The legacy hand-picked model — the provable fallback."""
+    return CostModel(source="static")
+
+
+# ---------------------------------------------------------------------------
+# backend identity + persistence
+# ---------------------------------------------------------------------------
+
+def fingerprint_backend() -> Dict[str, str]:
+    """Identity of the accelerator this process would calibrate/run on.
+    A calibration is only valid for an exactly matching fingerprint —
+    same platform, same device kind, same jax version (a jax upgrade can
+    change lowering enough to shift the fitted coefficients).  On CPU
+    backends the jax device kind is just the string "cpu", which would
+    let any machine trust any other's microsecond coefficients, so the
+    host ISA and core count (XLA's CPU parallelism) are folded in too.
+    Deliberately NOT the hostname: a redeploy of the same image on the
+    same box (fresh container id) must load, not re-measure."""
+    import platform as _platform
+
+    import jax
+    dev = jax.devices()[0]
+    return {"platform": jax.default_backend(),
+            "device_kind": getattr(dev, "device_kind", "unknown"),
+            "host_arch": _platform.machine(),
+            "cpu_count": str(os.cpu_count()),
+            "jax": jax.__version__}
+
+
+def calibration_path(backend: Optional[str] = None,
+                     directory: str = CALIBRATION_DIR) -> str:
+    """Default on-disk location: ``results/calibration/<backend>.json``
+    (CWD-relative, the same convention as ``results/bench``)."""
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    return os.path.join(directory, f"{backend}.json")
+
+
+def save_calibration(model: CostModel, path: Optional[str] = None) -> str:
+    """Serialize a measured model (atomic write: tmp + rename)."""
+    if model.source != "measured":
+        raise ValueError("only measured CostModels are saved; the static "
+                         "fallback is code, not data")
+    path = path or calibration_path(model.backend)
+    payload = {
+        "version": CALIBRATION_VERSION,
+        "backend": model.backend,
+        "fingerprint": model.fingerprint,
+        "calibrated_at": model.calibrated_at,
+        "step_overhead_us": model._step_overhead,
+        "coeffs": {k: dataclasses.asdict(c)
+                   for k, c in model.coeffs.items()},
+        "samples": model.samples,
+    }
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, path)
+    return path
+
+
+def load_calibration(path: Optional[str] = None, *,
+                     max_age_s: float = DEFAULT_MAX_AGE_S
+                     ) -> Optional[CostModel]:
+    """Load a measured calibration, or None when it must not be trusted.
+
+    Returns None (never raises) when the file is missing or unreadable,
+    the JSON is corrupt or the wrong schema version, coefficients are
+    missing/non-finite/negative, the backend fingerprint does not match
+    the running process (unknown or different backend), or the
+    calibration is older than ``max_age_s``.  Callers fall back to
+    ``static_cost_model()`` — degrading to the hand-tuned constants is
+    always safe; trusting a foreign calibration is not."""
+    path = path or calibration_path()
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not isinstance(payload, dict) \
+            or payload.get("version") != CALIBRATION_VERSION:
+        return None
+    coeffs_raw = payload.get("coeffs")
+    if not isinstance(coeffs_raw, dict):
+        return None
+    coeffs: Dict[str, StageCoeff] = {}
+    for k in STAGE_COEFF_KEYS:
+        c = coeffs_raw.get(k)
+        try:
+            per_row = float(c["per_row"])
+            overhead = float(c.get("overhead", 0.0))
+        except (TypeError, KeyError, ValueError):
+            return None
+        if not (np.isfinite(per_row) and np.isfinite(overhead)) \
+                or per_row < 0 or overhead < 0:
+            return None
+        coeffs[k] = StageCoeff(per_row=per_row, overhead=overhead)
+    try:
+        step = float(payload.get("step_overhead_us"))
+        calibrated_at = float(payload.get("calibrated_at"))
+    except (TypeError, ValueError):
+        return None
+    if not (np.isfinite(step) and step >= 0):
+        return None
+    if max_age_s is not None and time.time() - calibrated_at > max_age_s:
+        return None                                   # stale
+    if payload.get("fingerprint") != fingerprint_backend():
+        return None                                   # foreign backend
+    return CostModel(source="measured",
+                     backend=payload.get("backend", "unknown"),
+                     coeffs=coeffs, step_overhead_cost=step,
+                     fingerprint=payload["fingerprint"],
+                     calibrated_at=calibrated_at,
+                     samples=payload.get("samples") or {})
+
+
+_DISABLE_VALUES = ("off", "0", "none", "disable", "disabled", "false")
+
+
+def default_cost_model(path: Optional[str] = None, *,
+                       max_age_s: float = DEFAULT_MAX_AGE_S) -> CostModel:
+    """The model the adaptive engine uses when none is given explicitly:
+    the measured per-backend calibration when present and trustworthy,
+    else the static constants.  ``REPRO_CALIBRATION`` overrides the path
+    (or disables loading with ``off``/``0``/``none``)."""
+    if path is None:
+        env = os.environ.get("REPRO_CALIBRATION", "")
+        if env.lower() in _DISABLE_VALUES:
+            return static_cost_model()
+        path = env or None
+    model = load_calibration(path, max_age_s=max_age_s)
+    return model if model is not None else static_cost_model()
+
+
+# ---------------------------------------------------------------------------
+# calibration harness
+# ---------------------------------------------------------------------------
+
+def _timeit(fn, *args, repeat: int = 3, warmup: int = 1) -> float:
+    """Median wall microseconds of ``fn(*args)``, blocking on outputs
+    (the same discipline as benchmarks.common.timeit — benchmarks are
+    not importable from src, so the ~10 lines live here too)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _fit_affine(samples: Sequence[Tuple[float, float]]) -> StageCoeff:
+    """Least-squares ``t = overhead + per_row * rows`` over (rows, us)
+    samples, clamped to the physically meaningful quadrant (timing noise
+    can produce a slightly negative intercept or slope)."""
+    r = np.array([s[0] for s in samples], np.float64)
+    t = np.array([s[1] for s in samples], np.float64)
+    if len(samples) < 2 or np.ptp(r) == 0:
+        rows = max(float(r[0]), 1.0) if len(samples) else 1.0
+        return StageCoeff(per_row=float(t.mean()) / rows, overhead=0.0)
+    A = np.stack([np.ones_like(r), r], axis=1)
+    (a, b), *_ = np.linalg.lstsq(A, t, rcond=None)
+    return StageCoeff(per_row=float(max(b, 1e-9)),
+                      overhead=float(max(a, 0.0)))
+
+
+def calibrate(*, batch: int = 256, grid: int = 16, classes: int = 8,
+              rows_points: Optional[Sequence[int]] = None,
+              repeat: int = 3, tau: float = 0.2, save: bool = True,
+              path: Optional[str] = None, seed: int = 0) -> CostModel:
+    """Measure the staged planner's stage bodies on the active backend
+    and fit a ``CostModel``.
+
+    Times, at several row counts (kernel_microbench-style median-of-
+    ``repeat`` wall timings of jitted programs):
+
+    - the count tier's row-indexed gather + interval test,
+    - the full-batch fused spatial-stats reduction + ORDER() evaluation,
+    - the row-gathered spatial reduction
+      (``kernels.spatial_predicate.spatial_stats_rows_bgc`` via
+      ``ops.spatial_stats_rows_inline``) — the kernel a compacted
+      spatial stage actually runs,
+    - the region body (threshold + summed-area table + rect gathers),
+    - one Manhattan-dilation step (the per-radius increment),
+    - and the staged executor's per-stage overhead: the two-pass
+      three-valued propagation over a reference plan plus its
+      (N + B,)-sized undecided fetch.
+
+    Fits ``overhead + per_row * rows`` per body and (by default) writes
+    ``results/calibration/<backend>.json`` stamped with the backend
+    fingerprint so ``default_cost_model()`` loads it on the next start.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import cam as CAM
+    from repro.core import query as Q
+    from repro.core.plan import QueryPlan
+    from repro.kernels import ops as kops
+    from repro.kernels import spatial_predicate as SP
+
+    rng = np.random.default_rng(seed)
+    B, G, C = int(batch), int(grid), int(classes)
+    if rows_points is None:
+        rows_points = sorted({max(1, B // 16), max(2, B // 4),
+                              max(4, B // 2), B})
+    rows_points = [min(int(r), B) for r in rows_points]
+    counts = jnp.asarray(rng.normal(2, 2, (B, C)).astype(np.float32))
+    glogits = jnp.asarray(rng.normal(0, 0.7, (B, G, G, C))
+                          .astype(np.float32))
+
+    samples: Dict[str, List[Tuple[int, float]]] = {
+        k: [] for k in STAGE_COEFF_KEYS}
+
+    # --- count tier: row-indexed gather + interval test ------------------
+    k_cnt = min(8, C + 1)
+    cls = np.arange(-1, k_cnt - 1, dtype=np.int64)       # total + classes
+    lo = np.zeros(k_cnt, np.int32)
+    hi = np.full(k_cnt, 4, np.int32)
+
+    @jax.jit
+    def count_body(c, rows):
+        x = jnp.clip(jnp.round(c[rows]), 0, 64).astype(jnp.int32)
+        ext = jnp.concatenate([x, x.sum(-1, keepdims=True)], axis=1)
+        v = ext[:, cls]
+        return (v >= jnp.asarray(lo)) & (v <= jnp.asarray(hi))
+
+    for r in rows_points:
+        rows = jnp.asarray(rng.integers(0, B, r).astype(np.int32))
+        samples["count"].append(
+            (r, _timeit(count_body, counts, rows, repeat=repeat)))
+
+    # --- spatial tier: fused stats + ORDER() leaves ----------------------
+    n_spa = min(4, C * (C - 1)) or 1
+    a_idx = np.arange(n_spa, dtype=np.int32) % C
+    b_idx = (np.arange(n_spa, dtype=np.int32) + 1) % C
+    use_row = np.arange(n_spa) % 2 == 0
+    radii = np.zeros(n_spa, np.int32)
+
+    def spa_eval(stats):
+        return SP.eval_spatial_leaves(
+            stats, jnp.asarray(a_idx), jnp.asarray(b_idx),
+            jnp.asarray(use_row), jnp.asarray(radii), grid=G)
+
+    spa_full = jax.jit(lambda g: spa_eval(kops.spatial_stats_inline(g, tau)))
+    for r in rows_points:
+        samples["spatial"].append(
+            (r, _timeit(spa_full, glogits[:r], repeat=repeat)))
+
+    spa_rows = jax.jit(lambda g, rows: spa_eval(
+        kops.spatial_stats_rows_inline(g, rows, tau)))
+    for r in rows_points:
+        rows = jnp.asarray(rng.integers(0, B, r).astype(np.int32))
+        samples["spatial_rows"].append(
+            (r, _timeit(spa_rows, glogits, rows, repeat=repeat)))
+
+    # --- region tier: threshold + SAT + rect gathers ---------------------
+    n_reg = 4
+    reg_cls = np.arange(n_reg, dtype=np.int64) % C
+    rects = np.tile(np.array([0, 0, G // 2, G], np.int64), (n_reg, 1))
+    minc = np.ones(n_reg, np.float32)
+
+    @jax.jit
+    def region_body(g):
+        occ = CAM.threshold_map(g, tau, logits=False)
+        tri = jnp.tril(jnp.ones((G, G), jnp.float32))
+        s = jnp.einsum("ij,bjkc->bikc", tri, occ.astype(jnp.float32))
+        s = jnp.einsum("kl,bilc->bikc", tri, s)
+        sat = jnp.pad(s, ((0, 0), (1, 0), (1, 0), (0, 0)))
+        r0, c0, r1, c1 = (rects[:, k] for k in range(4))
+        inside = (sat[:, r1, c1] - sat[:, r0, c1]
+                  - sat[:, r1, c0] + sat[:, r0, c0])
+        return inside[:, np.arange(n_reg), reg_cls] >= jnp.asarray(minc)
+
+    for r in rows_points:
+        samples["region"].append(
+            (r, _timeit(region_body, glogits[:r], repeat=repeat)))
+
+    dilate_body = jax.jit(lambda occ: CAM.dilate_manhattan(occ, 1))
+    occ_full = np.asarray(glogits) > tau
+    for r in rows_points:
+        samples["dilate"].append(
+            (r, _timeit(dilate_body, jnp.asarray(occ_full[:r]),
+                        repeat=repeat)))
+
+    # --- per-stage step overhead: propagation + undecided fetch ----------
+    ref_queries = []
+    for i in range(6):
+        ref_queries.append(Q.And((
+            Q.ClassCount(i % C, Q.Op.GE, 2),
+            Q.Or((Q.Spatial(i % C, Q.Rel.LEFT, (i + 1) % C),
+                  Q.Region(i % C, (0, 0, G // 2, G), 1))))))
+    ref_plan = QueryPlan(ref_queries, tau=tau)
+    known = np.ones(ref_plan.n_unique_leaves, bool)
+    leaf_vals = jnp.asarray(
+        rng.random((B, ref_plan.n_unique_leaves)) < 0.5)
+
+    @jax.jit
+    def step_overhead_body(lv):
+        value, decided = ref_plan.propagate_bounds(lv, jnp.asarray(known))
+        return jnp.concatenate([~decided.all(0), ~decided.all(1)])
+
+    step_us = _timeit(step_overhead_body, leaf_vals, repeat=repeat)
+
+    coeffs = {k: _fit_affine(v) for k, v in samples.items()}
+    backend = None
+    try:
+        backend = jax.default_backend()
+    except Exception:
+        backend = "unknown"
+    model = CostModel(
+        source="measured", backend=backend, coeffs=coeffs,
+        step_overhead_cost=step_us, fingerprint=fingerprint_backend(),
+        calibrated_at=time.time(),
+        samples={k: [[int(r), float(t)] for r, t in v]
+                 for k, v in samples.items()})
+    if save:
+        save_calibration(model, path)
+    return model

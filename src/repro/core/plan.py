@@ -89,12 +89,34 @@ leaf; with N registered queries that work is repeated N times per batch.
     ``SlotStats`` so a parked cascade can predict the staged cost without
     probing.
 
+5.  **Measured costs and position-aware ordering** (repro.core.costmodel).
+    Every cost the staged executor reasons with — the per-stage ordering
+    scores, ``StageReport.cost_run``, ``predicted_batch_cost``, and the
+    exhaustive baseline the adaptive cascade parks against — goes through
+    a ``CostModel``: per-backend coefficients calibrated from
+    microbenchmarks of the actual stage bodies (``make calibrate``), with
+    a provable fallback to the legacy hand-picked constants when no
+    trustworthy calibration exists.  The stage order itself comes from a
+    **greedy sequential search**: stages are placed one position at a
+    time, each position scored at the row count the already-placed
+    prefix is predicted to leave undecided (``SlotStats.stage_survival``
+    — the per-stage survival observations are position-conditioned, so a
+    one-shot global sort must not consume them; placing prefix-by-prefix
+    matches the conditioning direction they were measured under).  Under
+    the static model costs are purely proportional to rows, every
+    position scales all candidates equally, and the greedy search
+    provably degenerates to the classic cost/benefit ratio sort — the
+    exact legacy order.  A measured model's fixed per-stage overheads
+    are what make position matter: an overhead-dominated SAT stage that
+    ranks cheap at full batch ranks expensive once the count tier has
+    compacted the batch to a few rows.
+
 The shared evaluation is bit-identical to running ``eval_filters`` per
 query, and the staged plan is bit-identical to ``evaluate`` under every
-stage order and statistics state (property-tested in
-tests/test_query_properties.py); staging is purely a work-skipping
-transformation — boolean dilation composes exactly, and the SAT /
-extremum arithmetic is integer-exact in float32.
+stage order, statistics state, and cost model (property-tested in
+tests/test_query_properties.py and tests/test_costmodel.py); staging is
+purely a work-skipping transformation — boolean dilation composes
+exactly, and the SAT / extremum arithmetic is integer-exact in float32.
 """
 from __future__ import annotations
 
@@ -106,6 +128,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import costmodel as CM
 from repro.core import query as Q
 from repro.core.cascade import compact_indices
 from repro.core.filters import FilterOutputs
@@ -113,16 +136,6 @@ from repro.kernels import spatial_predicate as SP
 
 _I32_MAX = np.iinfo(np.int32).max
 _I32_MIN = np.iinfo(np.int32).min
-
-# Static stage-cost model (relative units; roughly XLA-on-CPU op counts —
-# ROADMAP: calibrate from benchmarks/kernel_microbench.py).  A count stage
-# is one gather over a (B, C+1) table; the spatial tier is a full-grid
-# projection reduction; a region stage thresholds, dilates ``radius``
-# times, and builds a summed-area table with two (g, g) matmuls.
-_COST_COUNT = 1.0
-_COST_SPATIAL = 6.0
-_COST_REGION = 10.0
-_COST_DILATE_STEP = 2.0
 
 
 def _count_bounds(op: Q.Op, value: int, tol: int) -> Tuple[int, int]:
@@ -150,8 +163,11 @@ class _Stage:
     name: str
     kind: str                   # 'count' | 'spatial' | 'region'
     slots: np.ndarray           # slot columns this stage decides
-    cost: float
+    cost: float                 # full-batch cost under the build-time
+                                # CostModel (reporting / describe); live
+                                # decisions re-query the model per rows
     payload: Tuple              # kind-specific baked index arrays
+    radius: int = 0             # region dilation radius (cost queries)
 
 
 class QueryPlan:
@@ -461,46 +477,51 @@ class QueryPlan:
 
     # -- staging ----------------------------------------------------------
 
-    def stage_descriptors(self) -> List[_Stage]:
-        """The plan's cost tiers, unordered (lowering-group granularity)."""
+    def stage_descriptors(self, cost_model: Optional[CM.CostModel] = None
+                          ) -> List[_Stage]:
+        """The plan's cost tiers, unordered (lowering-group granularity).
+        ``cost`` carries the model's full-batch stage cost (default: the
+        static fallback model)."""
+        cm = cost_model if cost_model is not None else CM.static_cost_model()
         stages: List[_Stage] = []
         if self._cnt is not None:
             stages.append(_Stage("counts", "count", self._cnt[0],
-                                 _COST_COUNT, self._cnt))
+                                 cm.stage_rank_cost("count"), self._cnt))
         if self._spa is not None:
             stages.append(_Stage("spatial", "spatial", self._spa[0],
-                                 _COST_SPATIAL, self._spa))
+                                 cm.stage_rank_cost("spatial"), self._spa))
         for radius, slots, cls, rects, minc in self._reg:
             stages.append(_Stage(f"region@r{radius}", "region", slots,
-                                 _COST_REGION + _COST_DILATE_STEP * radius,
-                                 (radius, slots, cls, rects, minc)))
+                                 cm.stage_rank_cost("region", radius=radius),
+                                 (radius, slots, cls, rects, minc),
+                                 radius=radius))
         return stages
 
-    def exhaustive_cost_model(self) -> float:
-        """Static-model cost of one ``evaluate`` call.  Differs from the
-        sum of staged stage costs: the exhaustive program thresholds the
-        grid once and dilates incrementally radius-to-radius, while each
-        staged region stage dilates from scratch (it must be skippable
-        and reorderable) — the mode-switch comparison in the adaptive
+    def exhaustive_cost_model(self, cost_model: Optional[CM.CostModel] = None,
+                              *, batch: Optional[float] = None) -> float:
+        """Cost of one ``evaluate`` call under ``cost_model`` (default:
+        the static fallback).  Differs from the sum of staged stage
+        costs: the exhaustive program thresholds the grid once and
+        dilates incrementally radius-to-radius, while each staged region
+        stage dilates from scratch (it must be skippable and
+        reorderable) — the mode-switch comparison in the adaptive
         cascade has to use THIS as the exhaustive baseline or staging
         looks better than it is on multi-radius plans."""
-        cost = 0.0
-        if self._cnt is not None:
-            cost += _COST_COUNT
-        if self._spa is not None:
-            cost += _COST_SPATIAL
-        prev_radius = 0
-        for radius, *_ in self._reg:
-            cost += _COST_REGION + _COST_DILATE_STEP * (radius - prev_radius)
-            prev_radius = radius
-        return cost
+        cm = cost_model if cost_model is not None else CM.static_cost_model()
+        return cm.exhaustive_cost(
+            has_counts=self._cnt is not None,
+            has_spatial=self._spa is not None,
+            radii=[radius for radius, *_ in self._reg],
+            batch=batch if batch is not None else CM.REF_BATCH)
 
     def build_staged(self, stats=None, *,
                      order: Optional[Sequence[int]] = None,
-                     min_bucket: int = 8) -> "StagedQueryPlan":
+                     min_bucket: int = 8,
+                     cost_model: Optional[CM.CostModel] = None
+                     ) -> "StagedQueryPlan":
         """Adaptive stage-by-stage executor over this plan's lowering."""
         return StagedQueryPlan(self, stats, order=order,
-                               min_bucket=min_bucket)
+                               min_bucket=min_bucket, cost_model=cost_model)
 
     @property
     def sharing_factor(self) -> float:
@@ -526,9 +547,9 @@ class StageReport:
     undecided_rows_in: List[int] = dataclasses.field(default_factory=list)
     # true undecided-row count when the stage ran (<= its bucket)
     batch: int = 0              # B of the evaluated batch
-    cost_run: float = 0.0       # static-model cost of executed stages,
-                                # scaled per stage by rows_evaluated/batch
-    cost_total: float = 0.0     # static-model cost of the EXHAUSTIVE plan
+    cost_run: float = 0.0       # cost-model cost of executed stages at the
+                                # rows each actually evaluated
+    cost_total: float = 0.0     # cost-model cost of the EXHAUSTIVE plan
                                 # (shared threshold, incremental dilation —
                                 # less than the sum of staged stage costs)
 
@@ -583,16 +604,28 @@ class StagedQueryPlan:
     ``min_bucket`` floors the bucket size (default 8; tiny buckets would
     multiply compiled variants for little win).  Setting it >= B disables
     row compaction entirely and reproduces the tier-granular executor.
+
+    ``cost_model`` (repro.core.costmodel) prices everything: ordering
+    scores, ``StageReport.cost_run``/``cost_total``, and
+    ``predicted_batch_cost`` all query the ONE model instance, so the
+    comparisons stay unit-consistent whether the model is the measured
+    per-backend calibration or the static fallback (the default when
+    none is given — build with ``costmodel.default_cost_model()`` to
+    pick up a calibration from disk, as ``MultiQueryCascade`` does).
     """
 
     def __init__(self, plan: QueryPlan, stats=None, *,
                  order: Optional[Sequence[int]] = None,
-                 min_bucket: int = 8):
+                 min_bucket: int = 8,
+                 cost_model: Optional[CM.CostModel] = None):
         if min_bucket < 1:
             raise ValueError(f"min_bucket must be >= 1, got {min_bucket}")
         self.min_bucket = min_bucket
         self.plan = plan
-        self.stages = plan.stage_descriptors()
+        self.cost_model = (cost_model if cost_model is not None
+                           else CM.static_cost_model())
+        self._last_batch: Optional[int] = None
+        self.stages = plan.stage_descriptors(self.cost_model)
         # (N, n_stages) — does query q own a slot in stage s?
         self._uses_stage = np.stack(
             [plan.query_slot_incidence[:, st.slots].any(1)
@@ -620,7 +653,7 @@ class StagedQueryPlan:
         self.last_report: Optional[StageReport] = None
         self._pending: Optional[Tuple[
             List[Tuple[np.ndarray, jax.Array, int]],
-            List[Tuple[str, int, int]]]] = None
+            List[Tuple[str, int, int, Optional[int], Optional[int]]]]] = None
 
     # -- ordering ---------------------------------------------------------
 
@@ -634,21 +667,51 @@ class StagedQueryPlan:
 
     def _staging_order(self, stats
                        ) -> Tuple[List[int], Dict[int, np.ndarray]]:
-        """Sort stages by cost per expected decision; slots within a stage
-        most-selective first.
+        """Greedy sequential (position-aware) stage-order search; slots
+        within a stage most-selective first.
 
-        A stage's *benefit* aggregates over the registered population:
-        sum over its slots of (queries referencing the slot) x (1 - pass
-        rate) — a cheap stage whose slots fail often for many queries
-        runs first, the classic cascade rule lifted from one query's
-        conjuncts to the whole query set."""
+        Each position is filled with the remaining stage minimizing
+        cost-per-expected-decision, where the cost side is the
+        ``CostModel``'s price for the rows the already-placed prefix is
+        predicted to leave undecided (``SlotStats.stage_survival`` —
+        observed survivals are conditioned on the prefix that ran before
+        the stage, so consuming them prefix-by-prefix is the one sound
+        direction; a one-shot global sort on them would let a
+        historically-last tier look free).  The *benefit* aggregates
+        over the registered population: sum over the stage's slots of
+        (queries referencing the slot) x (1 - pass rate) — a cheap stage
+        whose slots fail often for many queries places early, the
+        classic cascade rule lifted from one query's conjuncts to the
+        whole query set.
+
+        Under the static cost model stage costs are proportional to
+        rows, the predicted row count multiplies every candidate at a
+        given position equally, and the greedy search reduces exactly to
+        the legacy ``sorted(cost / benefit)`` order (regression-pinned
+        in tests/test_costmodel.py) — measured models with fixed
+        per-stage overheads are where position changes the ranking."""
         rates = self._slot_rates(stats)
-        scores = []
-        for si, st in enumerate(self.stages):
-            benefit = float(np.sum(self._slot_weight[st.slots]
-                                   * (1.0 - rates[st.slots])))
-            scores.append(st.cost / (benefit + 1e-3))
-        order = sorted(range(len(self.stages)), key=lambda s: (scores[s], s))
+        cm = self.cost_model
+        B = float(self._last_batch or CM.REF_BATCH)
+        n = len(self.stages)
+        benefit = [float(np.sum(self._slot_weight[st.slots]
+                                * (1.0 - rates[st.slots])))
+                   for st in self.stages]
+        # quantized like the rates, so the order does not flap on noise
+        survival = [round(stats.stage_survival(st.name), 3)
+                    if stats is not None else 1.0 for st in self.stages]
+        order: List[int] = []
+        remaining = list(range(n))
+        frac = 1.0
+        while remaining:
+            rows = max(frac, 1.0 / B) * B        # at least one row reaches
+            best = min(remaining, key=lambda si: (
+                cm.stage_cost(self.stages[si].kind, rows=rows, batch=B,
+                              radius=self.stages[si].radius)
+                / (benefit[si] + 1e-3), si))
+            remaining.remove(best)
+            order.append(best)
+            frac *= survival[best]
         perms = {si: np.argsort(rates[st.slots], kind="stable")
                  for si, st in enumerate(self.stages)}
         return order, perms
@@ -786,6 +849,7 @@ class StagedQueryPlan:
         part of the batch."""
         plan = self.plan
         B = out.counts.shape[0]
+        self._last_batch = B
         N = len(plan.queries)
         leaf_vals = jnp.zeros((B, plan.n_unique_leaves), bool)
         value = jnp.zeros((B, N), bool)
@@ -793,16 +857,18 @@ class StagedQueryPlan:
         undecided_cols = np.ones(N, bool)
         undecided_rows = np.ones(B, bool)
         report = StageReport(order=[self.stages[s].name for s in self.order],
-                             cost_total=plan.exhaustive_cost_model(),
+                             cost_total=plan.exhaustive_cost_model(
+                                 self.cost_model, batch=B),
                              batch=B)
         pending: List[Tuple[np.ndarray, jax.Array, int]] = []
-        stage_rows: List[Tuple[str, int, int]] = []
+        stage_rows: List[Tuple[str, int, int, Optional[int],
+                               Optional[int]]] = []
         ran: frozenset = frozenset()
         for si in self.order:
             st = self.stages[si]
             if not (self._uses_stage[:, si] & undecided_cols).any():
                 report.skipped.append(st.name)
-                stage_rows.append((st.name, 0, B))
+                stage_rows.append((st.name, 0, B, None, None))
                 continue
             if st.kind != "count" and out.grid is None:
                 raise ValueError(
@@ -838,14 +904,19 @@ class StagedQueryPlan:
                 # wrong-converged; the exhaustive path and full-batch
                 # stages keep those slots learning.
                 pending.append((self._stage_slots(si), counts, seen))
-            stage_rows.append((st.name, rows_eval, B))
             undec = np.asarray(undec)               # ONE (N + B,) fetch
             undecided_cols, undecided_rows = undec[:N], undec[N:]
+            # (rows paid incl. padding, true undecided in/out: the row
+            # ledger uses the work convention, the survival ledger the
+            # real-row one)
+            stage_rows.append((st.name, rows_eval, B, n_rows,
+                               int(undecided_rows.sum())))
             ran = ran | {si}
             report.ran.append(st.name)
             report.rows_evaluated.append(rows_eval)
             report.undecided_rows_in.append(n_rows)
-            report.cost_run += st.cost * (rows_eval / B)
+            report.cost_run += self.cost_model.stage_cost(
+                st.kind, rows=rows_eval, batch=B, radius=st.radius)
             report.undecided_after.append(int(undecided_cols.sum()))
             if not undecided_cols.any():
                 break
@@ -853,7 +924,7 @@ class StagedQueryPlan:
                            "first ordered stage always runs"
         for sj in self.order[len(report.ran) + len(report.skipped):]:
             report.skipped.append(self.stages[sj].name)
-            stage_rows.append((self.stages[sj].name, 0, B))
+            stage_rows.append((self.stages[sj].name, 0, B, None, None))
         self.last_report = report
         self._pending = (pending, stage_rows)
         return value
@@ -878,19 +949,29 @@ class StagedQueryPlan:
                     [self.plan.slot_keys[s] for s in slots],
                     counts[off:off + len(slots)], seen, canonical=True)
                 off += len(slots)
-        for name, rows, batch in stage_rows:
+        for name, rows, batch, surv_in, surv_out in stage_rows:
             stats.observe_stage_rows(name, rows, batch)
+            if surv_in:                          # executed on real rows:
+                stats.observe_stage_survival(    # feed the greedy order
+                    name, surv_in, surv_out)     # search's prefix model
 
-    def predicted_batch_cost(self, stats, step_overhead: float = 0.0
-                             ) -> float:
-        """Ledger-predicted static-model cost of one staged batch: each
-        stage's cost scaled by its learned row fraction, plus
-        ``step_overhead`` per expected execution.  This is how a *parked*
-        adaptive cascade keeps re-deciding the staged-vs-exhaustive mode
-        switch between probe batches — the per-stage undecided-rate
-        feedback accumulated by ``flush_stats`` substitutes for running
-        the staged path (cold ledger -> full-batch assumption, matching
-        the pre-compaction cost model)."""
+    def predicted_batch_cost(self, stats,
+                             step_overhead: Optional[float] = None,
+                             *, batch: Optional[int] = None) -> float:
+        """Ledger-predicted cost-model cost of one staged batch: each
+        stage priced at its learned row fraction of ``batch`` (default:
+        the last evaluated batch size, else the reference batch), plus
+        ``step_overhead`` (default: the cost model's measured/static
+        per-stage overhead) per expected execution.  This is how a
+        *parked* adaptive cascade keeps re-deciding the
+        staged-vs-exhaustive mode switch between probe batches — the
+        per-stage undecided-rate feedback accumulated by ``flush_stats``
+        substitutes for running the staged path (cold ledger ->
+        full-batch assumption, matching the pre-compaction model)."""
+        cm = self.cost_model
+        if step_overhead is None:
+            step_overhead = cm.step_overhead()
+        B = float(batch or self._last_batch or CM.REF_BATCH)
         cost = 0.0
         for si in self.order:
             st = self.stages[si]
@@ -899,7 +980,20 @@ class StagedQueryPlan:
             else:
                 frac = stats.stage_row_frac(st.name)
                 execd = stats.stage_exec_rate(st.name)
-            cost += st.cost * frac + step_overhead * execd
+            # expected stage cost = P(executes) x cost at the rows seen
+            # WHEN it executes (frac folds skipped batches in as zero
+            # rows, so the conditional row count is frac/execd of the
+            # batch).  Pricing the unconditional frac directly would
+            # charge a measured model's full fixed overhead for stages
+            # the ledger says are almost always skipped — the parked
+            # cascade would then never un-park on exactly the skewed
+            # traffic the prediction exists for.  Under the static
+            # model (no fixed part) this reduces to the legacy
+            # unit_cost * frac arithmetic exactly.
+            rows_cond = min(frac / max(execd, 1e-9), 1.0) * B
+            cost += execd * cm.stage_cost(st.kind, rows=rows_cond, batch=B,
+                                          radius=st.radius) \
+                + step_overhead * execd
         return cost
 
     def describe(self) -> List[Dict]:

@@ -12,7 +12,9 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import os
 import time
+import warnings
 from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -153,13 +155,41 @@ class QueryRegistry:
     rebuilt engine's staged executor predicts its undecided-row traffic
     (and hence its park/un-park restage decisions) from the previous
     epoch's observations, since the cost-tier names are stable across
-    plans with the same tier structure."""
+    plans with the same tier structure.
 
-    def __init__(self, slot_stats: Optional[SlotStats] = None):
+    ``stats_path`` extends that continuity across process restarts: when
+    the file exists, its ``SlotStats.save`` snapshot is merged into the
+    store at construction (merge, not replace — a store handed in via
+    ``slot_stats`` keeps any observations it already carries), so a
+    redeployed monitor resumes with the learned selectivities AND the
+    per-stage row/survival ledgers instead of relearning them from the
+    prior.  A missing snapshot starts cold; a corrupt/unreadable one is
+    ignored with a warning — persistence must never take down a
+    restarting monitor.  ``save_stats()`` writes the snapshot back
+    (call it on shutdown or on a timer)."""
+
+    def __init__(self, slot_stats: Optional[SlotStats] = None, *,
+                 stats_path: Optional[str] = None):
         self._next_id = 0
         self._active: Dict[int, Any] = {}
         self.epoch = 0
         self.slot_stats = slot_stats if slot_stats is not None else SlotStats()
+        self.stats_path = stats_path
+        if stats_path is not None and os.path.exists(stats_path):
+            try:
+                self.slot_stats.merge(SlotStats.load(stats_path))
+            except (ValueError, OSError) as e:
+                warnings.warn(f"ignoring unreadable SlotStats snapshot "
+                              f"{stats_path!r}: {e}")
+
+    def save_stats(self, path: Optional[str] = None) -> str:
+        """Snapshot the population store to ``path`` (default: the
+        ``stats_path`` given at construction)."""
+        p = path if path is not None else self.stats_path
+        if p is None:
+            raise ValueError("no path: pass save_stats(path) or construct "
+                             "QueryRegistry(stats_path=...)")
+        return self.slot_stats.save(p)
 
     def register(self, query) -> int:
         qid = self._next_id

@@ -5,6 +5,15 @@ import sys
 # in a separate process).  Keep test-time compilation light.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Hermetic staging decisions: an operator-local `make calibrate` artifact
+# (or a REPRO_CALIBRATION exported in the developer's shell) must not
+# leak measured costs into test-time stage ordering / park decisions —
+# tests pin the static fallback, so this is an unconditional override,
+# not a setdefault.  Tests that exercise calibration loading pass
+# explicit paths, which bypass the env var entirely (see
+# repro.core.costmodel.default_cost_model).
+os.environ["REPRO_CALIBRATION"] = "off"
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax

@@ -1,0 +1,478 @@
+"""Cost-model subsystem: calibration fallback, measured-model staging,
+SlotStats persistence (ISSUE 4).
+
+Three guarantees pinned here:
+
+1.  **Provable degradation.**  A missing, corrupt, stale, wrong-version,
+    or foreign-backend calibration falls back to the static constants,
+    and under the static model the greedy position-aware order search
+    produces *exactly* the staging order (and costs) of the legacy
+    hand-tuned engine — regression-pinned against an independent
+    reimplementation of the old ``_staging_order`` arithmetic with the
+    old ``_COST_*`` constants inlined.
+
+2.  **Calibration cannot break correctness.**  Staged evaluation stays
+    bit-identical to the exhaustive plan under ARBITRARY measured
+    calibrations (random coefficients, adversarial overheads): the cost
+    model may reorder work, never change results.
+
+3.  **Persistence round-trips.**  ``SlotStats.save/load`` preserves pass
+    rates (canonical tree keys included), both stage ledgers, and
+    ``predicted_batch_cost`` within fp tolerance; loading into a store
+    with fresh observations merges rather than clobbers; a corrupt
+    snapshot never takes down a restarting ``QueryRegistry``.
+"""
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cascade as CS
+from repro.core import costmodel as CM
+from repro.core import query as Q
+from repro.core.filters import FilterOutputs
+from repro.core.plan import QueryPlan
+from repro.core.stats import SlotStats
+from repro.core.streaming import QueryRegistry
+
+from test_query_properties import (rand_outputs, rand_query,
+                                   rand_stat_state)
+
+C = 3
+
+
+# ---------------------------------------------------------------------------
+# legacy reference: the pre-costmodel constants and ordering arithmetic
+# ---------------------------------------------------------------------------
+
+LEG_COUNT, LEG_SPATIAL, LEG_REGION, LEG_DILATE = 1.0, 6.0, 10.0, 2.0
+
+
+def legacy_stage_cost(st) -> float:
+    if st.kind == "count":
+        return LEG_COUNT
+    if st.kind == "spatial":
+        return LEG_SPATIAL
+    return LEG_REGION + LEG_DILATE * st.radius
+
+
+def legacy_order(staged, stats):
+    """The old ``_staging_order``: one global sort by cost/benefit."""
+    plan = staged.plan
+    if stats is None:
+        rates = np.full(plan.n_unique_leaves, 0.5)
+    else:
+        rates = np.round(
+            stats.pass_rates(plan.slot_keys, canonical=True), 3)
+    weight = plan.query_slot_incidence.sum(0).astype(float)
+    scores = []
+    for st in staged.stages:
+        benefit = float(np.sum(weight[st.slots] * (1.0 - rates[st.slots])))
+        scores.append(legacy_stage_cost(st) / (benefit + 1e-3))
+    return sorted(range(len(staged.stages)),
+                  key=lambda s: (scores[s], s))
+
+
+def legacy_exhaustive_cost(plan) -> float:
+    cost = 0.0
+    if plan._cnt is not None:
+        cost += LEG_COUNT
+    if plan._spa is not None:
+        cost += LEG_SPATIAL
+    prev = 0
+    for radius, *_ in plan._reg:
+        cost += LEG_REGION + LEG_DILATE * (radius - prev)
+        prev = radius
+    return cost
+
+
+def measured_model(coeffs: dict, step: float = 5.0) -> CM.CostModel:
+    return CM.CostModel(
+        source="measured", backend="testbox",
+        coeffs={k: CM.StageCoeff(**v) for k, v in coeffs.items()},
+        step_overhead_cost=step)
+
+
+# ---------------------------------------------------------------------------
+# 1. fallback: loading rules + static ≡ legacy regression pin
+# ---------------------------------------------------------------------------
+
+def _valid_payload() -> dict:
+    return {
+        "version": CM.CALIBRATION_VERSION,
+        "backend": "cpu",
+        "fingerprint": CM.fingerprint_backend(),
+        "calibrated_at": time.time(),
+        "step_overhead_us": 50.0,
+        "coeffs": {k: {"per_row": 1.0, "overhead": 10.0}
+                   for k in CM.STAGE_COEFF_KEYS},
+    }
+
+
+def test_load_calibration_accepts_valid(tmp_path):
+    p = tmp_path / "cal.json"
+    p.write_text(json.dumps(_valid_payload()))
+    m = CM.load_calibration(str(p))
+    assert m is not None and m.source == "measured"
+    assert CM.default_cost_model(str(p)).source == "measured"
+
+
+@pytest.mark.parametrize("mutate,desc", [
+    (None, "missing file"),
+    (lambda d: "{ this is not json", "corrupt json"),
+    (lambda d: json.dumps([1, 2, 3]), "wrong shape"),
+    (lambda d: json.dumps({**d, "version": 999}), "wrong version"),
+    (lambda d: json.dumps({**d, "coeffs": {}}), "missing coeffs"),
+    (lambda d: json.dumps({**d, "coeffs": {
+        **d["coeffs"], "spatial": {"per_row": -1.0}}}), "negative coeff"),
+    (lambda d: json.dumps({**d, "calibrated_at":
+                           time.time() - 365 * 86400}), "stale"),
+    (lambda d: json.dumps({**d, "fingerprint": {
+        "platform": "tpu-v9", "device_kind": "imaginary",
+        "jax": "99.0"}}), "foreign backend"),
+])
+def test_load_calibration_rejects_untrustworthy(tmp_path, mutate, desc):
+    """Every untrustworthy calibration degrades to the static model —
+    the acceptance list: missing / corrupt / stale / unknown backend."""
+    p = tmp_path / "cal.json"
+    if mutate is not None:
+        p.write_text(mutate(_valid_payload()))
+    assert CM.load_calibration(str(p)) is None, desc
+    fb = CM.default_cost_model(str(p))
+    assert fb.source == "static", desc
+
+
+def test_stale_calibration_acceptable_when_age_check_disabled(tmp_path):
+    d = _valid_payload()
+    d["calibrated_at"] = time.time() - 365 * 86400
+    p = tmp_path / "cal.json"
+    p.write_text(json.dumps(d))
+    assert CM.load_calibration(str(p)) is None
+    assert CM.load_calibration(str(p), max_age_s=None) is not None
+
+
+def test_env_var_disables_loading(tmp_path, monkeypatch):
+    p = tmp_path / "cal.json"
+    p.write_text(json.dumps(_valid_payload()))
+    monkeypatch.setenv("REPRO_CALIBRATION", str(p))
+    assert CM.default_cost_model().source == "measured"
+    monkeypatch.setenv("REPRO_CALIBRATION", "off")
+    assert CM.default_cost_model().source == "static"
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_static_fallback_staging_order_matches_legacy(seed):
+    """The greedy search under the static model (cold OR warm stats,
+    survival ledger included) reproduces the legacy global sort exactly,
+    and the static cost numbers are the legacy numbers."""
+    rng = np.random.default_rng(900 + seed)
+    queries = [rand_query(rng, relaxed=True) for _ in range(8)]
+    plan = QueryPlan(queries)
+    out = rand_outputs(rng, B=24)
+
+    # cold store and a random warm store
+    for stats in (None, SlotStats(), rand_stat_state(rng, plan)):
+        staged = plan.build_staged(stats)          # static fallback model
+        assert staged.cost_model.source == "static"
+        assert staged.order == legacy_order(staged, stats)
+        if stats is None:
+            continue
+        # learn from real traffic (slot rates + row/survival ledgers),
+        # restage, and re-check: position-aware greedy with proportional
+        # costs must STILL equal the legacy one-shot sort
+        for _ in range(3):
+            staged.evaluate(out)
+            staged.flush_stats(stats)
+        staged.restage(stats)
+        assert staged.order == legacy_order(staged, stats)
+
+    # static cost numbers are the legacy constants' numbers
+    stats = SlotStats()
+    staged = plan.build_staged(stats)
+    assert staged.last_report is None
+    assert plan.exhaustive_cost_model() == pytest.approx(
+        legacy_exhaustive_cost(plan))
+    for st in staged.stages:
+        assert st.cost == pytest.approx(legacy_stage_cost(st))
+    staged.evaluate(out)
+    rep = staged.last_report
+    legacy_run = sum(
+        legacy_stage_cost(staged.stages[staged.order[i]])
+        * (rep.rows_evaluated[i] / rep.batch)
+        for i in range(len(rep.ran)))
+    assert rep.cost_run == pytest.approx(legacy_run)
+    assert rep.cost_total == pytest.approx(legacy_exhaustive_cost(plan))
+    staged.flush_stats(stats)
+    # ledger-predicted cost: legacy frac-scaled arithmetic
+    pred = staged.predicted_batch_cost(stats, step_overhead=4.0)
+    legacy_pred = sum(
+        legacy_stage_cost(staged.stages[si])
+        * stats.stage_row_frac(staged.stages[si].name)
+        + 4.0 * stats.stage_exec_rate(staged.stages[si].name)
+        for si in staged.order)
+    assert pred == pytest.approx(legacy_pred)
+
+
+# ---------------------------------------------------------------------------
+# 2. measured models: correctness is calibration-invariant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_staged_identical_to_exhaustive_under_arbitrary_calibration(seed):
+    """Any calibration may only change the ORDER of work, never the
+    masks — staged ≡ exhaustive bit-identically under random measured
+    coefficients, through stat feedback and restaging."""
+    rng = np.random.default_rng(1000 + seed)
+    queries = [rand_query(rng, relaxed=True) for _ in range(6)]
+    plan = QueryPlan(queries)
+    out = rand_outputs(rng, B=16)
+    want = np.asarray(plan.evaluate(out))
+
+    cm = measured_model(
+        {k: {"per_row": float(rng.uniform(0.01, 50.0)),
+             "overhead": float(rng.uniform(0.0, 500.0))}
+         for k in CM.STAGE_COEFF_KEYS},
+        step=float(rng.uniform(0.0, 100.0)))
+    stats = rand_stat_state(rng, plan)
+    staged = plan.build_staged(stats, cost_model=cm)
+    np.testing.assert_array_equal(np.asarray(staged.evaluate(out)), want)
+    staged.flush_stats(stats)
+    staged.restage(stats)
+    np.testing.assert_array_equal(np.asarray(staged.evaluate(out)), want)
+    # report costs are priced by the measured model (µs-scale, not the
+    # legacy units)
+    assert staged.last_report.cost_total == pytest.approx(
+        plan.exhaustive_cost_model(cm, batch=16))
+
+
+def test_greedy_order_is_position_aware():
+    """The measured model's fixed overheads make stage cost depend on
+    the rows reaching its position: once the survival ledger shows the
+    count guard kills ~90% of rows, a row-dominated spatial tier must
+    jump ahead of an overhead-dominated SAT tier — and with a cold
+    ledger (or the static model) the order must stay the classic
+    full-batch ranking."""
+    queries = [Q.And((Q.ClassCount(0, Q.Op.GE, 3),
+                      Q.Spatial(0, Q.Rel.LEFT, 1),
+                      Q.Region(1, (0, 0, 3, 3), 1)))]
+    plan = QueryPlan(queries)
+    cm = measured_model({
+        "count": {"per_row": 0.01, "overhead": 0.1},
+        "spatial": {"per_row": 1.0, "overhead": 2.0},
+        "spatial_rows": {"per_row": 1.0, "overhead": 2.0},
+        "region": {"per_row": 0.2, "overhead": 30.0},
+        "dilate": {"per_row": 0.1, "overhead": 0.0},
+    })
+    names = {st.name: i for i, st in
+             enumerate(plan.stage_descriptors(cm))}
+    cold = plan.build_staged(SlotStats(), cost_model=cm)
+    # full batch (REF_BATCH=64): spatial = 2 + 64 = 66 > region = 30 +
+    # 12.8 = 42.8 -> SAT tier ranks ahead of spatial
+    assert cold.order == [names["counts"], names["region@r0"],
+                          names["spatial"]]
+
+    warm = SlotStats()
+    warm.observe_stage_survival("counts", 640.0, 64.0)     # ~0.1 survival
+    aware = plan.build_staged(warm, cost_model=cm)
+    # at ~6.6 rows: spatial_rows = 2 + 6.6 = 8.6 < region = 30 + 1.3
+    assert aware.order == [names["counts"], names["spatial"],
+                           names["region@r0"]]
+
+    # the same survival knowledge must NOT move the static model's order
+    static = plan.build_staged(warm)
+    assert static.order == legacy_order(static, warm)
+
+    # and neither ordering changes the masks
+    rng = np.random.default_rng(7)
+    out = rand_outputs(rng, B=16)
+    want = np.asarray(plan.evaluate(out))
+    for staged in (cold, aware, static):
+        np.testing.assert_array_equal(np.asarray(staged.evaluate(out)),
+                                      want)
+
+
+def test_adaptive_cascade_with_measured_model_matches_exhaustive():
+    """End-to-end: MultiQueryCascade driven by a measured model stays
+    bit-identical to the plain cascade across batches, feedback,
+    restages, and park decisions priced in measured units."""
+    rng = np.random.default_rng(77)
+    queries = [rand_query(rng, relaxed=True) for _ in range(5)]
+    cm = measured_model(
+        {k: {"per_row": float(rng.uniform(0.1, 10.0)),
+             "overhead": float(rng.uniform(0.0, 100.0))}
+         for k in CM.STAGE_COEFF_KEYS},
+        step=25.0)
+    adaptive = CS.MultiQueryCascade(queries, adaptive=True,
+                                    restage_every=3, cost_model=cm)
+    assert adaptive.step_overhead == pytest.approx(25.0)   # from the model
+    plain = CS.MultiQueryCascade(queries)
+    for _ in range(8):
+        out = rand_outputs(rng, B=16)
+        np.testing.assert_array_equal(np.asarray(adaptive.masks(out)),
+                                      np.asarray(plain.masks(out)))
+    assert adaptive.mode in ("staged", "exhaustive")
+
+
+def test_cost_model_requires_adaptive():
+    with pytest.raises(ValueError, match="adaptive"):
+        CS.MultiQueryCascade([Q.Count(Q.Op.GE, 1)],
+                             cost_model=CM.static_cost_model())
+
+
+def test_calibrate_roundtrip(tmp_path):
+    """`make calibrate` end to end (tiny budget): measure on this
+    backend, write the JSON, load it back as a measured model that the
+    default resolver picks up."""
+    p = tmp_path / "cal.json"
+    model = CM.calibrate(batch=16, grid=8, classes=4, repeat=1,
+                         save=True, path=str(p))
+    assert p.exists()
+    assert model.source == "measured"
+    for k in CM.STAGE_COEFF_KEYS:
+        c = model.coeffs[k]
+        assert np.isfinite(c.per_row) and c.per_row >= 0
+        assert np.isfinite(c.overhead) and c.overhead >= 0
+    assert model.step_overhead() > 0
+    loaded = CM.default_cost_model(str(p))
+    assert loaded.source == "measured"
+    assert loaded.fingerprint == CM.fingerprint_backend()
+    # loaded coefficients price queries identically to the in-memory fit
+    for kind, radius in (("count", 0), ("spatial", 0), ("region", 2)):
+        assert loaded.stage_cost(kind, rows=8, batch=16, radius=radius) \
+            == pytest.approx(model.stage_cost(kind, rows=8, batch=16,
+                                              radius=radius))
+
+
+# ---------------------------------------------------------------------------
+# 3. SlotStats persistence
+# ---------------------------------------------------------------------------
+
+def _traffic_stats(rng, plan, out, n_batches=3):
+    stats = SlotStats()
+    staged = plan.build_staged(stats)
+    for _ in range(n_batches):
+        staged.evaluate(out)
+        staged.flush_stats(stats)
+    return stats, staged
+
+
+def test_slotstats_save_load_roundtrip(tmp_path):
+    """snapshot -> save -> load: pass rates (leaf AND tree keys, mirror
+    spellings), both stage ledgers, and predicted_batch_cost all equal
+    within fp tolerance."""
+    rng = np.random.default_rng(31)
+    queries = [Q.And((Q.ClassCount(0, Q.Op.GE, 2),
+                      Q.Spatial(0, Q.Rel.RIGHT, 1))),      # mirror spelling
+               Q.Or((Q.Count(Q.Op.GE, 0),
+                     Q.Region(1, (0, 0, 4, 4), 2, radius=1)))]
+    plan = QueryPlan(queries)
+    out = rand_outputs(rng, B=32)
+    stats, staged = _traffic_stats(rng, plan, out)
+    # a whole-tree key, as FilterCascade stages produce for non-And roots
+    tree = Q.Or((Q.Not(Q.ClassCount(1, Q.Op.EQ, 0, 1)),
+                 Q.Spatial(2, Q.Rel.BELOW, 0, 2)))
+    stats.observe(tree, passed=3, seen=10)
+
+    path = tmp_path / "stats.json"
+    stats.save(str(path))
+    loaded = SlotStats.load(str(path))
+
+    assert len(loaded) == len(stats)
+    keys = plan.slot_keys + [tree,
+                             Q.Spatial(1, Q.Rel.LEFT, 0)]  # mirror read
+    np.testing.assert_allclose(loaded.pass_rates(keys),
+                               stats.pass_rates(keys), rtol=0, atol=0)
+    for k in keys:
+        assert loaded.seen(k) == stats.seen(k)
+    for st in staged.stages:
+        assert loaded.stage_row_frac(st.name) \
+            == pytest.approx(stats.stage_row_frac(st.name))
+        assert loaded.stage_exec_rate(st.name) \
+            == pytest.approx(stats.stage_exec_rate(st.name))
+        assert loaded.stage_survival(st.name) \
+            == pytest.approx(stats.stage_survival(st.name))
+    fresh = plan.build_staged(loaded)
+    assert fresh.predicted_batch_cost(loaded, step_overhead=4.0) \
+        == pytest.approx(staged.predicted_batch_cost(stats,
+                                                     step_overhead=4.0))
+    # the loaded rates induce the same staging order
+    assert fresh.order == staged.order
+
+
+def test_slotstats_merge_augments_not_clobbers(tmp_path):
+    """Loading a snapshot into a store that already holds fresh
+    observations adds histories instead of overwriting them."""
+    leaf = Q.ClassCount(0, Q.Op.GE, 1)
+    only_old = Q.Count(Q.Op.GE, 5)
+    old = SlotStats()
+    old.observe(leaf, passed=5, seen=10)
+    old.observe(only_old, passed=1, seen=4)
+    old.observe_stage_rows("spatial", 8, 64)
+    path = tmp_path / "stats.json"
+    old.save(str(path))
+
+    fresh = SlotStats()
+    fresh.observe(leaf, passed=20, seen=30)
+    fresh.observe_stage_rows("spatial", 64, 64)
+    fresh.merge(SlotStats.load(str(path)))
+
+    assert fresh.seen(leaf) == 40                    # 30 fresh + 10 loaded
+    assert fresh.pass_rate(leaf) == pytest.approx((25 + 1) / (40 + 2))
+    assert fresh.seen(only_old) == 4                 # loaded-only key kept
+    # EWMA pairs add -> weight-proportional blend of 8/64 and 64/64
+    assert fresh.stage_row_frac("spatial") == pytest.approx(
+        (8 + 64 + 2) / (64 + 64 + 2))
+
+
+def test_registry_stats_path_restart_roundtrip(tmp_path):
+    """A 'restarted monitor': registry #2 constructed on the snapshot
+    resumes with the learned selectivities and row ledger."""
+    rng = np.random.default_rng(5)
+    queries = [Q.And((Q.ClassCount(0, Q.Op.GE, 2),
+                      Q.Spatial(0, Q.Rel.LEFT, 1)))]
+    plan = QueryPlan(queries)
+    out = rand_outputs(rng, B=24)
+    path = str(tmp_path / "monitor-stats.json")
+
+    reg1 = QueryRegistry(stats_path=path)
+    staged = plan.build_staged(reg1.slot_stats)
+    for _ in range(2):
+        staged.evaluate(out)
+        staged.flush_stats(reg1.slot_stats)
+    assert len(reg1.slot_stats) > 0
+    saved_to = reg1.save_stats()
+    assert saved_to == path
+
+    reg2 = QueryRegistry(stats_path=path)              # the restart
+    assert len(reg2.slot_stats) == len(reg1.slot_stats)
+    for k in plan.slot_keys:
+        assert reg2.slot_stats.seen(k) == reg1.slot_stats.seen(k)
+    assert reg2.slot_stats.stage_row_frac("spatial") == pytest.approx(
+        reg1.slot_stats.stage_row_frac("spatial"))
+
+    # and a pre-seeded store passed in is merged with, not replaced by,
+    # the snapshot
+    pre = SlotStats()
+    pre.observe(Q.Count(Q.Op.GE, 9), passed=1, seen=2)
+    reg3 = QueryRegistry(pre, stats_path=path)
+    assert reg3.slot_stats is pre
+    assert pre.seen(Q.Count(Q.Op.GE, 9)) == 2
+    assert pre.seen(plan.slot_keys[0]) \
+        == reg1.slot_stats.seen(plan.slot_keys[0])
+
+
+def test_registry_survives_corrupt_snapshot(tmp_path):
+    path = tmp_path / "stats.json"
+    path.write_text("{ not json at all")
+    with pytest.warns(UserWarning, match="SlotStats snapshot"):
+        reg = QueryRegistry(stats_path=str(path))
+    assert len(reg.slot_stats) == 0                    # cold start, alive
+    with pytest.raises(ValueError):
+        SlotStats.load(str(path))                      # direct load raises
+
+
+def test_registry_save_stats_requires_some_path():
+    with pytest.raises(ValueError, match="path"):
+        QueryRegistry().save_stats()
