@@ -2,11 +2,18 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-deps bench bench-smoke calibrate
+.PHONY: test test-fast test-deps bench bench-smoke calibrate docs-check
 
-# tier-1 verify (full hypothesis profile — the default)
-test:
+# tier-1 verify (full hypothesis profile — the default); depends on
+# docs-check so a stale doc reference fails the same gate as a test
+test: docs-check
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# docs/*.md + README consistency: intra-doc links resolve, `make ...`
+# mentions name real targets, referenced file paths exist (also runs
+# inside the pytest suite via tests/test_docs.py)
+docs-check:
+	$(PY) tools/docs_check.py
 
 # quick iteration: trimmed hypothesis example budgets (tests/conftest.py
 # registers the profiles; without hypothesis installed this just runs the

@@ -49,6 +49,18 @@ def main():
         c = model.coeffs[key]
         print(f"{key:>14s} {c.overhead:12.1f} {c.per_row:11.3f}")
     print(f"{'step overhead':>14s} {model.step_overhead():12.1f}")
+    # the two decisions this calibration derives (docs/tuning.md)
+    names = {"rows": "row-gather kernel", "full": "full-batch body"}
+    xover = model.spatial_crossover_rows()
+    if xover is None:                  # no tie point: one winner everywhere
+        desc = f"none ({names[model.spatial_body(rows=1)]} always wins)"
+    else:
+        below = names[model.spatial_body(rows=xover / 2)]
+        above = names[model.spatial_body(rows=xover * 2)]
+        desc = f"{xover:.1f} rows ({below} below, {above} above)"
+    print(f"spatial-body crossover: {desc}")
+    print(f"derived min_bucket: {model.derived_min_bucket()} "
+          f"(hand-set default was 8; explicit min_bucket= still wins)")
     if not args.dry_run:
         path = args.path or costmodel.calibration_path(model.backend)
         print(f"\nwrote {path} — the adaptive engine loads it on the next "

@@ -39,6 +39,17 @@ power-of-two bucket of undecided rows.  ``row_compaction_speedup`` in the
 JSON is that head-to-head on identical queries and batches — the
 filter-time improvement over the PR 2 staged numbers.
 
+The fourth comparison (since the calibration loop closed, ISSUE 5) is
+crossover-aware vs the PR 4 executor on identical queries/batches: the
+PR 4 baseline hard-wires compacted ⇒ row-gather kernel and the hand-set
+``min_bucket=8``, while the current executor lets the measured cost
+model choose the cheaper spatial body per bucket and derive the floor.
+``crossover_speedup`` in the JSON is that head-to-head; each entry also
+records the chosen body per executed stage (``stage_bodies``), the
+floor in effect (``min_bucket``/``derived_min_bucket``), and whether
+the drift monitor flagged recalibration (``recalibration_due``) — the
+bench explains its own numbers (docs/tuning.md §Observability).
+
 Measured: filter-evaluation throughput vs N, N in 1..64; staged-vs-
 exhaustive filter time and row-compaction speedup at N >= 16, recorded in
 results/bench/multi_query_adaptive.json.
@@ -220,18 +231,23 @@ B_ROWSKEW = 256
 
 
 def _measure_staged(queries, out, repeat: int, warm_batches: int = 4,
-                    min_bucket: int = 8, measure_exhaustive: bool = True,
-                    cost_model=None):
-    """(us_exhaustive, us_staged, report) with warmed stats + restage.
+                    min_bucket=None, measure_exhaustive: bool = True,
+                    cost_model=None, spatial_body: str = "auto"):
+    """(us_exhaustive, us_staged, staged) with warmed stats + restage.
 
     ``measure_exhaustive=False`` skips timing the exhaustive program
-    (returns None for it) — the tier-only baseline call reuses the
-    exhaustive number already measured on the same queries/batch."""
+    (returns None for it) — the baseline calls reuse the exhaustive
+    number already measured on the same queries/batch.  ``min_bucket``
+    follows the engine's precedence: None derives the floor from the
+    cost model; an explicit value pins it (the PR 4 baseline pins 8).
+    ``spatial_body`` forces a compacted-spatial body ("rows" reproduces
+    the PR 4 executor's hard-wired kernel choice)."""
     plan = QueryPlan(queries)
     exhaustive = jax.jit(plan.evaluate)
     stats = SlotStats()
     staged = plan.build_staged(stats, min_bucket=min_bucket,
-                               cost_model=cost_model)
+                               cost_model=cost_model,
+                               spatial_body=spatial_body)
     for _ in range(warm_batches):                 # learn population rates
         staged.evaluate(out)
         staged.flush_stats(stats)
@@ -241,7 +257,7 @@ def _measure_staged(queries, out, repeat: int, warm_batches: int = 4,
     us_ex = (timeit(exhaustive, out, repeat=repeat)
              if measure_exhaustive else None)
     us_staged = timeit(staged.evaluate, out, repeat=repeat)
-    return us_ex, us_staged, staged.last_report
+    return us_ex, us_staged, staged
 
 
 def run_adaptive(smoke: bool = False) -> dict:
@@ -269,16 +285,17 @@ def run_adaptive(smoke: bool = False) -> dict:
     res = {}
     print(f"{'workload':>10s} {'N':>4s} {'exhaustive us':>14s} "
           f"{'staged us':>10s} {'speedup':>8s} {'tieronly us':>12s} "
-          f"{'rowspeed':>9s} {'cascade us':>11s} {'mode':>11s} "
-          f"{'stages':>8s}")
+          f"{'rowspeed':>9s} {'rowsbody us':>11s} {'xover':>8s} "
+          f"{'cascade us':>11s} {'mode':>11s} {'stages':>8s}")
     for workload, make in (("skewed", make_skewed_queries),
                            ("rowskew", make_rowskewed_queries),
                            ("uniform", make_queries)):
         out = out_rowskew if workload == "rowskew" else out64
         for n in sizes:
             queries = make(n)
-            us_ex, us_staged, report = _measure_staged(
+            us_ex, us_staged, staged = _measure_staged(
                 queries, out, repeat=repeat, cost_model=cm)
+            report = staged.last_report
             # PR 2's tier-granular executor on the SAME queries/batch:
             # min_bucket >= B disables row compaction, so needed stages
             # run full-batch — the baseline row_compaction_speedup is
@@ -286,8 +303,16 @@ def run_adaptive(smoke: bool = False) -> dict:
             _, us_tier_only, _ = _measure_staged(
                 queries, out, repeat=repeat, min_bucket=1 << 30,
                 measure_exhaustive=False, cost_model=cm)
+            # PR 4's executor on the SAME queries/batch: compacted ⇒ row
+            # kernel hard-wired, hand-set floor 8 — the baseline the
+            # crossover-aware executor must never lose to
+            _, us_rows_body, _ = _measure_staged(
+                queries, out, repeat=repeat, min_bucket=8,
+                measure_exhaustive=False, cost_model=cm,
+                spatial_body="rows")
             speedup = us_ex / us_staged
             row_speedup = us_tier_only / us_staged
+            crossover_speedup = us_rows_body / us_staged
             # the full adaptive cascade: staging + cost-model mode switch
             # (parks staging when the workload gives it nothing to skip)
             mqc = MultiQueryCascade(queries, adaptive=True, restage_every=8,
@@ -300,11 +325,14 @@ def run_adaptive(smoke: bool = False) -> dict:
             # would blend two code paths under one label
             mqc.restage_every = 1 << 30
             us_casc = timeit(mqc.masks, out, repeat=repeat)
+            monitor = mqc.calibration_monitor
             res[f"{workload}/N{n}"] = {
                 "us_exhaustive": us_ex, "us_staged": us_staged,
                 "speedup": speedup,
                 "us_staged_tier_only": us_tier_only,    # PR 2 executor
                 "row_compaction_speedup": row_speedup,
+                "us_staged_rows_body": us_rows_body,    # PR 4 executor
+                "crossover_speedup": crossover_speedup,
                 "us_cascade": us_casc,
                 "cascade_speedup": us_ex / us_casc, "cascade_mode": mode,
                 "stages_run": len(report.ran),          # counts (ints) for
@@ -313,17 +341,32 @@ def run_adaptive(smoke: bool = False) -> dict:
                 "stages_skipped_names": report.skipped,
                 "rows_evaluated": report.rows_evaluated,
                 "undecided_rows_in": report.undecided_rows_in,
+                # which body ran each executed stage ("batch"/"rows"/
+                # "full") — the crossover decision, self-explained
+                "stage_bodies": report.bodies,
                 "batch": report.batch,
+                # the floor in effect and its derivation source
+                "min_bucket": staged.min_bucket,
+                "min_bucket_derived": staged.min_bucket_derived,
+                "derived_min_bucket": cm.derived_min_bucket(),
+                # did the drift monitor flag a recalibration during the
+                # cascade run? (measured models only)
+                "recalibration_due": mqc.recalibration_due,
+                "calibration_monitor": (monitor.describe()
+                                        if monitor is not None else None),
                 # provenance: measured calibration vs static fallback
                 "calibration": cm.source,
                 "calibration_backend": cm.backend}
             emit(f"multi_query_adaptive/{workload}/N{n}", us_staged,
                  f"speedup={speedup:.2f}x;rows={row_speedup:.2f}x;"
+                 f"xover={crossover_speedup:.2f}x;"
                  f"ran={len(report.ran)}/{len(report.order)};mode={mode}")
             print(f"{workload:>10s} {n:4d} {us_ex:14.0f} {us_staged:10.0f} "
                   f"{speedup:7.2f}x {us_tier_only:12.0f} {row_speedup:8.2f}x "
+                  f"{us_rows_body:11.0f} {crossover_speedup:8.2f}x "
                   f"{us_casc:11.0f} {mode:>11s} "
-                  f"{len(report.ran)}/{len(report.order)} ran")
+                  f"{len(report.ran)}/{len(report.order)} ran "
+                  f"bodies={','.join(report.bodies)}")
 
     res["calibration_info"] = cm.describe()
     save_result("multi_query_adaptive", res)

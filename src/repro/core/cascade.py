@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -343,7 +344,13 @@ class MultiQueryCascade:
     un-parks without waiting for a lucky probe.  ``mode`` is "staged" or
     "exhaustive".  ``min_bucket`` is the row-compaction bucket floor
     (>= batch size disables row compaction; smaller floors trade a few
-    extra compiled step variants for less padded work per stage).
+    extra compiled step variants for less padded work per stage); when
+    not given it is derived from the cost model's calibration — the
+    static fallback derives the historical default 8
+    (``CostModel.derived_min_bucket``; knob precedence in
+    docs/tuning.md).  ``spatial_body`` forces a compacted spatial
+    stage's evaluation body ("rows"/"full"; default "auto" lets the
+    model pick the cheaper per bucket — the crossover rule).
 
     ``cost_model`` prices every side of that balance (stage runs, step
     overhead, exhaustive baseline, ledger prediction) in one unit
@@ -352,6 +359,15 @@ class MultiQueryCascade:
     constants when not (repro.core.costmodel).  ``step_overhead=None``
     takes the model's measured/static per-stage overhead; passing a
     number overrides it *in the model's units*.
+
+    A measured model is additionally *watched*: each staged batch's
+    predicted cost and observed wall time feed a
+    ``costmodel.CalibrationMonitor`` (pass ``calibration_monitor=`` to
+    share one across epoch rebuilds — ``QueryRegistry`` does), and at
+    restage boundaries a drifted/stale model latches
+    ``recalibration_due``.  The cascade never re-measures on its own;
+    ``MultiQueryStreamExecutor(auto_recalibrate=True)`` or the operator
+    (``make calibrate``) acts on the flag.
     """
 
     def __init__(self, queries: Sequence[Q.Predicate], *, tau: float = 0.2,
@@ -359,7 +375,9 @@ class MultiQueryCascade:
                  slot_stats: Optional[SlotStats] = None,
                  restage_every: int = 16,
                  step_overhead: Optional[float] = None,
-                 min_bucket: int = 8, cost_model=None):
+                 min_bucket: Optional[int] = None, cost_model=None,
+                 spatial_body: str = "auto",
+                 calibration_monitor=None):
         from repro.core import costmodel as CM
         from repro.core.plan import QueryPlan
         self.queries = tuple(queries)
@@ -378,6 +396,10 @@ class MultiQueryCascade:
                 raise ValueError("cost_model only drives the adaptive "
                                  "cascade's staging decisions; pass "
                                  "adaptive=True")
+            if calibration_monitor is not None:
+                raise ValueError("calibration_monitor is only fed by the "
+                                 "adaptive cascade's staged batches; pass "
+                                 "adaptive=True")
         if restage_every < 1:
             raise ValueError(f"restage_every must be >= 1, "
                              f"got {restage_every}")
@@ -392,8 +414,36 @@ class MultiQueryCascade:
                            else SlotStats()) if adaptive else None
         self._staged = (self.plan.build_staged(self.slot_stats,
                                                min_bucket=min_bucket,
-                                               cost_model=self.cost_model)
+                                               cost_model=self.cost_model,
+                                               spatial_body=spatial_body)
                         if adaptive else None)
+        # drift watch: measured models are monitored by default (one
+        # perf_counter pair + an EWMA update per staged batch); pass a
+        # shared monitor (e.g. the QueryRegistry's) so epoch rebuilds
+        # keep one error ledger.  The monitor only ever *flags* —
+        # ``recalibration_due`` latches at the next restage boundary and
+        # an opt-in consumer (MultiQueryStreamExecutor's auto mode, or
+        # the operator via ``make calibrate``) does the re-measuring.
+        self.calibration_monitor = (
+            calibration_monitor if calibration_monitor is not None
+            else CM.CalibrationMonitor(self.cost_model)
+            if adaptive and self.cost_model.source == "measured" else None)
+        if self.calibration_monitor is not None \
+                and self.calibration_monitor.active \
+                and self.cost_model.source != "measured":
+            # a shared monitor around a measured model paired with a
+            # static-pricing cascade would compare abstract units to
+            # wall microseconds — garbage drift, and under auto mode
+            # spurious multi-second re-profiles
+            warnings.warn(
+                "calibration_monitor watches a measured model but this "
+                "cascade prices with the static model; its drift ledger "
+                "will not be fed — pass "
+                "cost_model=calibration_monitor.model to monitor")
+        self.recalibration_due = False
+        self._monitor_gen = (self.calibration_monitor.generation
+                             if self.calibration_monitor is not None
+                             else -1)
         self._jitted = jax.jit(self.plan.evaluate)
         self._jitted_counts = jax.jit(self.plan.evaluate_with_counts)
         self._batches = 0
@@ -404,12 +454,32 @@ class MultiQueryCascade:
         self.restages = 0
 
     def _run_staged(self, out: FilterOutputs) -> jax.Array:
-        m = self._staged.evaluate(out)
+        monitor = self.calibration_monitor
+        # both models must be microsecond-scale for drift to mean
+        # anything (see the __init__ warning); the extra
+        # block_until_ready is cheap here — evaluate() already pays one
+        # host sync per executed stage, so only the final scatter is
+        # still in flight
+        watch = (monitor is not None and monitor.active
+                 and self.cost_model.source == "measured")
+        if watch:
+            t0 = time.perf_counter()
+            m = jax.block_until_ready(self._staged.evaluate(out))
+            wall_us = (time.perf_counter() - t0) * 1e6
+        else:
+            m = self._staged.evaluate(out)
+            wall_us = None
         self._staged.flush_stats(self.slot_stats)
         rep = self._staged.last_report
-        self._cost_staged += (rep.cost_run
-                              + self.step_overhead * rep.stages_run)
+        predicted = rep.cost_run + self.step_overhead * rep.stages_run
+        self._cost_staged += predicted
         self._staged_batches += 1
+        # a batch that traced new jitted steps spent its wall time
+        # compiling, not executing — feeding it to the drift ledger
+        # would latch recalibration on a perfectly calibrated model
+        # (and re-latch right after every recalibration rebuild)
+        if wall_us is not None and rep.steps_compiled == 0:
+            monitor.observe(predicted, wall_us)
         return m
 
     def _flush_exhaustive_counts(self, counts: jax.Array, B: int) -> None:
@@ -461,6 +531,22 @@ class MultiQueryCascade:
             self._cost_staged = 0.0
             self._staged_batches = 0
             self.restages += int(self._staged.restage(self.slot_stats))
+            # drift check rides the same boundary: latch (never auto-run —
+            # re-calibration is seconds of microbenchmarks) so an opt-in
+            # consumer (MultiQueryStreamExecutor auto mode / the operator)
+            # can re-run `make calibrate` and rebuild with fresh
+            # coefficients.  Sticky across transient decay of the drift
+            # signal, but cleared once the monitor is reset (its
+            # generation moves) — a dashboard must not show a
+            # permanently-due recalibration after the operator acted.
+            monitor = self.calibration_monitor
+            if monitor is not None:
+                if monitor.should_recalibrate():
+                    self.recalibration_due = True
+                    self._monitor_gen = monitor.generation
+                elif self.recalibration_due \
+                        and monitor.generation != self._monitor_gen:
+                    self.recalibration_due = False
         return m
 
     @property

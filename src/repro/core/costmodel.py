@@ -39,6 +39,32 @@ an overhead-dominated SAT stage that looks cheap at full batch is
 expensive relative to a row-dominated spatial stage once the count tier
 has compacted the batch to a sliver, and vice versa.
 
+Beyond pricing, a measured model *derives* three execution decisions the
+engine used to hard-wire (the closed calibration loop; the full policy
+is docs/tuning.md):
+
+- **Crossover-aware spatial body selection** (``spatial_body``): a
+  compacted spatial stage can run either the scalar-prefetched
+  row-gather kernel or the full-batch reduction over the gathered
+  subgrid — bit-identical results, different fixed/variable cost
+  splits.  The model compares its two fitted coefficient sets at the
+  bucket's row count and picks the cheaper body
+  (``spatial_crossover_rows`` is where they tie); the static model
+  always answers "rows", the pre-crossover hard-wired choice.
+- **Calibration-derived compaction floor** (``derived_min_bucket``):
+  the ``min_bucket`` knob used to be a hand-set 8; the measured
+  per-stage overhead-vs-per-row trade is exactly what the floor
+  mediates, so when no explicit ``min_bucket=`` is given the floor is
+  the largest power of two whose worst-case padding cost stays within
+  the measured per-stage step overhead (static model: the historical
+  default 8, regression-pinned).
+- **Drift-triggered recalibration** (``CalibrationMonitor``): every
+  staged batch yields a (predicted, observed-wall) microsecond pair; a
+  decaying relative-error ledger flags re-calibration when the model
+  stops describing the machine (or its 30-day staleness lapses
+  mid-run).  ``MultiQueryStreamExecutor(auto_recalibrate=True)`` is the
+  opt-in consumer; ``make calibrate`` stays the manual path.
+
 Calibrations serialize to ``results/calibration/<backend>.json`` with a
 backend fingerprint (platform, device kind, jax version) and a timestamp;
 ``load_calibration`` refuses fingerprints that do not match the running
@@ -166,25 +192,108 @@ class CostModel:
         raise ValueError(f"unknown stage kind {kind!r}")
 
     def stage_cost(self, kind: str, *, rows: float, batch: float,
-                   radius: int = 0) -> float:
+                   radius: int = 0, body: Optional[str] = None) -> float:
         """Cost of one stage-body invocation on ``rows`` rows of a
         ``batch``-row batch.  ``rows < batch`` means the stage runs
         compacted (row-level short-circuiting): the measured model then
-        prices the spatial tier with the row-gathered kernel's
-        coefficients, which have a different fixed/variable split than
-        the full-batch reduction."""
+        prices the spatial tier at the CHEAPER of its two bodies — the
+        row-gathered kernel and the full-batch reduction over the
+        gathered subgrid — matching ``spatial_body``'s choice (the two
+        coefficient sets have a different fixed/variable split, and
+        which wins depends on the row count).  ``body`` ("rows"/"full")
+        overrides the choice for callers that forced a specific body
+        (``StagedQueryPlan(spatial_body=...)``), so their reported costs
+        price the work they actually ran."""
         if self.source == "static":
             return self._static_unit(kind, radius) \
                 * float(rows) / max(float(batch), 1.0)
         if kind == "count":
             return self.coeffs["count"].cost(rows)
         if kind == "spatial":
-            key = "spatial_rows" if rows < batch else "spatial"
+            if rows >= batch:
+                return self.coeffs["spatial"].cost(rows)
+            if body is None:
+                body = self.spatial_body(rows=rows)
+            key = "spatial_rows" if body == "rows" else "spatial"
             return self.coeffs[key].cost(rows)
         if kind == "region":
             return self.coeffs["region"].cost(rows) \
                 + radius * self.coeffs["dilate"].cost(rows)
         raise ValueError(f"unknown stage kind {kind!r}")
+
+    def spatial_body(self, *, rows: float) -> str:
+        """Which spatial body a compacted stage should run on ``rows``
+        gathered rows: ``"rows"`` (the scalar-prefetched row-gather
+        kernel) or ``"full"`` (gather the rows, then the full-batch
+        reduction over the subgrid).  Both are bit-identical; only the
+        cost differs.  The static model always answers ``"rows"`` — the
+        pre-crossover engine's hard-wired choice, so disabling
+        calibration collapses exactly to that behaviour.  A measured
+        model compares the two fitted affine costs at ``rows`` and picks
+        the cheaper (ties go to the row kernel)."""
+        if self.source == "static":
+            return "rows"
+        return ("rows" if self.coeffs["spatial_rows"].cost(rows)
+                <= self.coeffs["spatial"].cost(rows) else "full")
+
+    def spatial_crossover_rows(self) -> Optional[float]:
+        """Row count where the two spatial bodies tie (measured models).
+        Which body wins on which side depends on the fit's orientation
+        (usually the overhead-free row kernel below, the cheaper-slope
+        full-batch reduction above, but a calibration can invert that)
+        — ``spatial_body`` is the authority on who wins where; this is
+        the tie point for diagnostics.  None when one body dominates at
+        every row count (equal slopes, or the tie lies at ``rows <= 0``)
+        or under the static model (no second coefficient set)."""
+        if self.source == "static":
+            return None
+        r_ = self.coeffs["spatial_rows"]
+        f_ = self.coeffs["spatial"]
+        d = r_.per_row - f_.per_row
+        if d == 0:
+            return None          # parallel costs never tie
+        rows = (f_.overhead - r_.overhead) / d
+        return rows if rows > 0 else None
+
+    #: bounds for the calibration-derived compaction floor: at least 1
+    #: (a floor of 0 is meaningless), at most 128 (a near-zero fitted
+    #: per-row cost must not derive a floor that disables compaction on
+    #: every realistic batch).
+    MIN_BUCKET_BOUNDS = (1, 128)
+
+    def derived_min_bucket(self, default: int = 8) -> int:
+        """The row-compaction bucket floor this backend's calibration
+        implies (``StagedQueryPlan`` uses this when no explicit
+        ``min_bucket=`` is given).
+
+        The floor mediates padded-row waste against compiled-variant
+        proliferation: every executed stage already pays the measured
+        per-stage ``step_overhead()`` (propagation + undecided fetch),
+        so buckets whose worst-case per-row work costs less than that
+        overhead are effectively free to pad — shrinking them further
+        multiplies jitted step variants without moving the per-batch
+        cost.  The derived floor is therefore the largest power of two
+        whose full padding cost, at the most expensive per-row
+        coefficient a compacted stage can run (count gather; the
+        row-gather spatial kernel, which is the body chosen at small
+        buckets; region + one dilation step), stays within the step
+        overhead — clamped to ``MIN_BUCKET_BOUNDS``.  The static model
+        has no microsecond scale to derive from and returns ``default``
+        (8, the historical hand-set knob — regression-pinned)."""
+        if self.source == "static":
+            return int(default)
+        worst_per_row = max(
+            self.coeffs["count"].per_row,
+            self.coeffs["spatial_rows"].per_row,
+            self.coeffs["region"].per_row + self.coeffs["dilate"].per_row)
+        lo, hi = self.MIN_BUCKET_BOUNDS
+        if worst_per_row <= 0:
+            return hi
+        target = self._step_overhead / worst_per_row
+        floor = 1
+        while floor * 2 <= target:
+            floor <<= 1
+        return int(min(max(floor, lo), hi))
 
     def stage_rank_cost(self, kind: str, *, radius: int = 0,
                         batch: float = REF_BATCH) -> float:
@@ -244,6 +353,10 @@ class CostModel:
                        for k, c in self.coeffs.items()},
             "calibrated_at": self.calibrated_at,
             "fingerprint": self.fingerprint,
+            # the two decisions this model derives (docs/tuning.md):
+            # where the spatial bodies cross, and the compaction floor
+            "spatial_crossover_rows": self.spatial_crossover_rows(),
+            "derived_min_bucket": self.derived_min_bucket(),
         }
 
     def __repr__(self) -> str:
@@ -576,3 +689,145 @@ def calibrate(*, batch: int = 256, grid: int = 16, classes: int = 8,
     if save:
         save_calibration(model, path)
     return model
+
+
+# ---------------------------------------------------------------------------
+# calibration freshness: drift-triggered recalibration
+# ---------------------------------------------------------------------------
+
+class CalibrationMonitor:
+    """Decaying prediction-error ledger that decides WHEN to recalibrate.
+
+    ``make calibrate`` is a one-shot profile; the machine it described
+    keeps changing underneath it (co-tenant load, frequency scaling, a
+    jax upgrade that survived the fingerprint, a workload whose shapes
+    the fit extrapolates badly to).  Every staged batch already produces
+    both sides of the check for free: the model's predicted cost of the
+    executed stages (``StageReport.cost_run`` + per-stage overheads) and
+    the observed wall time of the same batch.  The monitor folds each
+    pair into an EWMA ledger of symmetric relative error (fold-change
+    ``max/min - 1``, so over- and under-prediction count alike; the
+    same ``stage_decay``-style geometry as the ``SlotStats`` stage
+    ledgers — a drift signal must track the live machine, not a
+    lifetime average) and flags recalibration when the smoothed error
+    exceeds ``rel_threshold`` (default 1.0 ≈ consistently 2x off in
+    either direction) with at least ``min_weight`` effective
+    observations of evidence — or when the calibration's 30-day
+    staleness lapses mid-run (``load_calibration`` refuses stale files
+    at load time; a long-lived process needs the same check on a clock).
+
+    Only *measured* models are monitored: the static model's abstract
+    units cannot be compared against wall microseconds, and there is no
+    calibration to refresh (``observe`` no-ops, ``should_recalibrate``
+    stays False).  The monitor never runs calibration itself — it is a
+    pure signal.  ``MultiQueryCascade`` feeds it and latches
+    ``recalibration_due`` at restage boundaries;
+    ``MultiQueryStreamExecutor(auto_recalibrate=True)`` is the opt-in
+    consumer that actually re-runs ``calibrate()`` (see
+    docs/tuning.md §drift); ``make calibrate`` stays the manual path.
+    """
+
+    def __init__(self, model: CostModel, *, rel_threshold: float = 1.0,
+                 decay: float = 0.9, min_weight: float = 8.0,
+                 max_age_s: float = DEFAULT_MAX_AGE_S,
+                 clock=time.time):
+        if rel_threshold <= 0:
+            raise ValueError("rel_threshold must be positive")
+        if not 0.0 < decay <= 1.0:
+            raise ValueError("decay must be in (0, 1]")
+        if decay < 1.0 and min_weight >= 1.0 / (1.0 - decay):
+            raise ValueError(
+                f"min_weight={min_weight} is unreachable: the decayed "
+                f"observation count converges to 1/(1-decay) = "
+                f"{1.0 / (1.0 - decay):.1f}, so drift could never fire")
+        self.rel_threshold = float(rel_threshold)
+        self.decay = float(decay)
+        self.min_weight = float(min_weight)
+        self.max_age_s = float(max_age_s)
+        self._clock = clock
+        self.recalibrations = 0      # times reset() followed a re-fit
+        self.reset(model)
+
+    def reset(self, model: Optional[CostModel] = None) -> None:
+        """Zero the error ledger, optionally adopting a fresh model
+        (called after a recalibration installed new coefficients).
+        Bumps ``generation`` so consumers holding a latched flag
+        (``MultiQueryCascade.recalibration_due``) can see that the
+        drift they latched on has been dealt with."""
+        if model is not None:
+            self.model = model
+        self.generation = getattr(self, "generation", -1) + 1
+        self._err_acc = 0.0          # decayed sum of relative errors
+        self._weight = 0.0           # decayed observation count
+
+    @property
+    def active(self) -> bool:
+        """Is there anything to monitor?  (measured models only)"""
+        return self.model.source == "measured"
+
+    def observe(self, predicted_us: float, observed_us: float) -> None:
+        """Fold one staged batch's (model-predicted, wall-observed)
+        microsecond pair into the error ledger.  The error is the
+        *symmetric* fold-change ``max/min - 1``: a model 2x too cheap
+        and a model 2x too expensive both score 1.0 — a one-sided
+        ``|obs-pred|/pred`` would be structurally blind to
+        over-prediction (it is bounded by 1 from that side), and a
+        calibration taken under co-tenant load over-predicts.
+        Non-positive or non-finite pairs are ignored (a zero prediction
+        means the model was not consulted; wall-clock glitches must not
+        poison the ledger)."""
+        if not self.active:
+            return
+        if not (np.isfinite(predicted_us) and np.isfinite(observed_us)) \
+                or predicted_us <= 0 or observed_us <= 0:
+            return
+        lo, hi = sorted((float(predicted_us), float(observed_us)))
+        rel_err = hi / lo - 1.0
+        self._err_acc = self.decay * self._err_acc + rel_err
+        self._weight = self.decay * self._weight + 1.0
+
+    @property
+    def drift(self) -> float:
+        """Smoothed symmetric prediction error (``max/min - 1`` per
+        observation; 0.0 on a cold ledger, 1.0 ≈ consistently 2x off in
+        either direction)."""
+        if self._weight <= 0:
+            return 0.0
+        return self._err_acc / self._weight
+
+    @property
+    def weight(self) -> float:
+        """Effective observation count behind ``drift`` (decayed)."""
+        return self._weight
+
+    def stale(self) -> bool:
+        """Has the calibration's wall-clock staleness lapsed mid-run?"""
+        if not self.active or self.model.calibrated_at is None:
+            return False
+        return self._clock() - self.model.calibrated_at > self.max_age_s
+
+    def should_recalibrate(self) -> bool:
+        """True when the evidence says the coefficients no longer
+        describe this machine: sustained relative error above the
+        threshold (with ``min_weight`` effective observations — one
+        outlier batch must not trigger a multi-second re-profile), or
+        wall-clock staleness."""
+        if not self.active:
+            return False
+        if self.stale():
+            return True
+        return self._weight >= self.min_weight \
+            and self.drift > self.rel_threshold
+
+    def describe(self) -> Dict:
+        """Operator/provenance view (recorded next to bench results)."""
+        return {"active": self.active, "drift": self.drift,
+                "weight": self._weight, "stale": self.stale(),
+                "rel_threshold": self.rel_threshold,
+                "should_recalibrate": self.should_recalibrate(),
+                "recalibrations": self.recalibrations}
+
+    def __repr__(self) -> str:
+        return (f"CalibrationMonitor(drift={self.drift:.3f}, "
+                f"weight={self._weight:.1f}, "
+                f"due={self.should_recalibrate()})")

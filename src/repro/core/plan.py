@@ -111,6 +111,18 @@ leaf; with N registered queries that work is repeated N times per batch.
     ranks cheap at full batch ranks expensive once the count tier has
     compacted the batch to a few rows.
 
+    The model also *steers* execution, not just pricing (the closed
+    calibration loop — decision policy in docs/tuning.md): a compacted
+    spatial stage runs whichever of its two bit-identical bodies (the
+    row-gather kernel vs the full-batch reduction over the gathered
+    rows) the calibration says is cheaper at that bucket's row count;
+    the row-compaction bucket floor is derived from the fitted
+    overhead-vs-per-row trade when no explicit ``min_bucket=`` is
+    given; and a ``costmodel.CalibrationMonitor`` fed by the adaptive
+    cascade compares each staged batch's predicted cost against its
+    observed wall time, flagging re-calibration when the model has
+    drifted off the machine.
+
 The shared evaluation is bit-identical to running ``eval_filters`` per
 query, and the staged plan is bit-identical to ``evaluate`` under every
 stage order, statistics state, and cost model (property-tested in
@@ -320,15 +332,21 @@ class QueryPlan:
     def _spatial_values(self, out: FilterOutputs,
                         payload: Optional[Tuple] = None,
                         class_slice: Optional[Tuple] = None,
-                        rows: Optional[jax.Array] = None) -> jax.Array:
+                        rows: Optional[jax.Array] = None,
+                        body: str = "rows") -> jax.Array:
         """(B, k) bool for the spatial tier from the fused (C', 5) stats.
 
         ``class_slice=(classes, a_idx, b_idx)`` gathers only the grid
         planes the tier's leaves reference before the reduction
         (stage-sliced evaluation) — bit-identical, per-class stats are
         independent.  ``rows`` restricts the reduction to a gathered row
-        subset (row-level short-circuiting): the stats run through the
-        scalar-prefetched row kernel and the result is (R, k)."""
+        subset (row-level short-circuiting); ``body`` picks which of the
+        two bit-identical bodies reduces it: ``"rows"`` rides the
+        scalar-prefetched row-gather kernel, ``"full"`` gathers the rows
+        first and runs the full-batch reduction over the (R, g, g, C')
+        subgrid — cheaper above the calibration's rows crossover
+        (``CostModel.spatial_body`` is the chooser).  Either way the
+        result is (R, k)."""
         _, a, b, use_row, radius = payload if payload is not None \
             else self._spa
         g = out.grid.shape[1]
@@ -339,7 +357,10 @@ class QueryPlan:
             grid = grid[..., jnp.asarray(classes)]
         if rows is not None:
             from repro.kernels import ops as kops
-            stats = kops.spatial_stats_rows_inline(grid, rows, self.tau)
+            if body == "full":
+                stats = kops.spatial_stats_inline(grid[rows], self.tau)
+            else:
+                stats = kops.spatial_stats_rows_inline(grid, rows, self.tau)
         elif grid is out.grid:
             stats = out.spatial_stats(self.tau)
         else:
@@ -516,12 +537,13 @@ class QueryPlan:
 
     def build_staged(self, stats=None, *,
                      order: Optional[Sequence[int]] = None,
-                     min_bucket: int = 8,
-                     cost_model: Optional[CM.CostModel] = None
-                     ) -> "StagedQueryPlan":
+                     min_bucket: Optional[int] = None,
+                     cost_model: Optional[CM.CostModel] = None,
+                     spatial_body: str = "auto") -> "StagedQueryPlan":
         """Adaptive stage-by-stage executor over this plan's lowering."""
         return StagedQueryPlan(self, stats, order=order,
-                               min_bucket=min_bucket, cost_model=cost_model)
+                               min_bucket=min_bucket, cost_model=cost_model,
+                               spatial_body=spatial_body)
 
     @property
     def sharing_factor(self) -> float:
@@ -546,6 +568,16 @@ class StageReport:
     # accounting as ``oracle_frames_evaluated``); batch for full steps
     undecided_rows_in: List[int] = dataclasses.field(default_factory=list)
     # true undecided-row count when the stage ran (<= its bucket)
+    bodies: List[str] = dataclasses.field(default_factory=list)
+    # per executed stage, which body evaluated it: "batch" (uncompacted
+    # full-batch step), "rows" (compacted; spatial via the row-gather
+    # kernel, count/SAT via direct row indexing), or "full" (compacted
+    # spatial stage that chose the full-batch reduction over the
+    # gathered subgrid — the crossover-aware choice)
+    steps_compiled: int = 0     # jitted steps newly traced by this batch —
+                                # its wall time includes compilation, so
+                                # wall-clock consumers (the calibration
+                                # drift monitor) must skip it
     batch: int = 0              # B of the evaluated batch
     cost_run: float = 0.0       # cost-model cost of executed stages at the
                                 # rows each actually evaluated
@@ -601,12 +633,34 @@ class StagedQueryPlan:
     the shared ledger holds), while per-stage row traffic always feeds
     the ``SlotStats`` stage ledger for ``predicted_batch_cost``.
 
-    ``min_bucket`` floors the bucket size (default 8; tiny buckets would
-    multiply compiled variants for little win).  Setting it >= B disables
-    row compaction entirely and reproduces the tier-granular executor.
+    A compacted *spatial* stage has two bit-identical evaluation bodies
+    with different cost structure: the scalar-prefetched row-gather
+    kernel (no fixed overhead, higher per-row cost) and the full-batch
+    reduction over the gathered subgrid (fixed overhead, lower per-row
+    cost).  The executor asks the cost model which is cheaper at each
+    bucket's row count (``CostModel.spatial_body`` — the calibration's
+    two coefficient sets cross at ``spatial_crossover_rows``) and keeps
+    BOTH variants jitted side by side in the step cache, so the choice
+    flipping between bucket sizes never re-traces.  ``spatial_body=``
+    forces one body ("rows"/"full", default "auto") — the property
+    tests pin that all three agree bit-for-bit; under the static model
+    "auto" always resolves to the row kernel, the pre-crossover
+    executor's hard-wired choice.
+
+    ``min_bucket`` floors the bucket size (tiny buckets would multiply
+    compiled variants for little win).  When not given explicitly it is
+    *derived* from the cost model (``CostModel.derived_min_bucket``):
+    the largest power of two whose worst-case padding cost stays within
+    the measured per-stage step overhead — the static fallback derives
+    the historical hand-set default 8, so disabling calibration
+    reproduces the legacy floor exactly.  An explicit ``min_bucket=``
+    always wins (knob precedence in docs/tuning.md).  Setting it >= B
+    disables row compaction entirely and reproduces the tier-granular
+    executor.
 
     ``cost_model`` (repro.core.costmodel) prices everything: ordering
-    scores, ``StageReport.cost_run``/``cost_total``, and
+    scores, ``StageReport.cost_run``/``cost_total``, the per-bucket
+    spatial-body choice, the derived bucket floor, and
     ``predicted_batch_cost`` all query the ONE model instance, so the
     comparisons stay unit-consistent whether the model is the measured
     per-backend calibration or the static fallback (the default when
@@ -616,14 +670,25 @@ class StagedQueryPlan:
 
     def __init__(self, plan: QueryPlan, stats=None, *,
                  order: Optional[Sequence[int]] = None,
-                 min_bucket: int = 8,
-                 cost_model: Optional[CM.CostModel] = None):
-        if min_bucket < 1:
-            raise ValueError(f"min_bucket must be >= 1, got {min_bucket}")
-        self.min_bucket = min_bucket
+                 min_bucket: Optional[int] = None,
+                 cost_model: Optional[CM.CostModel] = None,
+                 spatial_body: str = "auto"):
         self.plan = plan
         self.cost_model = (cost_model if cost_model is not None
                            else CM.static_cost_model())
+        # knob precedence (docs/tuning.md): an explicit min_bucket wins;
+        # None derives the floor from the model's calibration (the
+        # static fallback derives the historical default 8)
+        self.min_bucket_derived = min_bucket is None
+        if min_bucket is None:
+            min_bucket = self.cost_model.derived_min_bucket()
+        if min_bucket < 1:
+            raise ValueError(f"min_bucket must be >= 1, got {min_bucket}")
+        self.min_bucket = min_bucket
+        if spatial_body not in ("auto", "rows", "full"):
+            raise ValueError(f"spatial_body must be 'auto', 'rows' or "
+                             f"'full', got {spatial_body!r}")
+        self.spatial_body = spatial_body
         self._last_batch: Optional[int] = None
         self.stages = plan.stage_descriptors(self.cost_model)
         # (N, n_stages) — does query q own a slot in stage s?
@@ -650,6 +715,7 @@ class StagedQueryPlan:
         self._steps: "OrderedDict[Tuple[int, frozenset, Optional[int]]," \
                      " Callable]" = OrderedDict()
         self.step_cache_max = 64
+        self._trace_count = 0       # lifetime step-cache misses (traces)
         self.last_report: Optional[StageReport] = None
         self._pending: Optional[Tuple[
             List[Tuple[np.ndarray, jax.Array, int]],
@@ -763,8 +829,8 @@ class StagedQueryPlan:
             classes, a_idx, b_idx = SP.stage_class_slice(payload[1],
                                                          payload[2])
             cs = (classes, a_idx, b_idx)
-            return lambda out, rows=None: plan._spatial_values(
-                out, payload, class_slice=cs, rows=rows)
+            return lambda out, rows=None, body="rows": plan._spatial_values(
+                out, payload, class_slice=cs, rows=rows, body=body)
         from repro.core import cam as CAM
         radius, slots, cls, rects, minc = st.payload
         cls, rects, minc = cls[perm], rects[perm], minc[perm]
@@ -782,8 +848,24 @@ class StagedQueryPlan:
     def _stage_slots(self, si: int) -> np.ndarray:
         return self.stages[si].slots[self._perms[si]]
 
-    def _get_step(self, si: int, ran: frozenset,
-                  bucket: Optional[int]) -> Callable:
+    def _body_for(self, si: int, bucket: Optional[int]) -> str:
+        """Which body evaluates stage ``si`` at this bucket (the
+        ``StageReport.bodies`` vocabulary).  Only a *compacted spatial*
+        stage has a real choice: forced by ``spatial_body=`` when not
+        "auto" (the property tests pin bit-identity of both), otherwise
+        the cost model picks the cheaper of its two coefficient sets at
+        the bucket's row count — the static model always answers "rows",
+        reproducing the pre-crossover executor exactly."""
+        if bucket is None:
+            return "batch"
+        if self.stages[si].kind != "spatial":
+            return "rows"
+        if self.spatial_body != "auto":
+            return self.spatial_body
+        return self.cost_model.spatial_body(rows=bucket)
+
+    def _get_step(self, si: int, ran: frozenset, bucket: Optional[int],
+                  body: str = "batch") -> Callable:
         """Fused jitted step for stage ``si`` given the set of stages that
         already ran: eval + scatter + both propagation passes + undecided
         reductions + pass counts, one program.  The known-slot mask is a
@@ -795,15 +877,20 @@ class StagedQueryPlan:
         row-index vector plus the real survivor count and evaluates /
         propagates only the gathered rows, scattering results back into
         the persistent (B, ...) state — decided rows are invariant to the
-        slots they never evaluated, so the scatter-back is exact."""
-        key = (si, ran, bucket)
+        slots they never evaluated, so the scatter-back is exact.
+        ``body`` (from ``_body_for``) selects the compacted spatial
+        stage's evaluation body and is part of the cache key: both
+        variants stay jitted side by side, so the crossover decision
+        flipping between bucket sizes never re-traces."""
+        key = (si, ran, bucket, body)
         step = self._steps.get(key)
         if step is not None:
             self._steps.move_to_end(key)
             return step
         plan = self.plan
-        body = self._stage_body(si)
+        stage_body = self._stage_body(si)
         slots = self._stage_slots(si)
+        spatial = self.stages[si].kind == "spatial"
         known = np.zeros(plan.n_unique_leaves, bool)
         for sj in ran:
             known[self.stages[sj].slots] = True
@@ -814,14 +901,15 @@ class StagedQueryPlan:
             # derive from leaf_vals alone, so no prior value/decided
             # state is threaded in
             def step_fn(out, leaf_vals):
-                vals = body(out)                           # (B, k) bool
+                vals = stage_body(out)                     # (B, k) bool
                 leaf_vals = leaf_vals.at[:, slots].set(vals)
                 value, decided = plan.propagate_bounds(leaf_vals, known)
                 undec = jnp.concatenate([~decided.all(0), ~decided.all(1)])
                 return leaf_vals, value, decided, undec, vals.sum(0)
         else:
             def step_fn(out, leaf_vals, value, decided, idx, n_real):
-                vals = body(out, rows=idx)                 # (R, k) bool
+                vals = (stage_body(out, rows=idx, body=body) if spatial
+                        else stage_body(out, rows=idx))    # (R, k) bool
                 sub = leaf_vals[idx].at[:, slots].set(vals)
                 leaf_vals = leaf_vals.at[idx].set(sub)
                 v, dec = plan.propagate_bounds(sub, known)
@@ -834,6 +922,7 @@ class StagedQueryPlan:
                         (vals & valid[:, None]).sum(0))
 
         step = jax.jit(step_fn)
+        self._trace_count += 1
         self._steps[key] = step
         while len(self._steps) > self.step_cache_max:
             self._steps.popitem(last=False)              # evict coldest
@@ -860,6 +949,7 @@ class StagedQueryPlan:
                              cost_total=plan.exhaustive_cost_model(
                                  self.cost_model, batch=B),
                              batch=B)
+        traces_before = self._trace_count
         pending: List[Tuple[np.ndarray, jax.Array, int]] = []
         stage_rows: List[Tuple[str, int, int, Optional[int],
                                Optional[int]]] = []
@@ -882,12 +972,14 @@ class StagedQueryPlan:
             else:                   # every row undecided (first stage /
                 idx = None          # uniform traffic): skip the nonzero+
             if idx is None or idx.size >= B:        # pad bookkeeping
-                step = self._get_step(si, ran, None)
+                body = self._body_for(si, None)
+                step = self._get_step(si, ran, None, body)
                 leaf_vals, value, decided, undec, counts = step(
                     out, leaf_vals)
                 rows_eval, seen = B, B
             else:
-                step = self._get_step(si, ran, idx.size)
+                body = self._body_for(si, idx.size)
+                step = self._get_step(si, ran, idx.size, body)
                 leaf_vals, value, decided, undec, counts = step(
                     out, leaf_vals, value, decided, jnp.asarray(idx),
                     jnp.asarray(n_rows, jnp.int32))
@@ -915,8 +1007,12 @@ class StagedQueryPlan:
             report.ran.append(st.name)
             report.rows_evaluated.append(rows_eval)
             report.undecided_rows_in.append(n_rows)
+            report.bodies.append(body)
+            # priced at the body that actually ran (a forced spatial_body
+            # must be charged for its own choice, not the model's)
             report.cost_run += self.cost_model.stage_cost(
-                st.kind, rows=rows_eval, batch=B, radius=st.radius)
+                st.kind, rows=rows_eval, batch=B, radius=st.radius,
+                body=body if body in ("rows", "full") else None)
             report.undecided_after.append(int(undecided_cols.sum()))
             if not undecided_cols.any():
                 break
@@ -925,6 +1021,7 @@ class StagedQueryPlan:
         for sj in self.order[len(report.ran) + len(report.skipped):]:
             report.skipped.append(self.stages[sj].name)
             stage_rows.append((self.stages[sj].name, 0, B, None, None))
+        report.steps_compiled = self._trace_count - traces_before
         self.last_report = report
         self._pending = (pending, stage_rows)
         return value

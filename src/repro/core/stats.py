@@ -43,6 +43,14 @@ search in ``StagedQueryPlan._staging_order`` is the one safe consumer
 the stages it has already placed, the same prefix-conditioning direction
 the observations were made under).
 
+A fourth ledger deliberately does NOT live here: the cost model's
+decaying prediction-*error* ledger
+(``costmodel.CalibrationMonitor``) — it is keyed to one backend's
+fitted coefficients, not to the query population, so persisting or
+merging it with the population store would couple two lifetimes that
+drift independently (queries churn; machines recalibrate).
+docs/tuning.md tabulates which ledger feeds which decision.
+
 The whole store (slot rates + both stage ledgers) round-trips through
 ``save``/``load`` as JSON — canonical predicate keys included, via a
 small structural codec — so a redeployed monitor resumes with the

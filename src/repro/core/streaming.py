@@ -4,9 +4,13 @@ Maps the paper's query surface (``WINDOW HOPPING (SIZE n, ADVANCE BY m)``)
 and its sampling-based aggregate evaluation onto a batched executor, and
 adds the production concerns a monitoring deployment needs: per-window
 deadlines with frame dropping (the stream does not wait — a straggling
-device must not stall ingest), backpressure accounting, and multi-query
+device must not stall ingest), backpressure accounting, multi-query
 multiplexing (queries register/retire mid-stream; the shared-cascade
-engine is rebuilt only when the registered set actually changes).
+engine is rebuilt only when the registered set actually changes), and
+calibration freshness (``MultiQueryStreamExecutor(auto_recalibrate=True)``
+re-runs the cost-model microbenchmarks when the registry's shared
+``CalibrationMonitor`` says the fitted coefficients drifted off the
+machine — docs/tuning.md has the full policy).
 """
 from __future__ import annotations
 
@@ -126,18 +130,19 @@ class StreamExecutor:
 # Multi-query multiplexing (queries come and go mid-stream)
 # --------------------------------------------------------------------------
 
-def _accepts_stats(factory: Callable) -> bool:
-    """Does the engine factory opt into the (queries, slot_stats) contract?
+def _accepts_kw(factory: Callable, name: str) -> bool:
+    """Does the engine factory opt into receiving keyword ``name``
+    (``slot_stats``, ``calibration_monitor``)?
 
-    Opt-in is by parameter NAME — a parameter called ``slot_stats`` —
-    never by arity: a legacy one-arg factory that happens to carry an
-    unrelated second default (``def factory(queries, tau=0.2)``) must not
-    silently receive a SlotStats object as ``tau``."""
+    Opt-in is by parameter NAME — never by arity: a legacy one-arg
+    factory that happens to carry an unrelated second default
+    (``def factory(queries, tau=0.2)``) must not silently receive a
+    SlotStats object as ``tau``."""
     try:
         params = inspect.signature(factory).parameters
     except (TypeError, ValueError):
         return False
-    p = params.get("slot_stats")
+    p = params.get(name)
     return p is not None and p.kind in (
         inspect.Parameter.POSITIONAL_OR_KEYWORD,
         inspect.Parameter.KEYWORD_ONLY)
@@ -166,14 +171,24 @@ class QueryRegistry:
     prior.  A missing snapshot starts cold; a corrupt/unreadable one is
     ignored with a warning — persistence must never take down a
     restarting monitor.  ``save_stats()`` writes the snapshot back
-    (call it on shutdown or on a timer)."""
+    (call it on shutdown or on a timer).
+
+    ``calibration_monitor`` (repro.core.costmodel.CalibrationMonitor)
+    rides along the same way the stats store does: engine factories
+    that declare the parameter receive it, so the cost-model drift
+    ledger — like the selectivity ledgers — survives epoch-lazy plan
+    rebuilds instead of restarting cold each time a query registers.
+    ``MultiQueryStreamExecutor(auto_recalibrate=True)`` reads it to
+    decide when to re-run calibration."""
 
     def __init__(self, slot_stats: Optional[SlotStats] = None, *,
-                 stats_path: Optional[str] = None):
+                 stats_path: Optional[str] = None,
+                 calibration_monitor=None):
         self._next_id = 0
         self._active: Dict[int, Any] = {}
         self.epoch = 0
         self.slot_stats = slot_stats if slot_stats is not None else SlotStats()
+        self.calibration_monitor = calibration_monitor
         self.stats_path = stats_path
         if stats_path is not None and os.path.exists(stats_path):
             try:
@@ -181,6 +196,13 @@ class QueryRegistry:
             except (ValueError, OSError) as e:
                 warnings.warn(f"ignoring unreadable SlotStats snapshot "
                               f"{stats_path!r}: {e}")
+
+    def touch(self) -> None:
+        """Bump the epoch without changing the query set, forcing every
+        executor to rebuild its engine at the next batch boundary —
+        how a recalibration installs fresh cost coefficients into
+        engines that were built against the old model."""
+        self.epoch += 1
 
     def save_stats(self, path: Optional[str] = None) -> str:
         """Snapshot the population store to ``path`` (default: the
@@ -239,8 +261,22 @@ class MultiQueryStreamExecutor:
     registry's population statistics store — adaptive engines built
     across epoch rebuilds then share one learned-selectivity ledger
     (pass it to ``MultiQueryCascade(..., adaptive=True, slot_stats=...)``).
+    A parameter named ``calibration_monitor`` opts into the registry's
+    shared drift monitor the same way (pass it through to the cascade).
     The opt-in is by parameter name, never arity, so legacy factories
     with unrelated defaults keep the one-argument contract.
+
+    ``auto_recalibrate=True`` closes the calibration-freshness loop
+    (requires a registry with a ``calibration_monitor``): at window
+    boundaries, when the monitor's decayed prediction-error ledger —
+    fed by the adaptive cascade's staged batches — flags drift or
+    staleness, the executor re-runs ``recalibrate_fn`` (default:
+    ``costmodel.calibrate(save=True)``, i.e. what ``make calibrate``
+    does), resets the monitor around the fresh model, and bumps the
+    registry epoch so the next batch rebuilds engines against the new
+    coefficients.  Off by default: recalibration is seconds of
+    foreground microbenchmarks, which a latency-sensitive deployment
+    schedules manually (``make calibrate``) instead.
 
     ``on_window(result)`` fires after each hopping window and may
     register/retire queries (mid-stream multiplexing).
@@ -249,16 +285,30 @@ class MultiQueryStreamExecutor:
     def __init__(self, registry: QueryRegistry,
                  engine_factory: Callable[...,
                                           Callable[[np.ndarray], np.ndarray]],
-                 window: HoppingWindow, batch: int):
+                 window: HoppingWindow, batch: int, *,
+                 auto_recalibrate: bool = False,
+                 recalibrate_fn: Optional[Callable[[], Any]] = None):
         self.registry = registry
         self.engine_factory = engine_factory
         self.window = window
         self.batch = batch
         self.rebuilds = 0
+        self.recalibrations = 0
+        self.auto_recalibrate = auto_recalibrate
+        self.recalibrate_fn = recalibrate_fn
+        if auto_recalibrate and registry.calibration_monitor is None:
+            raise ValueError(
+                "auto_recalibrate needs a drift signal: construct the "
+                "registry with a costmodel.CalibrationMonitor "
+                "(QueryRegistry(calibration_monitor=...)) and hand it to "
+                "the adaptive cascade via the engine factory")
         self._epoch = -1
         self._engine: Optional[Callable] = None
         self._qids: Tuple[int, ...] = ()
-        self._factory_takes_stats = _accepts_stats(engine_factory)
+        self._factory_takes_stats = _accepts_kw(engine_factory,
+                                                "slot_stats")
+        self._factory_takes_monitor = _accepts_kw(engine_factory,
+                                                  "calibration_monitor")
 
     def _refresh(self):
         if self.registry.epoch != self._epoch:
@@ -268,14 +318,54 @@ class MultiQueryStreamExecutor:
                 self._engine = None
             else:
                 queries = tuple(q for _, q in items)
-                self._engine = (
-                    self.engine_factory(
-                        queries, slot_stats=self.registry.slot_stats)
-                    if self._factory_takes_stats
-                    else self.engine_factory(queries))
+                kw = {}
+                if self._factory_takes_stats:
+                    kw["slot_stats"] = self.registry.slot_stats
+                if self._factory_takes_monitor:
+                    kw["calibration_monitor"] = \
+                        self.registry.calibration_monitor
+                self._engine = self.engine_factory(queries, **kw)
             self._epoch = self.registry.epoch
             self.rebuilds += 1
         return self._engine, self._qids
+
+    def _maybe_recalibrate(self) -> bool:
+        """Window-boundary freshness check (auto mode): re-measure when
+        the shared monitor flags, install the fresh model, force an
+        engine rebuild.  Never raises past a failed re-measure — a
+        monitoring stream must keep answering on drifted coefficients
+        rather than die re-profiling them."""
+        monitor = self.registry.calibration_monitor
+        if not (self.auto_recalibrate and monitor is not None
+                and monitor.should_recalibrate()):
+            return False
+        from repro.core import costmodel as CM
+        fn = self.recalibrate_fn or (lambda: CM.calibrate(save=True))
+        try:
+            model = fn()
+        except Exception as e:                       # pragma: no cover -
+            warnings.warn(f"auto-recalibration failed ({e}); keeping the "
+                          f"current model")          # exercised via stub
+            return False
+        monitor.recalibrations += 1
+        if model is None:
+            # a recalibrate_fn that writes to disk and returns nothing:
+            # reload through the normal resolver so the monitor adopts
+            # the freshly saved coefficients (keeping the OLD model here
+            # would leave stale() true and re-profile every window)
+            from repro.core import costmodel as CM2
+            model = CM2.default_cost_model()
+        monitor.reset(model)
+        if monitor.should_recalibrate():
+            # still flagged right after a re-measure (e.g. the reloaded
+            # model is static or still past max_age): another attempt
+            # would loop seconds-long re-profiles forever
+            warnings.warn("recalibration did not clear the monitor's "
+                          "flag; disabling auto_recalibrate")
+            self.auto_recalibrate = False
+        self.recalibrations += 1
+        self.registry.touch()       # engines rebuild on the new model
+        return True
 
     def run(self, n_frames: int,
             on_window: Optional[Callable[[WindowResult], None]] = None
@@ -293,6 +383,7 @@ class MultiQueryStreamExecutor:
                     hits[qid] = hits.get(qid, 0) + int(ans[:, k].sum())
             res = WindowResult(span=(lo, hi), hits=hits, frames=hi - lo)
             results.append(res)
+            self._maybe_recalibrate()           # drift check per window
             if on_window is not None:
                 on_window(res)                  # may mutate the registry
         return results

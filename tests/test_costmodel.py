@@ -476,3 +476,390 @@ def test_registry_survives_corrupt_snapshot(tmp_path):
 def test_registry_save_stats_requires_some_path():
     with pytest.raises(ValueError, match="path"):
         QueryRegistry().save_stats()
+
+
+# ---------------------------------------------------------------------------
+# 4. closing the loop (ISSUE 5): body crossover, derived floor, drift
+# ---------------------------------------------------------------------------
+
+def crossover_model(step: float = 12.0) -> CM.CostModel:
+    """Row kernel 3 us/row vs full-batch 8 + 1·rows us: bodies tie at 4
+    rows — below it the row kernel wins, above it the full reduction."""
+    return measured_model({
+        "count": {"per_row": 0.1, "overhead": 0.0},
+        "spatial": {"per_row": 1.0, "overhead": 8.0},
+        "spatial_rows": {"per_row": 3.0, "overhead": 0.0},
+        "region": {"per_row": 2.0, "overhead": 5.0},
+        "dilate": {"per_row": 1.0, "overhead": 0.0},
+    }, step=step)
+
+
+def test_spatial_body_choice_and_crossover():
+    cm = crossover_model()
+    assert cm.spatial_crossover_rows() == pytest.approx(4.0)
+    assert cm.spatial_body(rows=2) == "rows"
+    assert cm.spatial_body(rows=4) == "rows"        # tie -> row kernel
+    assert cm.spatial_body(rows=5) == "full"
+    assert cm.spatial_body(rows=64) == "full"
+    # the static model has no second body: always the row kernel (the
+    # pre-crossover executor's hard-wired choice), no crossover
+    static = CM.static_cost_model()
+    for rows in (1, 8, 512):
+        assert static.spatial_body(rows=rows) == "rows"
+    assert static.spatial_crossover_rows() is None
+    # identical coefficient sets never tie (parallel costs); ties go to
+    # the row kernel
+    flat = measured_model({k: {"per_row": 1.0, "overhead": 0.0}
+                           for k in CM.STAGE_COEFF_KEYS})
+    assert flat.spatial_crossover_rows() is None
+    assert flat.spatial_body(rows=1000) == "rows"
+    # inverted orientation (row kernel carries the overhead, full-batch
+    # the steeper slope): the tie point must still be reported, with
+    # the FULL body winning below it — spatial_body is the authority
+    inv = measured_model({
+        "count": {"per_row": 0.1, "overhead": 0.0},
+        "spatial": {"per_row": 1.0, "overhead": 2.0},
+        "spatial_rows": {"per_row": 0.5, "overhead": 10.0},
+        "region": {"per_row": 2.0, "overhead": 5.0},
+        "dilate": {"per_row": 1.0, "overhead": 0.0},
+    })
+    assert inv.spatial_crossover_rows() == pytest.approx(16.0)
+    assert inv.spatial_body(rows=8) == "full"
+    assert inv.spatial_body(rows=32) == "rows"
+
+
+def test_stage_cost_prices_chosen_and_forced_bodies():
+    """A compacted spatial stage is priced at the body that runs: the
+    cheaper one by default (what the executor chooses), or the forced
+    one when a caller pinned ``spatial_body=`` — so ``cost_run`` and the
+    park decision charge for the work actually done."""
+    cm = crossover_model()
+    B = 64
+    # below the crossover: rows body is the price
+    assert cm.stage_cost("spatial", rows=2, batch=B) == pytest.approx(6.0)
+    # above it: the full-batch body's affine price
+    assert cm.stage_cost("spatial", rows=32, batch=B) \
+        == pytest.approx(8.0 + 32.0)
+    # forcing either body prices that body
+    assert cm.stage_cost("spatial", rows=32, batch=B, body="rows") \
+        == pytest.approx(96.0)
+    assert cm.stage_cost("spatial", rows=2, batch=B, body="full") \
+        == pytest.approx(10.0)
+    # uncompacted (rows == batch) stays the full-batch reduction
+    assert cm.stage_cost("spatial", rows=B, batch=B) \
+        == pytest.approx(8.0 + 64.0)
+
+
+def test_derived_min_bucket_formula_and_static_default():
+    """The derived floor is the largest power of two whose worst-case
+    padding cost (at the most expensive compacted per-row coefficient)
+    stays within the measured step overhead; the static model derives
+    the historical hand-set default 8 — the regression pin that makes
+    ``REPRO_CALIBRATION=off`` collapse to PR 4 semantics."""
+    # worst per-row = max(0.1, 3.0, 2.0 + 1.0) = 3.0; step 12 -> floor 4
+    assert crossover_model(step=12.0).derived_min_bucket() == 4
+    assert crossover_model(step=5.9).derived_min_bucket() == 1
+    assert crossover_model(step=1000.0).derived_min_bucket() == 128  # clamp
+    zero = measured_model({k: {"per_row": 0.0, "overhead": 1.0}
+                           for k in CM.STAGE_COEFF_KEYS}, step=3.0)
+    assert zero.derived_min_bucket() == 128             # no per-row signal
+    assert CM.static_cost_model().derived_min_bucket() == 8
+    assert CM.static_cost_model().derived_min_bucket(default=16) == 16
+
+
+def test_min_bucket_precedence_explicit_beats_derived():
+    """Knob precedence (docs/tuning.md): explicit ``min_bucket=`` wins;
+    ``None`` derives from the model; the static model's derivation is
+    the legacy default 8."""
+    plan = QueryPlan([Q.And((Q.Count(Q.Op.GE, 2),
+                             Q.Spatial(0, Q.Rel.LEFT, 1)))])
+    cm = crossover_model()
+    derived = plan.build_staged(SlotStats(), cost_model=cm)
+    assert derived.min_bucket == cm.derived_min_bucket() == 4
+    assert derived.min_bucket_derived
+    explicit = plan.build_staged(SlotStats(), cost_model=cm, min_bucket=16)
+    assert explicit.min_bucket == 16
+    assert not explicit.min_bucket_derived
+    static = plan.build_staged(SlotStats())
+    assert static.min_bucket == 8 and static.min_bucket_derived
+    # the adaptive cascade threads the same precedence through
+    mqc = CS.MultiQueryCascade([Q.Count(Q.Op.GE, 2)], adaptive=True,
+                               cost_model=cm, min_bucket=32)
+    assert mqc._staged.min_bucket == 32
+    mqc2 = CS.MultiQueryCascade([Q.Count(Q.Op.GE, 2)], adaptive=True,
+                                cost_model=cm)
+    assert mqc2._staged.min_bucket == 4
+
+
+def test_report_records_model_chosen_bodies():
+    """On a row-skewed batch the compacted spatial stage must record the
+    body the model chose at its bucket — and with a crossover below the
+    bucket size, that is the full-batch reduction, not the row kernel
+    (the ISSUE 5 acceptance shape)."""
+    rng = np.random.default_rng(11)
+    B = 64
+    busy = Q.Count(Q.Op.GE, 9)
+    queries = [Q.And((busy, Q.Spatial(0, Q.Rel.LEFT, 1))),
+               Q.And((busy, Q.Spatial(1, Q.Rel.ABOVE, 2)))]
+    plan = QueryPlan(queries)
+    out = rand_outputs(rng, B=B)
+    n_busy = int(np.asarray(Q.eval_filters(busy, out)).sum())
+    assert 0 < n_busy < B // 2
+    cm = crossover_model()
+    staged = plan.build_staged(SlotStats(), cost_model=cm)
+    want = np.asarray(plan.evaluate(out))
+    np.testing.assert_array_equal(np.asarray(staged.evaluate(out)), want)
+    rep = staged.last_report
+    assert rep.bodies[0] == "batch"                     # count tier, full B
+    spa = rep.ran.index("spatial")
+    bucket = rep.rows_evaluated[spa]
+    assert bucket < B
+    assert rep.bodies[spa] == cm.spatial_body(rows=bucket)
+    assert rep.bodies[spa] == "full"                    # crossover crossed
+    # cost_run charged the chosen body's price for that stage
+    assert rep.cost_run >= cm.stage_cost("spatial", rows=bucket, batch=B)
+
+
+def test_compile_batches_excluded_from_drift_ledger():
+    """A batch that traced new jitted steps spent its wall time
+    compiling; feeding that to the drift ledger would latch
+    recalibration on a healthy model (and re-latch after every
+    recalibration rebuild).  ``StageReport.steps_compiled`` marks such
+    batches and the cascade skips them."""
+    rng = np.random.default_rng(9)
+    plan = QueryPlan([Q.And((Q.Count(Q.Op.GE, 2),
+                             Q.Spatial(0, Q.Rel.LEFT, 1)))])
+    staged = plan.build_staged(SlotStats())
+    out = rand_outputs(rng, B=16)
+    staged.evaluate(out)
+    assert staged.last_report.steps_compiled > 0        # cold cache
+    staged.evaluate(out)
+    assert staged.last_report.steps_compiled == 0       # warm cache
+
+    tiny = measured_model({k: {"per_row": 1e-7, "overhead": 1e-7}
+                           for k in CM.STAGE_COEFF_KEYS}, step=1e-7)
+    tiny.calibrated_at = time.time()
+    mqc = CS.MultiQueryCascade([Q.Count(Q.Op.GE, 2)], adaptive=True,
+                               restage_every=1, cost_model=tiny)
+    same = rand_outputs(rng, B=16)
+    mqc.masks(same)                                     # compiles: skipped
+    assert mqc.calibration_monitor.weight == 0.0
+    mqc.masks(same)                                     # warm: observed
+    assert mqc.calibration_monitor.weight > 0.0
+
+
+def test_monitor_static_pricing_mismatch_warns_and_is_not_fed():
+    """Pairing a measured-model monitor with a static-pricing cascade
+    would compare abstract units to microseconds: the cascade warns at
+    construction and never feeds the ledger."""
+    model = crossover_model()
+    model.calibrated_at = time.time()
+    mon = CM.CalibrationMonitor(model)
+    with pytest.warns(UserWarning, match="static model"):
+        mqc = CS.MultiQueryCascade([Q.Count(Q.Op.GE, 2)], adaptive=True,
+                                   calibration_monitor=mon)
+    rng = np.random.default_rng(10)
+    out = rand_outputs(rng, B=16)
+    for _ in range(4):
+        mqc.masks(out)
+    assert mon.weight == 0.0                            # never observed
+
+
+def test_calibration_monitor_drift_threshold_and_decay():
+    model = crossover_model()
+    model.calibrated_at = time.time()
+    mon = CM.CalibrationMonitor(model, rel_threshold=0.5, min_weight=1.9,
+                                decay=0.5)
+    assert mon.active and not mon.should_recalibrate()
+    assert mon.drift == 0.0
+    for _ in range(2):
+        mon.observe(100.0, 400.0)                       # 4x under-predict
+    assert mon.drift == pytest.approx(3.0)
+    assert not mon.should_recalibrate()                 # weight 1.5 < 1.9
+    # the error is symmetric: 4x OVER-prediction scores identically (a
+    # one-sided |obs-pred|/pred would cap at 1.0 from this side and
+    # never fire on a model calibrated under co-tenant load)
+    mon2 = CM.CalibrationMonitor(model, rel_threshold=0.5,
+                                 min_weight=1.9, decay=0.5)
+    for _ in range(2):
+        mon2.observe(400.0, 100.0)
+    assert mon2.drift == pytest.approx(3.0)
+    for _ in range(10):
+        mon.observe(100.0, 400.0)
+    assert mon.should_recalibrate()                     # sustained drift
+    # an unreachable evidence bar is rejected up front: the decayed
+    # count converges to 1/(1-decay), so drift could never fire
+    with pytest.raises(ValueError, match="unreachable"):
+        CM.CalibrationMonitor(model, min_weight=4.0, decay=0.5)
+    for _ in range(40):
+        mon.observe(100.0, 101.0)                       # model healthy again
+    assert mon.drift < 0.1                              # old errors decayed
+    assert not mon.should_recalibrate()
+    # garbage observations never poison the ledger
+    w = mon.weight
+    mon.observe(0.0, 50.0)
+    mon.observe(50.0, float("nan"))
+    mon.observe(-3.0, 50.0)
+    assert mon.weight == w
+    mon.reset()
+    assert mon.drift == 0.0 and mon.weight == 0.0
+
+
+def test_calibration_monitor_staleness_and_static():
+    fresh = crossover_model()
+    fresh.calibrated_at = time.time()
+    now = [time.time()]
+    mon = CM.CalibrationMonitor(fresh, clock=lambda: now[0])
+    assert not mon.stale()
+    now[0] += CM.DEFAULT_MAX_AGE_S + 1.0                # 30 days lapse
+    assert mon.stale() and mon.should_recalibrate()     # mid-run staleness
+    # static models have nothing to monitor: no drift, no staleness
+    smon = CM.CalibrationMonitor(CM.static_cost_model())
+    assert not smon.active
+    smon.observe(100.0, 1e9)
+    assert smon.drift == 0.0 and not smon.should_recalibrate()
+    d = smon.describe()
+    assert d["active"] is False and d["should_recalibrate"] is False
+
+
+def test_adaptive_cascade_feeds_monitor_and_latches_due():
+    """A measured-model cascade gets a monitor by default, feeds it one
+    (predicted, observed) pair per staged batch, and latches
+    ``recalibration_due`` at a restage boundary once the model provably
+    mis-prices the machine (absurd microsecond coefficients)."""
+    rng = np.random.default_rng(21)
+    queries = [rand_query(rng, relaxed=True) for _ in range(4)]
+    # predictions ~1000x too cheap -> huge sustained relative error
+    tiny = measured_model({k: {"per_row": 1e-7, "overhead": 1e-7}
+                           for k in CM.STAGE_COEFF_KEYS}, step=1e-7)
+    tiny.calibrated_at = time.time()
+    # restage_every=1: every batch probes staging, so the monitor sees a
+    # (predicted, observed) pair per batch even if the cascade parks
+    mqc = CS.MultiQueryCascade(queries, adaptive=True, restage_every=1,
+                               cost_model=tiny)
+    assert mqc.calibration_monitor is not None          # default-on
+    assert not mqc.recalibration_due
+    for _ in range(25):                # enough decayed weight to clear
+        mqc.masks(rand_outputs(rng, B=16))              # min_weight=8
+    assert mqc.calibration_monitor.weight > 0           # pairs observed
+    assert mqc.recalibration_due                        # latched at boundary
+    # the latch survives transient decay of the signal but clears once
+    # the monitor is reset (= somebody recalibrated): one boundary
+    # later the cascade stops reporting a due recalibration
+    mqc.calibration_monitor.reset()
+    mqc.masks(rand_outputs(rng, B=16))    # one post-reset batch: weight
+    assert not mqc.recalibration_due      # 1 < min_weight, flag cleared
+    # a static-model cascade has nothing to watch
+    static = CS.MultiQueryCascade(queries, adaptive=True)
+    assert static.calibration_monitor is None
+    for _ in range(3):
+        static.masks(rand_outputs(rng, B=16))
+    assert not static.recalibration_due
+
+
+def test_calibration_monitor_requires_adaptive():
+    mon = CM.CalibrationMonitor(crossover_model())
+    with pytest.raises(ValueError, match="adaptive"):
+        CS.MultiQueryCascade([Q.Count(Q.Op.GE, 1)],
+                             calibration_monitor=mon)
+
+
+def test_stream_executor_auto_recalibrates_from_drift():
+    """The opt-in freshness loop end to end with a stubbed re-measure: a
+    drifted shared monitor fires exactly one recalibration, the fresh
+    model is installed (monitor reset, counters bumped), and the engine
+    is rebuilt via the registry epoch."""
+    from repro.core.streaming import (HoppingWindow,
+                                      MultiQueryStreamExecutor)
+    rng = np.random.default_rng(33)
+    model = crossover_model()
+    model.calibrated_at = time.time()
+    # threshold far above anything real traffic's noise can reach, so
+    # exactly the synthetic pre-drift below fires (a reset monitor must
+    # not immediately re-fire on ordinary wall-clock jitter)
+    mon = CM.CalibrationMonitor(model, rel_threshold=1e8, min_weight=2.0)
+    for _ in range(8):
+        mon.observe(1.0, 1e10)                          # pre-drifted
+    assert mon.should_recalibrate()
+
+    fresh = crossover_model()
+    fresh.calibrated_at = time.time()
+    calls = []
+
+    def stub_recalibrate():
+        calls.append(1)
+        return fresh
+
+    reg = QueryRegistry(calibration_monitor=mon)
+    reg.register(Q.Count(Q.Op.GE, 2))
+    built = []
+
+    def factory(queries, slot_stats=None, calibration_monitor=None):
+        built.append(calibration_monitor)
+        mqc = CS.MultiQueryCascade(
+            queries, adaptive=True, slot_stats=slot_stats,
+            cost_model=calibration_monitor.model,
+            calibration_monitor=calibration_monitor)
+        return lambda idx: np.asarray(
+            mqc.masks(rand_outputs(rng, B=len(idx))))
+
+    ex = MultiQueryStreamExecutor(reg, factory,
+                                  HoppingWindow(size=8, advance=8),
+                                  batch=8, auto_recalibrate=True,
+                                  recalibrate_fn=stub_recalibrate)
+    ex.run(40)
+    assert len(calls) == 1                    # fired once, then reset
+    assert ex.recalibrations == 1
+    assert mon.recalibrations == 1
+    assert mon.model is fresh                 # new coefficients installed
+    assert not mon.should_recalibrate()       # ledger restarted; only
+                                              # real traffic feeds it now
+    assert built and built[0] is mon          # factory opt-in by name
+    assert ex.rebuilds >= 2                   # rebuilt on the new model
+
+    # auto mode without a drift signal is a configuration error
+    with pytest.raises(ValueError, match="auto_recalibrate"):
+        MultiQueryStreamExecutor(QueryRegistry(), factory,
+                                 HoppingWindow(size=8, advance=8),
+                                 batch=8, auto_recalibrate=True)
+
+
+def test_auto_recalibrate_handles_none_returning_fn():
+    """A ``recalibrate_fn`` that saves to disk and returns nothing must
+    not leave the old (still-flagged) model installed — that would
+    re-profile at every window forever.  The executor reloads through
+    ``default_cost_model()`` (here: the static fallback, since the test
+    env pins ``REPRO_CALIBRATION=off``) and, if the flag somehow
+    survives, disables auto mode instead of looping."""
+    from repro.core.streaming import (HoppingWindow,
+                                      MultiQueryStreamExecutor)
+    rng = np.random.default_rng(44)
+    model = crossover_model()
+    model.calibrated_at = time.time()
+    mon = CM.CalibrationMonitor(model, rel_threshold=1e8, min_weight=2.0)
+    for _ in range(8):
+        mon.observe(1.0, 1e10)
+    assert mon.should_recalibrate()
+    calls = []
+
+    def stub_none():
+        calls.append(1)
+        return None
+
+    reg = QueryRegistry(calibration_monitor=mon)
+    reg.register(Q.Count(Q.Op.GE, 2))
+
+    def factory(queries, slot_stats=None, calibration_monitor=None):
+        mqc = CS.MultiQueryCascade(queries, adaptive=True,
+                                   slot_stats=slot_stats)
+        return lambda idx: np.asarray(
+            mqc.masks(rand_outputs(rng, B=len(idx))))
+
+    ex = MultiQueryStreamExecutor(reg, factory,
+                                  HoppingWindow(size=8, advance=8),
+                                  batch=8, auto_recalibrate=True,
+                                  recalibrate_fn=stub_none)
+    ex.run(40)
+    assert len(calls) == 1                    # fired once, never looped
+    assert mon.model.source == "static"       # resolver reloaded (env off)
+    assert not mon.should_recalibrate()

@@ -371,6 +371,71 @@ def test_row_compaction_runs_expensive_tiers_on_survivors_only():
     assert stats.stage_row_frac("spatial") < 0.5
 
 
+@pytest.mark.parametrize("seed,spatial_body,min_bucket",
+                         [(0, "rows", 1), (1, "full", 2), (2, "auto", 4),
+                          (3, "full", 1), (4, "auto", 1), (5, "rows", 8),
+                          (6, "auto", 2)])
+def test_staged_identical_across_spatial_bodies(seed, spatial_body,
+                                                min_bucket):
+    """The compacted spatial tier's two evaluation bodies — the
+    row-gather kernel and the full-batch reduction over the gathered
+    subgrid — are bit-identical, so staged ≡ exhaustive must hold under
+    forced "rows", forced "full", AND the cost model's per-bucket
+    "auto" choice, across stage orders, bucket floors, and stat
+    feedback.  The model is given a mid-range crossover so "auto"
+    genuinely mixes both bodies across bucket sizes."""
+    from repro.core import costmodel as CM
+    rng = np.random.default_rng(500 + seed)
+    # guard-And queries guarantee the spatial tier runs compacted on a
+    # minority of rows; random trees cover everything else
+    busy = Q.ClassCount(0, Q.Op.GE, 4)
+    queries = [Q.And((busy, Q.Spatial(0, Q.Rel.LEFT, 1),
+                      Q.Spatial(1, Q.Rel.ABOVE, 2, 1))),
+               Q.And((busy, Q.Region(1, (0, 0, 4, 4), 1, radius=1)))]
+    queries += [rand_query(rng, relaxed=True) for _ in range(4)]
+    plan = QueryPlan(queries)
+    out = rand_outputs(rng, B=24)
+    want = np.asarray(plan.evaluate(out))
+
+    cm = CM.CostModel(
+        source="measured", backend="testbox",
+        coeffs={"count": CM.StageCoeff(per_row=0.1),
+                "spatial": CM.StageCoeff(per_row=1.0, overhead=8.0),
+                "spatial_rows": CM.StageCoeff(per_row=3.0),   # crossover @4
+                "region": CM.StageCoeff(per_row=2.0, overhead=5.0),
+                "dilate": CM.StageCoeff(per_row=1.0)},
+        step_overhead_cost=2.0)
+    stats = rand_stat_state(rng, plan)
+    staged = plan.build_staged(stats, cost_model=cm, min_bucket=min_bucket,
+                               spatial_body=spatial_body)
+    np.testing.assert_array_equal(np.asarray(staged.evaluate(out)), want)
+    staged.flush_stats(stats)
+    staged.restage(stats)
+    np.testing.assert_array_equal(np.asarray(staged.evaluate(out)), want)
+
+    order = list(rng.permutation(len(staged.stages)))
+    forced = plan.build_staged(stats, order=order, cost_model=cm,
+                               min_bucket=min_bucket,
+                               spatial_body=spatial_body)
+    np.testing.assert_array_equal(np.asarray(forced.evaluate(out)), want)
+    # every executed stage reported which body ran it, and a forced
+    # spatial body was honoured on compacted spatial stages
+    for st in (staged, forced):
+        rep = st.last_report
+        assert len(rep.bodies) == len(rep.ran)
+        if spatial_body != "auto":
+            for name, rows, body in zip(rep.ran, rep.rows_evaluated,
+                                        rep.bodies):
+                if name == "spatial" and rows < rep.batch:
+                    assert body == spatial_body
+
+
+def test_spatial_body_rejects_unknown():
+    plan = QueryPlan([Q.Spatial(0, Q.Rel.LEFT, 1)])
+    with pytest.raises(ValueError, match="spatial_body"):
+        plan.build_staged(SlotStats(), spatial_body="fastest")
+
+
 def test_predicted_batch_cost_tracks_stage_row_ledger():
     """The per-stage undecided-rate feedback makes ``predicted_batch_cost``
     fall from the cold full-batch assumption once traffic shows the

@@ -1,0 +1,184 @@
+#!/usr/bin/env python
+"""Documentation consistency checker (``make docs-check``).
+
+Docs rot in three specific ways this repo has been bitten by or wants to
+stay ahead of: a renamed file leaves dangling ``docs/*.md`` links, a
+renamed Makefile target leaves quickstarts recommending commands that no
+longer exist, and prose keeps pointing at modules/tests that moved.  The
+checker walks every Markdown file in ``docs/`` plus the README and
+validates, with zero third-party dependencies:
+
+1. **Intra-doc links** — every relative ``[text](target)`` resolves to a
+   real file (http(s)/mailto links are skipped; ``#anchors`` on local
+   links are checked against the target file's headings, GitHub-slug
+   style).
+2. **Make targets** — every ``make <target>`` mentioned inside a code
+   span or fenced block names a target the Makefile actually defines.
+3. **File paths** — every path-shaped token inside a code span or fenced
+   block (``tools/docs_check.py``, ``core/plan.py``, ...) exists,
+   resolved against the repo root, ``src/repro/`` (module paths are
+   written repo-root-relative OR package-relative in prose), or the
+   document's own directory.  Placeholder paths containing ``<...>``
+   (e.g. ``results/calibration/<backend>.json``) are skipped, as are
+   absolute paths (machine-local examples like ``/tmp/mon.json``).
+
+Wired into ``make test`` as a prerequisite and into the pytest suite
+(tests/test_docs.py), so a PR that breaks a reference fails tier-1.
+
+    python tools/docs_check.py [--root PATH]   # exit 1 + report on rot
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from typing import Dict, List, Set, Tuple
+
+#: files checked, relative to the repo root (docs/*.md is globbed)
+EXTRA_FILES = ("README.md",)
+
+#: extensions a backticked token must carry to be treated as a file path
+PATH_EXTS = (".py", ".md", ".json", ".txt", ".sh", ".yaml", ".yml",
+             ".toml", ".cfg")
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```.*?```", re.S)
+_INLINE_CODE_RE = re.compile(r"`([^`\n]+)`")
+_MAKE_RE = re.compile(r"\bmake\s+([A-Za-z0-9_.-]+)")
+_PATH_TOKEN_RE = re.compile(
+    r"^[A-Za-z0-9_.-]+(?:/[A-Za-z0-9_.-]+)+$")
+_TARGET_RE = re.compile(r"^([A-Za-z0-9_.-]+)\s*:([^=]|$)")
+_HEADING_RE = re.compile(r"^#+\s+(.*)$", re.M)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-style anchor slug (close enough for our headings)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\s-]", "", s)
+    return re.sub(r"[\s]+", "-", s).strip("-")
+
+
+def _make_targets(root: str) -> Set[str]:
+    targets: Set[str] = set()
+    path = os.path.join(root, "Makefile")
+    if not os.path.exists(path):
+        return targets
+    with open(path) as f:
+        for line in f:
+            if line.startswith(("\t", " ", "#", ".")):
+                if not line.startswith(".PHONY"):
+                    continue
+            m = _TARGET_RE.match(line)
+            if m:
+                targets.add(m.group(1))
+            if line.startswith(".PHONY:"):
+                targets.update(line.split(":", 1)[1].split())
+    return targets
+
+
+def _code_spans(text: str) -> List[str]:
+    """Fenced blocks + inline code spans — where commands/paths live.
+    (Prose mentions are deliberately not checked: 'make targets' is
+    English, not a build rule.)"""
+    spans = _FENCE_RE.findall(text)
+    prose = _FENCE_RE.sub(" ", text)
+    spans.extend(_INLINE_CODE_RE.findall(prose))
+    return spans
+
+
+def _resolve_path(token: str, root: str, doc_dir: str) -> bool:
+    candidates = (os.path.join(root, token),
+                  os.path.join(root, "src", "repro", token),
+                  os.path.join(doc_dir, token))
+    return any(os.path.exists(c) for c in candidates)
+
+
+def _check_file(md_path: str, root: str, targets: Set[str],
+                headings_cache: Dict[str, Set[str]]) -> List[str]:
+    errors: List[str] = []
+    rel = os.path.relpath(md_path, root)
+    with open(md_path) as f:
+        text = f.read()
+    doc_dir = os.path.dirname(md_path)
+
+    def headings_of(path: str) -> Set[str]:
+        if path not in headings_cache:
+            with open(path) as hf:
+                headings_cache[path] = {
+                    _slugify(h) for h in _HEADING_RE.findall(hf.read())}
+        return headings_cache[path]
+
+    # 1. links
+    for target in _LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = md_path if not path_part \
+            else os.path.normpath(os.path.join(doc_dir, path_part))
+        if path_part and not os.path.exists(dest):
+            errors.append(f"{rel}: broken link -> {target}")
+            continue
+        if anchor and os.path.isfile(dest) and dest.endswith(".md") \
+                and anchor not in headings_of(dest):
+            errors.append(f"{rel}: link anchor #{anchor} not a heading "
+                          f"of {os.path.relpath(dest, root)}")
+
+    # 2 + 3. commands and paths inside code spans
+    for span in _code_spans(text):
+        for m in _MAKE_RE.finditer(span):
+            if m.group(1) not in targets:
+                errors.append(f"{rel}: `make {m.group(1)}` is not a "
+                              f"Makefile target")
+        for token in re.split(r"[\s,;()'\"]+", span):
+            token = token.strip().rstrip(".:")
+            token = re.sub(r":\d+$", "", token)      # path.py:123 refs
+            if not token or token.startswith(("/", "-")) or "<" in token:
+                continue                 # absolute / flag / placeholder
+            if not token.endswith(PATH_EXTS):
+                continue
+            if not _PATH_TOKEN_RE.match(token):
+                continue
+            if not _resolve_path(token, root, doc_dir):
+                errors.append(f"{rel}: referenced path does not exist: "
+                              f"{token}")
+    return errors
+
+
+def collect_errors(root: str) -> List[str]:
+    """All doc-consistency violations under ``root`` (empty == healthy)."""
+    targets = _make_targets(root)
+    headings_cache: Dict[str, Set[str]] = {}
+    files: List[str] = []
+    docs_dir = os.path.join(root, "docs")
+    if os.path.isdir(docs_dir):
+        files.extend(os.path.join(docs_dir, n)
+                     for n in sorted(os.listdir(docs_dir))
+                     if n.endswith(".md"))
+    files.extend(os.path.join(root, n) for n in EXTRA_FILES
+                 if os.path.exists(os.path.join(root, n)))
+    errors: List[str] = []
+    for path in files:
+        errors.extend(_check_file(path, root, targets, headings_cache))
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))),
+        help="repo root (default: parent of tools/)")
+    args = ap.parse_args(argv)
+    errors = collect_errors(args.root)
+    if errors:
+        print(f"docs-check: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("docs-check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
