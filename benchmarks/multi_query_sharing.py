@@ -373,8 +373,110 @@ def run_adaptive(smoke: bool = False) -> dict:
     return res
 
 
+def run_temporal(smoke: bool = False) -> dict:
+    """Temporal tier: window-outcome short-circuiting on a synthetic
+    stream (``multi_query_temporal`` in the JSON; schema notes in
+    docs/architecture.md §temporal).
+
+    All-temporal workload whose queries decide their hopping-window
+    outcome early — latching operators latch, an unreachable Duration
+    dies — so the ``TemporalEngine`` suppresses decided signals
+    (``signal_evals_skipped``), then skips whole batches once every
+    query is decided (``frames_skipped``: no filter head, no plan, no
+    oracle for those frames).  The baseline is the SAME engine with
+    decidedness disabled (``_update_decidedness`` stubbed out): answers
+    are bit-identical — the automata still latch — but nothing is ever
+    skipped, so the delta is pure short-circuit win."""
+    from repro.core.streaming import HoppingWindow
+    from repro.core.temporal import TemporalEngine
+    from repro.data.synthetic import PRESETS, VideoStream, collect
+
+    n_frames = 512 if smoke else 2048
+    cfg = PRESETS["detrac-like"]
+    data = collect(VideoStream(cfg), n_frames)
+    counts = jnp.asarray(data["counts"].astype(np.float32))
+    grid = jnp.asarray(data["occupancy"].astype(np.float32))
+    objects = data["objects"]
+
+    def filter_fn(idx):
+        idx = jnp.asarray(np.asarray(idx))
+        return FilterOutputs(counts=counts[idx], grid=grid[idx])
+
+    def oracle_fn(idx, sel):
+        idx = np.asarray(idx)
+        return [objects[int(idx[s])] for s in np.asarray(sel)]
+
+    c0 = Q.ClassCount(0, Q.Op.GE, 1)
+    c1 = Q.ClassCount(1, Q.Op.GE, 1)
+    queries = [
+        Q.Duration(c0, 4),                      # latches within frames
+        Q.Duration(Q.ClassCount(2, Q.Op.GE, 6), 60),  # dies on 1st miss
+        Q.SlidingCount(Q.Count(Q.Op.GE, 1), 8, Q.Op.GE, 1),
+        Q.Sequence(c0, c1, 6),
+        Q.And((Q.Duration(c0, 2), Q.SlidingCount(c1, 4, Q.Op.GE, 1))),
+        # decides mid-window (a 40-run of a busy class-2 scene is needed;
+        # a short run at the 32-frame boundary makes the remainder
+        # infeasible): keeps early batches in the partial regime, where
+        # the five queries above are decided and their signals
+        # suppressed (signal_evals_skipped), before this one resolves
+        # and the whole-batch skips kick in
+        Q.Duration(Q.ClassCount(2, Q.Op.GE, 2), 40),
+    ]
+    window = HoppingWindow(size=64, advance=64)
+    batch = 16
+
+    def drive(engine):
+        t0 = time.perf_counter()
+        hits = np.zeros(len(queries), np.int64)
+        for lo, hi in window.windows(n_frames):
+            engine.on_window_start(lo, hi)
+            for b0 in range(lo, hi, batch):
+                out = engine(np.arange(b0, min(b0 + batch, hi)))
+                hits += np.asarray(out).sum(0)
+        return hits, (time.perf_counter() - t0) * 1e6 / n_frames
+
+    def build():
+        return TemporalEngine(queries, filter_fn, oracle_fn,
+                              cfg.n_classes, cfg.grid)
+
+    drive(build())                               # warm jit caches
+    engine = build()
+    hits, us_frame = drive(engine)
+    base = build()
+    base.program._update_decidedness = lambda: None   # short-circuit off
+    base.program.start_window(0)                 # re-derive cold state
+    hits_base, us_frame_base = drive(base)
+    assert (hits == hits_base).all(), "short-circuit changed answers"
+    st = engine.stats
+    res = {
+        "n_frames": n_frames, "windows": st.windows,
+        "window_size": window.size, "batch": batch,
+        "n_queries": len(queries),
+        "frames_skipped_temporal": st.frames_skipped,
+        "signal_evals_skipped": st.signal_evals_skipped,
+        "oracle_frames": st.oracle_frames,
+        "oracle_frames_baseline": base.stats.oracle_frames,
+        "cost_saved_model": st.cost_saved_model,
+        "us_per_frame": us_frame,
+        "us_per_frame_no_shortcircuit": us_frame_base,
+        "shortcircuit_speedup": us_frame_base / us_frame,
+        "hits": [int(h) for h in hits],
+    }
+    emit("multi_query_temporal/detrac", us_frame,
+         f"skipped={st.frames_skipped}/{n_frames};"
+         f"sig_evals_skipped={st.signal_evals_skipped};"
+         f"speedup={res['shortcircuit_speedup']:.2f}x")
+    print(f"temporal: {st.frames_skipped}/{n_frames} frames skipped, "
+          f"{st.signal_evals_skipped} signal evals suppressed, "
+          f"{us_frame:.0f} us/frame vs {us_frame_base:.0f} baseline "
+          f"({res['shortcircuit_speedup']:.2f}x)")
+    save_result("multi_query_temporal", res)
+    return res
+
+
 def run() -> dict:
-    res = {"sharing": run_sharing(), "adaptive": run_adaptive()}
+    res = {"sharing": run_sharing(), "adaptive": run_adaptive(),
+           "temporal": run_temporal()}
     return res
 
 
@@ -386,6 +488,7 @@ def main():
     args = ap.parse_args()
     if args.smoke:
         run_adaptive(smoke=True)
+        run_temporal(smoke=True)
     else:
         run()
 

@@ -453,7 +453,8 @@ class MultiQueryCascade:
         self.mode = "staged" if adaptive else "exhaustive"
         self.restages = 0
 
-    def _run_staged(self, out: FilterOutputs) -> jax.Array:
+    def _run_staged(self, out: FilterOutputs,
+                    presumed_decided=None) -> jax.Array:
         monitor = self.calibration_monitor
         # both models must be microsecond-scale for drift to mean
         # anything (see the __init__ warning); the extra
@@ -464,10 +465,13 @@ class MultiQueryCascade:
                  and self.cost_model.source == "measured")
         if watch:
             t0 = time.perf_counter()
-            m = jax.block_until_ready(self._staged.evaluate(out))
+            m = jax.block_until_ready(
+                self._staged.evaluate(out,
+                                      presumed_decided=presumed_decided))
             wall_us = (time.perf_counter() - t0) * 1e6
         else:
-            m = self._staged.evaluate(out)
+            m = self._staged.evaluate(out,
+                                      presumed_decided=presumed_decided)
             wall_us = None
         self._staged.flush_stats(self.slot_stats)
         rep = self._staged.last_report
@@ -486,8 +490,18 @@ class MultiQueryCascade:
         self.slot_stats.observe_many(self.plan.slot_keys, np.asarray(counts),
                                      B, canonical=True)
 
-    def masks(self, out: FilterOutputs) -> jax.Array:
-        """(B, N) per-query candidate masks."""
+    def masks(self, out: FilterOutputs,
+              presumed_decided=None) -> jax.Array:
+        """(B, N) per-query candidate masks.
+
+        ``presumed_decided`` — optional (N,) bool mask of query columns
+        already decided out-of-band for this whole batch (the temporal
+        tier's window short-circuit; see
+        ``StagedQueryPlan.evaluate``).  Only the staged path exploits it
+        (stage skipping / row compaction); the exhaustive path evaluates
+        everything regardless — presumption is a work-skipping hint,
+        never a semantic input, so both paths stay safe.  Presumed
+        columns' mask values are unspecified; the caller owns them."""
         if self._staged is None:
             return self._jitted(out)
         self._batches += 1
@@ -499,7 +513,7 @@ class MultiQueryCascade:
         # alone, so a parked mode must not crash them
         exhaustive_infeasible = self.plan._needs_grid and out.grid is None
         if self.mode == "staged" or boundary or exhaustive_infeasible:
-            m = self._run_staged(out)            # boundary probes staging
+            m = self._run_staged(out, presumed_decided)  # boundary probes
         else:
             m, counts = self._jitted_counts(out)
             self._flush_exhaustive_counts(counts, m.shape[0])

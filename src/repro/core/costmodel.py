@@ -403,8 +403,17 @@ def calibration_path(backend: Optional[str] = None,
     return os.path.join(directory, f"{backend}.json")
 
 
-def save_calibration(model: CostModel, path: Optional[str] = None) -> str:
-    """Serialize a measured model (atomic write: tmp + rename)."""
+def save_calibration(model: CostModel, path: Optional[str] = None, *,
+                     monitor: Optional["CalibrationMonitor"] = None) -> str:
+    """Serialize a measured model (atomic write: tmp + rename).
+
+    With ``monitor`` given, its drift-ledger state rides along under a
+    ``"monitor"`` key so a restarted process resumes the drift evidence
+    instead of forgetting it (``CalibrationMonitor.restore`` /
+    ``load_monitor_state``).  The block is advisory: ``load_calibration``
+    ignores it (same schema version — unknown keys were always allowed),
+    and a corrupt or foreign block cold-starts the monitor exactly like
+    ``SlotStats.load`` cold-starts the slot ledger."""
     if model.source != "measured":
         raise ValueError("only measured CostModels are saved; the static "
                          "fallback is code, not data")
@@ -419,6 +428,8 @@ def save_calibration(model: CostModel, path: Optional[str] = None) -> str:
                    for k, c in model.coeffs.items()},
         "samples": model.samples,
     }
+    if monitor is not None and monitor.active:
+        payload["monitor"] = monitor.state_dict()
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
@@ -482,6 +493,26 @@ def load_calibration(path: Optional[str] = None, *,
                      fingerprint=payload["fingerprint"],
                      calibrated_at=calibrated_at,
                      samples=payload.get("samples") or {})
+
+
+def load_monitor_state(path: Optional[str] = None) -> Optional[Dict]:
+    """The raw ``"monitor"`` block of a calibration file, or None.
+
+    Missing file, unreadable JSON, or an absent/non-dict block all
+    return None (never raises) — the caller passes the result straight
+    to ``CalibrationMonitor.restore``, which treats None as a cold
+    start.  No validation happens here; ``restore`` owns the distrust
+    rules so they live next to the state they protect."""
+    path = path or calibration_path()
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not isinstance(payload, dict):
+        return None
+    block = payload.get("monitor")
+    return block if isinstance(block, dict) else None
 
 
 _DISABLE_VALUES = ("off", "0", "none", "disable", "disabled", "false")
@@ -818,6 +849,58 @@ class CalibrationMonitor:
             return True
         return self._weight >= self.min_weight \
             and self.drift > self.rel_threshold
+
+    def state_dict(self) -> Dict:
+        """JSON-serializable drift-ledger state for persistence inside
+        the calibration file (``save_calibration(monitor=...)``).  The
+        model's ``calibrated_at`` rides along as the evidence's identity:
+        drift observed against one set of coefficients says nothing
+        about another, so ``restore`` refuses a block whose timestamp
+        does not match the model it is restored onto."""
+        return {"err_acc": self._err_acc, "weight": self._weight,
+                "generation": self.generation,
+                "recalibrations": self.recalibrations,
+                "calibrated_at": self.model.calibrated_at}
+
+    @classmethod
+    def restore(cls, model: CostModel, state: Optional[Dict],
+                **kwargs) -> "CalibrationMonitor":
+        """Monitor warm-started from a persisted ``state_dict`` block.
+
+        The same distrust discipline as ``SlotStats.load`` and
+        ``load_calibration``: any problem — None/absent block, wrong
+        types, non-finite or negative accumulators, a decayed weight
+        exceeding what the configured ``decay`` can produce, or evidence
+        recorded against a different calibration (``calibrated_at``
+        mismatch) — yields a clean cold-start monitor and never raises.
+        Restoring stale-but-valid drift evidence is safe (worst case: an
+        early recalibration); restoring foreign or corrupt evidence is
+        not, so everything suspect is dropped wholesale."""
+        mon = cls(model, **kwargs)
+        if not isinstance(state, dict):
+            return mon
+        try:
+            err = float(state["err_acc"])
+            weight = float(state["weight"])
+            generation = int(state["generation"])
+            recalibrations = int(state["recalibrations"])
+            calibrated_at = float(state["calibrated_at"])
+        except (KeyError, TypeError, ValueError):
+            return mon
+        if not (np.isfinite(err) and np.isfinite(weight)) \
+                or err < 0 or weight < 0 \
+                or generation < 0 or recalibrations < 0:
+            return mon
+        if mon.decay < 1.0 and weight >= 1.0 / (1.0 - mon.decay):
+            return mon               # impossible under this decay
+        if model.calibrated_at is None \
+                or calibrated_at != float(model.calibrated_at):
+            return mon               # evidence about other coefficients
+        mon._err_acc = err
+        mon._weight = weight
+        mon.generation = generation
+        mon.recalibrations = recalibrations
+        return mon
 
     def describe(self) -> Dict:
         """Operator/provenance view (recorded next to bench results)."""

@@ -195,6 +195,13 @@ class QueryPlan:
         if not queries:
             raise ValueError("QueryPlan needs at least one query")
         self.queries = tuple(queries)
+        for q in self.queries:
+            if Q.has_temporal(q):
+                raise TypeError(
+                    f"QueryPlan evaluates frame-level predicates only; "
+                    f"temporal operators must be compiled by "
+                    f"repro.core.temporal (TemporalProgram strips them "
+                    f"and plans their frame-level sub-predicates): {q!r}")
         self.tau = tau
 
         # ---- pass 1: canonical leaf slots (dedup across all queries) ----
@@ -584,6 +591,15 @@ class StageReport:
     cost_total: float = 0.0     # cost-model cost of the EXHAUSTIVE plan
                                 # (shared threshold, incremental dilation —
                                 # less than the sum of staged stage costs)
+    skipped_presumed: List[str] = dataclasses.field(default_factory=list)
+    # subset of ``skipped`` that only became skippable because the caller
+    # presumed some query columns decided (the temporal tier's
+    # window-outcome short-circuit) — the stage still has slots in a
+    # presumed column and in no other undecided column
+    cost_presumed_saved: float = 0.0
+    # cost-model price of those stages at the full batch (a modelled
+    # upper bound on the work the temporal short-circuit avoided: the
+    # counterfactual row traffic of a never-evaluated column is unknown)
 
     @property
     def stages_run(self) -> int:
@@ -899,15 +915,21 @@ class StagedQueryPlan:
         if bucket is None:
             # full-batch step: every row is (re)evaluated and the bounds
             # derive from leaf_vals alone, so no prior value/decided
-            # state is threaded in
-            def step_fn(out, leaf_vals):
+            # state is threaded in.  ``presumed`` is a traced (N,) bool
+            # mask of query columns the caller already decided (temporal
+            # window short-circuit): it joins the undecided reductions
+            # only — the raw decided state stays propagation-derived —
+            # so presumption changing between batches never re-traces.
+            def step_fn(out, leaf_vals, presumed):
                 vals = stage_body(out)                     # (B, k) bool
                 leaf_vals = leaf_vals.at[:, slots].set(vals)
                 value, decided = plan.propagate_bounds(leaf_vals, known)
-                undec = jnp.concatenate([~decided.all(0), ~decided.all(1)])
+                dec = decided | presumed[None, :]
+                undec = jnp.concatenate([~dec.all(0), ~dec.all(1)])
                 return leaf_vals, value, decided, undec, vals.sum(0)
         else:
-            def step_fn(out, leaf_vals, value, decided, idx, n_real):
+            def step_fn(out, leaf_vals, value, decided, idx, n_real,
+                        presumed):
                 vals = (stage_body(out, rows=idx, body=body) if spatial
                         else stage_body(out, rows=idx))    # (R, k) bool
                 sub = leaf_vals[idx].at[:, slots].set(vals)
@@ -915,7 +937,8 @@ class StagedQueryPlan:
                 v, dec = plan.propagate_bounds(sub, known)
                 value = value.at[idx].set(v)
                 decided = decided.at[idx].set(dec)
-                undec = jnp.concatenate([~decided.all(0), ~decided.all(1)])
+                dec_eff = decided | presumed[None, :]
+                undec = jnp.concatenate([~dec_eff.all(0), ~dec_eff.all(1)])
                 # padded duplicate rows must not inflate the pass counts
                 valid = jnp.arange(vals.shape[0]) < n_real
                 return (leaf_vals, value, decided, undec,
@@ -930,20 +953,58 @@ class StagedQueryPlan:
 
     # -- execution --------------------------------------------------------
 
-    def evaluate(self, out: FilterOutputs) -> jax.Array:
+    def evaluate(self, out: FilterOutputs,
+                 presumed_decided: Optional[np.ndarray] = None) -> jax.Array:
         """(B, N) bool masks, bit-identical to ``QueryPlan.evaluate`` —
         but stages stop/skip as soon as the undecided set allows, and
         each stage evaluates only the rows still undecided (compacted
         into a power-of-two bucket) once the first tiers have decided
-        part of the batch."""
+        part of the batch.
+
+        ``presumed_decided`` — optional (N,) bool mask of query columns
+        the caller has already decided out-of-band (the temporal tier
+        marks a query whose *window* outcome is latched; see
+        repro.core.temporal).  Presumed columns stop contributing to the
+        stage-skip test, the early stop, and the undecided-row
+        compaction, exactly as if the plan had decided them — but their
+        returned mask values are UNSPECIFIED (the caller owns their
+        answers) and they feed no ledger.  Stages skipped only thanks to
+        the presumption are reported in ``StageReport.skipped_presumed``
+        and priced into ``cost_presumed_saved``."""
         plan = self.plan
         B = out.counts.shape[0]
         self._last_batch = B
         N = len(plan.queries)
+        if presumed_decided is None:
+            presumed = np.zeros(N, bool)
+        else:
+            presumed = np.asarray(presumed_decided, bool)
+            if presumed.shape != (N,):
+                raise ValueError(f"presumed_decided must be shape ({N},), "
+                                 f"got {presumed.shape}")
+        if presumed.all():
+            # nothing left to evaluate: every stage is a presumed skip
+            report = StageReport(
+                order=[self.stages[s].name for s in self.order],
+                cost_total=plan.exhaustive_cost_model(self.cost_model,
+                                                      batch=B),
+                batch=B)
+            stage_rows = []
+            for si in self.order:
+                st = self.stages[si]
+                report.skipped.append(st.name)
+                report.skipped_presumed.append(st.name)
+                report.cost_presumed_saved += self.cost_model.stage_cost(
+                    st.kind, rows=B, batch=B, radius=st.radius)
+                stage_rows.append((st.name, 0, B, None, None))
+            self.last_report = report
+            self._pending = ([], stage_rows)
+            return jnp.zeros((B, N), bool)
+        presumed_dev = jnp.asarray(presumed)
         leaf_vals = jnp.zeros((B, plan.n_unique_leaves), bool)
         value = jnp.zeros((B, N), bool)
         decided = jnp.zeros((B, N), bool)
-        undecided_cols = np.ones(N, bool)
+        undecided_cols = ~presumed
         undecided_rows = np.ones(B, bool)
         report = StageReport(order=[self.stages[s].name for s in self.order],
                              cost_total=plan.exhaustive_cost_model(
@@ -958,6 +1019,13 @@ class StagedQueryPlan:
             st = self.stages[si]
             if not (self._uses_stage[:, si] & undecided_cols).any():
                 report.skipped.append(st.name)
+                if (self._uses_stage[:, si] & presumed).any():
+                    # would have run for a presumed column's sake alone
+                    report.skipped_presumed.append(st.name)
+                    report.cost_presumed_saved += \
+                        self.cost_model.stage_cost(st.kind, rows=B,
+                                                   batch=B,
+                                                   radius=st.radius)
                 stage_rows.append((st.name, 0, B, None, None))
                 continue
             if st.kind != "count" and out.grid is None:
@@ -975,14 +1043,14 @@ class StagedQueryPlan:
                 body = self._body_for(si, None)
                 step = self._get_step(si, ran, None, body)
                 leaf_vals, value, decided, undec, counts = step(
-                    out, leaf_vals)
+                    out, leaf_vals, presumed_dev)
                 rows_eval, seen = B, B
             else:
                 body = self._body_for(si, idx.size)
                 step = self._get_step(si, ran, idx.size, body)
                 leaf_vals, value, decided, undec, counts = step(
                     out, leaf_vals, value, decided, jnp.asarray(idx),
-                    jnp.asarray(n_rows, jnp.int32))
+                    jnp.asarray(n_rows, jnp.int32), presumed_dev)
                 rows_eval, seen = idx.size, n_rows
             if seen == B:
                 # only full-batch evaluations feed the per-slot ledger: a

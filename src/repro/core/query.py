@@ -8,6 +8,23 @@ Queries combine (paper §I, §II):
                     e.g. "bicycle not in bike lane"
 - ``And / Or / Not`` connectives.
 
+Temporal/event-pattern operators (VidCEP's sequence/duration patterns and
+the temporal-queries line of work — see docs/paper_mapping.md) lift those
+frame-level predicates to events over a hopping window:
+
+- ``Duration``     — the predicate holds for >= k *consecutive* frames
+- ``Sequence``     — ``first`` holds, then ``then`` holds within m frames
+- ``SlidingCount`` — the count of predicate-true frames over a sliding
+                     sub-window satisfies a comparison.
+
+They are declared here (they are part of the query language) but never
+evaluated by this module's two frame-level evaluators: a temporal query
+is compiled by ``repro.core.temporal`` into a streaming automaton whose
+input alphabet is the per-frame verdicts of its frame-level
+sub-predicates.  ``And/Or/Not`` may combine temporal operators with
+frame-level predicates; temporal operators may not nest inside each
+other (validated at construction).
+
 Two evaluation modes:
 - ``eval_filters``  — vectorised approximate evaluation on the branch-head
   ``FilterOutputs`` of a frame batch (counts with +-tolerance, occupancy
@@ -15,6 +32,10 @@ Two evaluation modes:
 - ``eval_objects``  — exact evaluation on oracle object lists
   (class id + grid cell per object), the semantics the oracle (full
   detection) provides.  Used as ground truth for accuracy/f1 benchmarks.
+  Exact evaluation is *tolerance-free by definition*: the CF-k/CCF-k
+  ``tolerance`` relaxation widens only the approximate filter (a recall
+  knob against count noise); the oracle answers the paper's strict
+  predicate.  See ``_eval_table`` for the pinned asymmetry.
 """
 from __future__ import annotations
 
@@ -45,17 +66,23 @@ class Op(str, enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class Count:
+    """Total objects in frame vs ``value``.  ``tolerance`` (CF-k) widens
+    the *approximate filter only* — exact evaluation ignores it (see
+    ``_eval_table``)."""
     op: Op
     value: int
-    tolerance: int = 0          # CF-k relaxation
+    tolerance: int = 0          # CF-k relaxation (filter-side only)
 
 
 @dataclasses.dataclass(frozen=True)
 class ClassCount:
+    """Objects of class ``cls`` vs ``value``.  ``tolerance`` (CCF-k)
+    widens the *approximate filter only* — exact evaluation ignores it
+    (see ``_eval_table``)."""
     cls: int
     op: Op
     value: int
-    tolerance: int = 0          # CCF-k relaxation
+    tolerance: int = 0          # CCF-k relaxation (filter-side only)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,7 +116,95 @@ class Not:
     term: Any
 
 
-Predicate = Union[Count, ClassCount, Spatial, Region, And, Or, Not]
+# --------------------------------------------------------------------------
+# Temporal / event-pattern operators (compiled by repro.core.temporal)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Duration:
+    """Event: ``pred`` holds for >= ``min_frames`` *consecutive* frames
+    of the current hopping window ("car left of truck for >= 5 s").
+
+    The per-frame output is latched: False until the frame that completes
+    the first qualifying run, True from that frame to the window end.
+    ``pred`` must be frame-level (no nested temporal operators)."""
+    pred: Any
+    min_frames: int
+
+    def __post_init__(self):
+        if self.min_frames < 1:
+            raise ValueError(f"min_frames must be >= 1, "
+                             f"got {self.min_frames}")
+        _check_frame_level(self.pred, "Duration.pred")
+
+
+@dataclasses.dataclass(frozen=True)
+class Sequence:
+    """Event: ``first`` holds at some frame s, and ``then`` holds at a
+    frame strictly after it but within ``within`` frames
+    (s < t <= s + within) — VidCEP's SEQ pattern on two frame predicates.
+
+    Latched per-frame output, like ``Duration``.  A frame where both
+    ``first`` and ``then`` hold does NOT complete the pattern by itself
+    (``then`` must be strictly later)."""
+    first: Any
+    then: Any
+    within: int
+
+    def __post_init__(self):
+        if self.within < 1:
+            raise ValueError(f"within must be >= 1, got {self.within}")
+        _check_frame_level(self.first, "Sequence.first")
+        _check_frame_level(self.then, "Sequence.then")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlidingCount:
+    """Event: some *complete* sliding sub-window of ``window`` consecutive
+    frames (inside the current hopping window) has a ``pred``-true frame
+    count satisfying ``op value`` ("a pedestrian in >= 8 of any 10
+    consecutive frames").
+
+    Latched per-frame output: False until the frame that completes the
+    first qualifying sub-window, True afterwards.  Sub-windows are exact
+    (no tolerance field — the count is over boolean frame verdicts, not
+    noisy detector counts)."""
+    pred: Any
+    window: int
+    op: Op
+    value: int
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if self.value < 0:
+            raise ValueError(f"value must be >= 0, got {self.value}")
+        _check_frame_level(self.pred, "SlidingCount.pred")
+
+
+TEMPORAL_TYPES = (Duration, Sequence, SlidingCount)
+
+Predicate = Union[Count, ClassCount, Spatial, Region, And, Or, Not,
+                  Duration, Sequence, SlidingCount]
+
+
+def has_temporal(q: Predicate) -> bool:
+    """Does the tree contain any temporal operator?  (Such queries must
+    go through ``repro.core.temporal``; the frame-level evaluators and
+    ``repro.core.plan.QueryPlan`` reject them.)"""
+    if isinstance(q, TEMPORAL_TYPES):
+        return True
+    if isinstance(q, (And, Or)):
+        return any(has_temporal(t) for t in q.terms)
+    if isinstance(q, Not):
+        return has_temporal(q.term)
+    return False
+
+
+def _check_frame_level(q: Predicate, where: str) -> None:
+    if has_temporal(q):
+        raise TypeError(f"{where} must be a frame-level predicate; "
+                        f"temporal operators cannot nest: {q!r}")
 
 
 def leaves(q: Predicate) -> List[Predicate]:
@@ -100,6 +215,12 @@ def leaves(q: Predicate) -> List[Predicate]:
         return out
     if isinstance(q, Not):
         return leaves(q.term)
+    if isinstance(q, Duration):
+        return leaves(q.pred)
+    if isinstance(q, Sequence):
+        return leaves(q.first) + leaves(q.then)
+    if isinstance(q, SlidingCount):
+        return leaves(q.pred)
     return [q]
 
 
@@ -143,6 +264,13 @@ def canonicalize(q: Predicate) -> Predicate:
         return And(terms) if isinstance(q, And) else Or(terms)
     if isinstance(q, Not):
         return Not(canonicalize(q.term))
+    if isinstance(q, Duration):
+        return Duration(canonicalize(q.pred), q.min_frames)
+    if isinstance(q, Sequence):
+        return Sequence(canonicalize(q.first), canonicalize(q.then),
+                        q.within)
+    if isinstance(q, SlidingCount):
+        return SlidingCount(canonicalize(q.pred), q.window, q.op, q.value)
     return canonicalize_leaf(q)
 
 
@@ -294,6 +422,17 @@ def eval_objects(q: Predicate, objs, n_classes: int, grid: int) -> bool:
 
 def _eval_table(q: Predicate, t: ObjectTable, n_classes: int,
                 grid: int) -> bool:
+    """Exact semantics, *pinned tolerance-free* for Count/ClassCount.
+
+    The CF-k/CCF-k ``tolerance`` is a recall relaxation of the
+    approximate filter only: it absorbs the branch head's count noise so
+    true-positive frames are not filtered out before the oracle sees
+    them.  The oracle itself answers the strict predicate — widening it
+    by +-tolerance would change the *query semantics* with the filter
+    knob, and the accuracy benchmarks (filter vs exact) would be
+    comparing a query against a different query.  The asymmetry is
+    intentional and regression-pinned (tests/test_query_properties.py);
+    docs/paper_mapping.md has the paper-side rationale."""
     if isinstance(q, And):
         return all(_eval_table(x, t, n_classes, grid) for x in q.terms)
     if isinstance(q, Or):
@@ -301,6 +440,7 @@ def _eval_table(q: Predicate, t: ObjectTable, n_classes: int,
     if isinstance(q, Not):
         return not _eval_table(q.term, t, n_classes, grid)
     if isinstance(q, Count):
+        # tolerance deliberately NOT passed (exact = strict; see above)
         return bool(_cmp(np.int64(len(t)), q.op, q.value, 0))
     if isinstance(q, ClassCount):
         return bool(_cmp(np.int64(len(t.of_class(q.cls))), q.op, q.value, 0))

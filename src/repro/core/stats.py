@@ -103,6 +103,19 @@ def _encode_pred(p) -> Dict:
         return {"t": "or", "terms": [_encode_pred(x) for x in p.terms]}
     if isinstance(p, Q.Not):
         return {"t": "not", "term": _encode_pred(p.term)}
+    # temporal operators never become plan slots (the temporal tier
+    # strips them to frame signals first), but whole-tree keys can pass
+    # through generic persistence paths — the codec must round-trip
+    # every Predicate, not just the frame-level subset
+    if isinstance(p, Q.Duration):
+        return {"t": "duration", "pred": _encode_pred(p.pred),
+                "min": p.min_frames}
+    if isinstance(p, Q.Sequence):
+        return {"t": "sequence", "first": _encode_pred(p.first),
+                "then": _encode_pred(p.then), "within": p.within}
+    if isinstance(p, Q.SlidingCount):
+        return {"t": "slidingcount", "pred": _encode_pred(p.pred),
+                "w": p.window, "op": p.op.value, "v": p.value}
     raise TypeError(f"not a predicate: {p!r}")
 
 
@@ -125,6 +138,14 @@ def _decode_pred(d: Dict):
         return Q.Or(tuple(_decode_pred(x) for x in d["terms"]))
     if t == "not":
         return Q.Not(_decode_pred(d["term"]))
+    if t == "duration":
+        return Q.Duration(_decode_pred(d["pred"]), int(d["min"]))
+    if t == "sequence":
+        return Q.Sequence(_decode_pred(d["first"]),
+                          _decode_pred(d["then"]), int(d["within"]))
+    if t == "slidingcount":
+        return Q.SlidingCount(_decode_pred(d["pred"]), int(d["w"]),
+                              Q.Op(d["op"]), int(d["v"]))
     raise ValueError(f"unknown predicate tag {t!r}")
 
 

@@ -28,15 +28,30 @@ from repro.core.stats import SlotStats
 
 @dataclasses.dataclass(frozen=True)
 class HoppingWindow:
-    """WINDOW HOPPING (SIZE size, ADVANCE BY advance) over frame ids."""
+    """WINDOW HOPPING (SIZE size, ADVANCE BY advance) over frame ids.
+
+    ``emit_partial`` controls the stream tail: by default (False, the
+    paper's semantics — a window is a fixed-size aggregation unit) only
+    full windows are emitted, so the last ``< size`` stretch of the
+    stream is never covered by any window.  With ``emit_partial=True``
+    the final scheduled window is emitted clamped to the stream end
+    (``(start, n_frames)`` with ``start < n_frames``), so a monitoring
+    deployment that must account for every ingested frame can opt in.
+    With ``advance > size`` (sampling windows) the frames in the gap
+    between the last full window and the next scheduled start are
+    *skipped by design*, not a tail — they are never emitted under
+    either setting."""
     size: int
     advance: int
+    emit_partial: bool = False
 
     def windows(self, n_frames: int) -> Iterator[Tuple[int, int]]:
         start = 0
         while start + self.size <= n_frames:
             yield (start, start + self.size)
             start += self.advance
+        if self.emit_partial and start < n_frames:
+            yield (start, n_frames)
 
 
 class FrameSampler:
@@ -105,22 +120,39 @@ class StreamExecutor:
         self.stats = StreamStats()
 
     def run(self, n_frames: int, simulate_slow: Optional[Callable[[int], float]] = None):
+        """Drive the stream.  ``budget`` is the processor's slack against
+        the arrival clock: each batch's arrival interval is credited, each
+        processed batch's cost is charged.  The drop decision is made the
+        moment a batch arrives, against the slack accrued *so far* — the
+        incoming batch's own interval must not subsidize it (crediting
+        first let the executor run a full interval behind schedule before
+        shedding anything, understating ``drop_rate`` under sustained
+        slowdown by one batch per recovery cycle).  A dropped batch still
+        advances the arrival clock — its interval elapses whether or not
+        the frames are processed, and that elapsed time is exactly how
+        the processor catches back up.
+
+        ``simulate_slow(lo) -> seconds`` *replaces* the wall-clock charge
+        for the batch (it does not add to it), so simulated traces are
+        bit-deterministic — a test pinning exact-boundary behavior is not
+        at the mercy of the no-op ``process`` call's real microseconds."""
         t_start = time.perf_counter()
         arrival_per_batch = self.batch / self.policy.fps * self.policy.slack
         budget = 0.0
         for lo in range(0, n_frames, self.batch):
             idx = np.arange(lo, min(lo + self.batch, n_frames))
             self.stats.frames_seen += idx.size
-            budget += arrival_per_batch
             if budget < 0:                      # behind schedule: drop
                 self.stats.frames_dropped += idx.size
-                budget += arrival_per_batch * 0.0   # drop is free
+                budget += arrival_per_batch     # arrival clock still runs
                 continue
+            budget += arrival_per_batch
             t0 = time.perf_counter()
             self.process(idx)
             if simulate_slow is not None:
                 budget -= simulate_slow(lo)
-            budget -= time.perf_counter() - t0
+            else:
+                budget -= time.perf_counter() - t0
             self.stats.frames_processed += idx.size
         self.stats.wall_s = time.perf_counter() - t_start
         return self.stats
@@ -356,6 +388,14 @@ class MultiQueryStreamExecutor:
             from repro.core import costmodel as CM2
             model = CM2.default_cost_model()
         monitor.reset(model)
+        if model.source == "measured":
+            # persist the bumped generation/recalibration counters next
+            # to the fresh coefficients (best-effort: the live model is
+            # already installed, a read-only disk must not kill the run)
+            try:
+                CM.save_calibration(model, monitor=monitor)
+            except (OSError, ValueError):  # pragma: no cover - disk glitch
+                pass
         if monitor.should_recalibrate():
             # still flagged right after a re-measure (e.g. the reloaded
             # model is static or still past max_age): another attempt
@@ -373,11 +413,24 @@ class MultiQueryStreamExecutor:
         results = []
         for lo, hi in self.window.windows(n_frames):
             hits: Dict[int, int] = {}
+            started = None      # engine object already window-started
             for b0 in range(lo, hi, self.batch):
                 idx = np.arange(b0, min(b0 + self.batch, hi))
                 engine, qids = self._refresh()
                 if engine is None:              # nothing registered
                     continue
+                if engine is not started:
+                    # stateful engines (the temporal tier's
+                    # repro.core.temporal.TemporalEngine) scope their
+                    # automata to the hopping window; the hook fires once
+                    # per (window, engine) — including for an engine
+                    # rebuilt mid-window by registry churn, which starts
+                    # cold from the current batch (documented: mid-window
+                    # churn resets temporal state)
+                    hook = getattr(engine, "on_window_start", None)
+                    if hook is not None:
+                        hook(lo, hi)
+                    started = engine
                 ans = np.asarray(engine(idx))   # (B, n_active)
                 for k, qid in enumerate(qids):
                     hits[qid] = hits.get(qid, 0) + int(ans[:, k].sum())

@@ -56,6 +56,15 @@ def rng():
 
 
 @pytest.fixture(scope="session")
+def temporal_replay_oracle():
+    """The naive per-frame replay semantics temporal automata must match
+    bit-for-bit (shared across property/regression modules so every
+    temporal test states equivalence against the same specification)."""
+    from repro.core.temporal import replay_reference
+    return replay_reference
+
+
+@pytest.fixture(scope="session")
 def tiny_dense():
     return ModelConfig(name="dense", **BASE)
 

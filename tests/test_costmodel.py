@@ -863,3 +863,129 @@ def test_auto_recalibrate_handles_none_returning_fn():
     assert len(calls) == 1                    # fired once, never looped
     assert mon.model.source == "static"       # resolver reloaded (env off)
     assert not mon.should_recalibrate()
+
+
+# ---------------------------------------------------------------------------
+# 6. monitor persistence: the drift ledger survives a restart
+# ---------------------------------------------------------------------------
+
+def _persistable_model() -> CM.CostModel:
+    m = crossover_model()
+    m.fingerprint = CM.fingerprint_backend()
+    m.calibrated_at = time.time()
+    return m
+
+
+def test_monitor_state_rides_calibration_file(tmp_path):
+    """save_calibration(monitor=...) folds the drift ledger into the
+    JSON; restore() resumes it exactly, and the block is invisible to
+    load_calibration (same schema version, unknown keys ignored)."""
+    model = _persistable_model()
+    mon = CM.CalibrationMonitor(model)
+    mon.observe(10.0, 30.0)
+    mon.observe(10.0, 22.0)
+    mon.recalibrations = 2
+    mon.generation = 3
+    p = str(tmp_path / "cal.json")
+    CM.save_calibration(model, p, monitor=mon)
+
+    loaded = CM.load_calibration(p)
+    assert loaded is not None and loaded.source == "measured"
+    state = CM.load_monitor_state(p)
+    r = CM.CalibrationMonitor.restore(loaded, state)
+    assert r.drift == pytest.approx(mon.drift)
+    assert r.weight == pytest.approx(mon.weight)
+    assert r.generation == 3 and r.recalibrations == 2
+    # describe() (the provenance surface) agrees after the round trip
+    assert r.describe()["should_recalibrate"] \
+        == mon.describe()["should_recalibrate"]
+
+
+def test_monitor_without_block_saves_and_loads_clean(tmp_path):
+    """No monitor handed in -> no block written; restore(None) is the
+    cold start, mirroring the absent-snapshot path of SlotStats.load."""
+    model = _persistable_model()
+    p = str(tmp_path / "cal.json")
+    CM.save_calibration(model, p)
+    assert CM.load_monitor_state(p) is None
+    r = CM.CalibrationMonitor.restore(model, CM.load_monitor_state(p))
+    assert r.weight == 0.0 and r.drift == 0.0 and r.generation == 0
+
+
+@pytest.mark.parametrize("mutate,desc", [
+    (lambda s: {**s, "err_acc": float("nan")}, "nan accumulator"),
+    (lambda s: {**s, "err_acc": -1.0}, "negative accumulator"),
+    (lambda s: {**s, "weight": float("inf")}, "infinite weight"),
+    (lambda s: {**s, "weight": 1e9}, "weight impossible under decay"),
+    (lambda s: {**s, "generation": -2}, "negative generation"),
+    (lambda s: {**s, "calibrated_at": 12345.0}, "foreign evidence"),
+    (lambda s: {k: v for k, v in s.items() if k != "weight"},
+     "missing key"),
+    (lambda s: "not a dict", "wrong type"),
+    (lambda s: None, "absent block"),
+])
+def test_monitor_restore_distrusts_corrupt_state(tmp_path, mutate, desc):
+    """Every suspect block cold-starts the monitor (never raises) —
+    the same discipline as load_calibration / SlotStats.load."""
+    model = _persistable_model()
+    mon = CM.CalibrationMonitor(model)
+    mon.observe(10.0, 30.0)
+    state = mutate(mon.state_dict())
+    r = CM.CalibrationMonitor.restore(model, state)
+    assert r.weight == 0.0 and r.drift == 0.0, desc
+
+
+def test_monitor_state_survives_corrupt_calibration_file(tmp_path):
+    """A mangled file yields state None (load_monitor_state never
+    raises), which restore treats as cold."""
+    p = tmp_path / "cal.json"
+    p.write_text("{ not json")
+    assert CM.load_monitor_state(str(p)) is None
+    assert CM.load_monitor_state(str(tmp_path / "missing.json")) is None
+    model = _persistable_model()
+    r = CM.CalibrationMonitor.restore(model,
+                                      CM.load_monitor_state(str(p)))
+    assert r.weight == 0.0
+
+
+def test_auto_recalibrate_persists_monitor_counters(tmp_path, monkeypatch):
+    """The auto-recalibration loop re-saves the calibration with the
+    bumped generation/recalibration counters, so a restarted process
+    restores a monitor that remembers the re-fit happened."""
+    from repro.core.streaming import (HoppingWindow,
+                                      MultiQueryStreamExecutor)
+    monkeypatch.chdir(tmp_path)      # default calibration dir is CWD-relative
+    rng = np.random.default_rng(45)
+    model = _persistable_model()
+    mon = CM.CalibrationMonitor(model, rel_threshold=1e8, min_weight=2.0)
+    for _ in range(8):
+        mon.observe(1.0, 1e10)
+    assert mon.should_recalibrate()
+    p = str(tmp_path / "cal.json")
+    fresh = _persistable_model()
+
+    def stub_recalibrate():
+        CM.save_calibration(fresh, p)
+        return fresh
+
+    reg = QueryRegistry(calibration_monitor=mon)
+    reg.register(Q.Count(Q.Op.GE, 2))
+
+    def factory(queries, slot_stats=None, calibration_monitor=None):
+        mqc = CS.MultiQueryCascade(queries, adaptive=True,
+                                   slot_stats=slot_stats)
+        return lambda idx: np.asarray(
+            mqc.masks(rand_outputs(rng, B=len(idx))))
+
+    ex = MultiQueryStreamExecutor(reg, factory,
+                                  HoppingWindow(size=8, advance=8),
+                                  batch=8, auto_recalibrate=True,
+                                  recalibrate_fn=stub_recalibrate)
+    ex.run(24)
+    assert ex.recalibrations == 1
+    # the executor's post-reset save used the fresh model's default
+    # (backend-derived) path under the tmp CWD — read the state back
+    state = CM.load_monitor_state(CM.calibration_path(fresh.backend))
+    restored = CM.CalibrationMonitor.restore(fresh, state)
+    assert restored.recalibrations == 1
+    assert restored.generation == mon.generation

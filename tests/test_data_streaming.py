@@ -157,6 +157,88 @@ def test_straggler_exact_deadline_boundary():
             == stats2.frames_seen)
 
 
+def test_drop_decision_uses_slack_accrued_before_arrival():
+    """Regression for the drop-branch accounting bug: the decision to
+    drop must compare against the slack accrued BEFORE the arriving
+    batch's own interval is credited, and a dropped batch still advances
+    the arrival clock (the old dead ``+= arrival * 0.0`` line advanced
+    nothing, while crediting arrival pre-check let a pipeline that was
+    already a full interval behind process one extra batch on credit).
+
+    At a steady per-batch cost of 1.7x the arrival budget the schedules
+    diverge on WHICH batches run: the fixed executor is behind after
+    batch 0 (slack -0.7) and drops the second batch; the pre-fix code
+    credited the second batch's arrival first (-0.7 + 1 = +0.3) and
+    processed it.  Every pre/post-check value in both traces is at
+    least 0.1 budgets away from zero, so no-op wall-clock noise cannot
+    flip the assertion."""
+    policy = StragglerPolicy(fps=50.0, slack=1.0)
+    a = 10 / policy.fps
+    processed = []
+    ex = StreamExecutor(lambda idx: processed.append(int(idx[0])),
+                        batch=10, policy=policy)
+    stats = ex.run(100, simulate_slow=lambda lo: a * 1.7)
+    assert processed == [0, 20, 40, 60, 70, 90]       # pre-fix: 10 in, 20 out
+    assert stats.frames_dropped == 40
+    assert stats.frames_processed + stats.frames_dropped == 100
+
+
+def test_drop_rate_matches_overload_factor_exactly():
+    """At exactly 2x overload the fixed accounting settles into a strict
+    process/drop alternation (slack walks -1, 0, -1, ... in whole
+    budgets — float-exact, no epsilon), i.e. a 50% drop rate."""
+    policy = StragglerPolicy(fps=50.0, slack=1.0)
+    a = 10 / policy.fps
+    processed = []
+    ex = StreamExecutor(lambda idx: processed.append(int(idx[0])),
+                        batch=10, policy=policy)
+    stats = ex.run(60, simulate_slow=lambda lo: a * 2.0)
+    assert processed == [0, 20, 40]
+    assert stats.frames_dropped == 30
+    assert stats.frames_processed == 30
+
+
+def test_hopping_window_partial_tail():
+    """The stream tail: by default only full windows are emitted (the
+    pinned paper semantics); ``emit_partial=True`` clamps the final
+    scheduled window to the stream end instead of dropping those
+    frames."""
+    w = HoppingWindow(size=100, advance=50, emit_partial=True)
+    assert list(w.windows(260)) == [(0, 100), (50, 150), (100, 200),
+                                    (150, 250), (200, 260)]
+    # stream shorter than one window: default emits nothing, the flag
+    # clamps the very first window
+    assert list(HoppingWindow(size=100, advance=50).windows(60)) == []
+    assert list(HoppingWindow(size=100, advance=50,
+                              emit_partial=True).windows(60)) == [(0, 60)]
+    # overlapping windows: the next scheduled start (150) gets its
+    # clamp even though frames up to 200 were already covered in full
+    assert list(HoppingWindow(size=100, advance=50,
+                              emit_partial=True).windows(200)) \
+        == [(0, 100), (50, 150), (100, 200), (150, 200)]
+    # next scheduled start landing exactly on the stream end: no partial
+    assert list(HoppingWindow(size=100, advance=100,
+                              emit_partial=True).windows(200)) \
+        == [(0, 100), (100, 200)]
+
+
+def test_hopping_window_partial_tail_advance_gt_size():
+    """With advance > size (sampling windows) the frames in the gap
+    between windows are skipped BY DESIGN under both settings — the
+    partial flag only rescues frames after the last *scheduled* window
+    start."""
+    assert list(HoppingWindow(size=50, advance=80).windows(40)) == []
+    assert list(HoppingWindow(size=50, advance=80,
+                              emit_partial=True).windows(40)) == [(0, 40)]
+    # gap frames 130..160 stay skipped; the scheduled start at 160 is
+    # clamped to the stream end
+    assert list(HoppingWindow(size=50, advance=80,
+                              emit_partial=True).windows(180)) \
+        == [(0, 50), (80, 130), (160, 180)]
+    assert list(HoppingWindow(size=50, advance=80).windows(180)) \
+        == [(0, 50), (80, 130)]
+
+
 # ---------------------------------------------------------------------------
 # QueryRegistry: retire semantics + population stats carry
 # ---------------------------------------------------------------------------

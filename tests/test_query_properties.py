@@ -110,6 +110,30 @@ def test_strict_filters_match_exact_semantics(seed):
         assert approx == exact, (query, objs)
 
 
+def test_tolerance_widens_filter_only_never_exact():
+    """Pins the CF-k asymmetry: ``tolerance`` widens the approximate
+    filter band (more candidates through to the oracle), while exact
+    evaluation is tolerance-free BY DEFINITION — the oracle answers the
+    query as written.  ``_eval_table`` deliberately passes ``tol=0``;
+    were it to honour the field, every relaxed registration would
+    return relaxed *answers* and the accuracy ceiling of the cascade
+    (zero false negatives, exact positives) would silently become a
+    two-sided approximation.  See the Count/ClassCount docstrings and
+    docs/paper_mapping.md."""
+    objs = [(0, 0, 0), (0, 1, 1), (1, 2, 2), (1, 3, 3)]   # 4 objects
+    fo = perfect_outputs(objs)
+    for q in (Q.Count(Q.Op.EQ, 5, 2),                     # |4-5| <= 2
+              Q.ClassCount(0, Q.Op.EQ, 3, 1),             # |2-3| <= 1
+              Q.Count(Q.Op.LE, 3, 1),                     # 4  <= 3+1
+              Q.ClassCount(1, Q.Op.GE, 3, 1)):            # 2  >= 3-1
+        assert bool(Q.eval_filters(q, fo)[0]), q          # filter: in band
+        assert not Q.eval_objects(q, objs, C, GRID), q    # exact: strict
+    # and the strict spelling of the same predicates agrees both ways
+    for q in (Q.Count(Q.Op.EQ, 4), Q.ClassCount(0, Q.Op.EQ, 2)):
+        assert bool(Q.eval_filters(q, fo)[0])
+        assert Q.eval_objects(q, objs, C, GRID)
+
+
 # ---------------------------------------------------------------------------
 # invariant 2: shared plan ≡ independent evaluation (bit-identical)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,370 @@
+"""Temporal tier: streamed automata ≡ naive per-frame replay, bit-for-bit.
+
+The specification is ``repro.core.temporal.replay_reference`` (shared via
+the ``temporal_replay_oracle`` conftest fixture): a quadratic, stateless
+transcription of the Duration/Sequence/SlidingCount definitions that
+re-scans the exact ``eval_objects`` trace at every frame.  The streamed
+``TemporalProgram`` must reproduce it exactly across operator nests,
+window shapes, and arbitrary batch splits — and its window-outcome
+short-circuit must be *sound*: once a query is reported future-decided,
+the replay oracle's outputs for every remaining frame of the window must
+equal the latched constant, even when the program is then fed garbage on
+its suppressed signal columns.
+
+Seeded-numpy sweeps keep the properties green in a bare environment;
+with hypothesis installed the same properties get shrinking exploration
+under the conftest "full"/"ci" example budgets.
+"""
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.temporal import TemporalEngine, TemporalProgram
+
+GRID, C = 6, 3
+
+ATOMS = [Q.ClassCount(0, Q.Op.GE, 1),
+         Q.ClassCount(1, Q.Op.GE, 1),
+         Q.Count(Q.Op.GE, 2)]
+
+
+# ---------------------------------------------------------------------------
+# seeded generators (same discipline as test_query_properties)
+# ---------------------------------------------------------------------------
+
+def rand_frame_pred(rng):
+    a = ATOMS[rng.integers(0, len(ATOMS))]
+    k = rng.integers(0, 4)
+    if k == 0:
+        return a
+    b = ATOMS[rng.integers(0, len(ATOMS))]
+    if k == 1:
+        return Q.And((a, b))
+    if k == 2:
+        return Q.Or((a, Q.Not(b)))
+    return Q.Not(a)
+
+
+def rand_temporal_op(rng):
+    k = rng.integers(0, 3)
+    if k == 0:
+        return Q.Duration(rand_frame_pred(rng), int(rng.integers(1, 7)))
+    if k == 1:
+        return Q.Sequence(rand_frame_pred(rng), rand_frame_pred(rng),
+                          int(rng.integers(1, 6)))
+    op = [Q.Op.EQ, Q.Op.GE, Q.Op.LE][rng.integers(0, 3)]
+    return Q.SlidingCount(rand_frame_pred(rng), int(rng.integers(1, 7)),
+                          op, int(rng.integers(0, 7)))
+
+
+def rand_temporal_query(rng, depth=0):
+    """Boolean combinations of temporal operators and frame predicates
+    (temporal operators never nest — enforced by the AST itself)."""
+    if depth >= 2 or rng.random() < 0.35:
+        return rand_temporal_op(rng) if rng.random() < 0.7 \
+            else rand_frame_pred(rng)
+    k = rng.integers(0, 3)
+    if k == 2:
+        return Q.Not(rand_temporal_query(rng, depth + 1))
+    terms = tuple(rand_temporal_query(rng, depth + 1)
+                  for _ in range(rng.integers(2, 4)))
+    return Q.And(terms) if k == 0 else Q.Or(terms)
+
+
+def rand_objects(rng):
+    n = int(rng.integers(0, 7))
+    cells = {}
+    for _ in range(n):
+        r, c = int(rng.integers(0, GRID)), int(rng.integers(0, GRID))
+        cells[(r, c)] = (int(rng.integers(0, C)), r, c)
+    return list(cells.values())
+
+
+def exact_trace(rng, n_frames):
+    """Per-frame object lists plus a memoised exact frame-value function
+    (the ``eval_objects`` trace both implementations consume)."""
+    objs = [rand_objects(rng) for _ in range(n_frames)]
+    cache = {}
+
+    def frame_value(pred, t):
+        key = (Q.canonicalize(pred), t)
+        if key not in cache:
+            cache[key] = Q.eval_objects(pred, objs[t], C, GRID)
+        return cache[key]
+
+    return objs, frame_value
+
+
+def stream_in_batches(prog, frame_value, n_frames, rng,
+                      garbage_suppressed=False):
+    """Drive the program over random batch splits of one window,
+    returning (outputs, decided-before-batch snapshots)."""
+    prog.start_window(n_frames)
+    outs, snaps = [], []
+    t = 0
+    while t < n_frames:
+        b = int(rng.integers(1, min(6, n_frames - t) + 1))
+        vals = np.array([[frame_value(fq, t + f)
+                          for fq in prog.frame_queries]
+                         for f in range(b)], bool).reshape(b, -1)
+        snaps.append((t, b, prog.query_decided))
+        if garbage_suppressed:
+            sup = prog.suppressed_signals()
+            vals = vals.copy()
+            vals[:, sup] = rng.random((b, int(sup.sum()))) < 0.5
+        outs.append(prog.advance(vals))
+        t += b
+    return np.concatenate(outs, 0), snaps
+
+
+# ---------------------------------------------------------------------------
+# property 1: streamed ≡ replay on the exact eval_objects trace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_streamed_matches_replay_bit_for_bit(seed, temporal_replay_oracle):
+    rng = np.random.default_rng(seed)
+    for _ in range(12):
+        n_queries = int(rng.integers(1, 6))
+        queries = [rand_temporal_query(rng) for _ in range(n_queries)]
+        W = int(rng.integers(1, 22))
+        _, fv = exact_trace(rng, W)
+        expect = np.array([temporal_replay_oracle(q, fv, W)
+                           for q in queries]).T.reshape(W, n_queries)
+        prog = TemporalProgram(queries)
+        got, _ = stream_in_batches(prog, fv, W, rng)
+        np.testing.assert_array_equal(got, expect)
+
+
+# ---------------------------------------------------------------------------
+# property 2: decidedness is sound and suppressed signals are inert
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_decided_queries_are_constant_and_garbage_immune(
+        seed, temporal_replay_oracle):
+    rng = np.random.default_rng(1000 + seed)
+    for _ in range(12):
+        queries = [rand_temporal_query(rng)
+                   for _ in range(int(rng.integers(1, 5)))]
+        W = int(rng.integers(1, 22))
+        _, fv = exact_trace(rng, W)
+        expect = np.array([temporal_replay_oracle(q, fv, W)
+                           for q in queries]).T.reshape(W, len(queries))
+        prog = TemporalProgram(queries)
+        got, snaps = stream_in_batches(prog, fv, W, rng,
+                                       garbage_suppressed=True)
+        # garbage on suppressed columns must not perturb any output
+        np.testing.assert_array_equal(got, expect)
+        # a decided verdict is a promise about the whole remaining window
+        for t, b, dec in snaps:
+            for qi in range(len(queries)):
+                if dec[qi] >= 0:
+                    assert (expect[t:, qi] == bool(dec[qi])).all(), \
+                        (queries[qi], t, qi)
+
+
+# ---------------------------------------------------------------------------
+# property 3 (hypothesis, when installed): shrinking exploration
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+    atom = st.sampled_from(ATOMS)
+    temporal_op = st.one_of(
+        st.builds(Q.Duration, atom, st.integers(1, 6)),
+        st.builds(Q.Sequence, atom, atom, st.integers(1, 5)),
+        st.builds(Q.SlidingCount, atom, st.integers(1, 6),
+                  st.sampled_from([Q.Op.EQ, Q.Op.GE, Q.Op.LE]),
+                  st.integers(0, 6)))
+    query_st = st.recursive(
+        st.one_of(atom, temporal_op),
+        lambda s: st.one_of(
+            st.builds(lambda ts: Q.And(tuple(ts)),
+                      st.lists(s, min_size=2, max_size=3)),
+            st.builds(lambda ts: Q.Or(tuple(ts)),
+                      st.lists(s, min_size=2, max_size=3)),
+            st.builds(Q.Not, s)),
+        max_leaves=5)
+
+    @settings(deadline=None)
+    @given(query=query_st,
+           trace=st.lists(st.tuples(st.booleans(), st.booleans(),
+                                    st.booleans()),
+                          min_size=1, max_size=18),
+           data=st.data())
+    def test_streamed_matches_replay_hypothesis(query, trace, data):
+        from repro.core.temporal import replay_reference
+        W = len(trace)
+        atom_vals = {(Q.canonicalize(a), t): trace[t][i]
+                     for i, a in enumerate(ATOMS) for t in range(W)}
+
+        def fv(pred, t):
+            key = (Q.canonicalize(pred), t)
+            if key in atom_vals:
+                return atom_vals[key]
+            if isinstance(pred, Q.And):
+                return all(fv(x, t) for x in pred.terms)
+            if isinstance(pred, Q.Or):
+                return any(fv(x, t) for x in pred.terms)
+            if isinstance(pred, Q.Not):
+                return not fv(pred.term, t)
+            raise AssertionError(pred)
+
+        expect = np.array(replay_reference(query, fv, W), bool)
+        prog = TemporalProgram([query])
+        prog.start_window(W)
+        outs = []
+        t = 0
+        while t < W:
+            b = data.draw(st.integers(1, W - t), label="batch")
+            vals = np.array([[fv(fq, t + f) for fq in prog.frame_queries]
+                             for f in range(b)], bool).reshape(b, -1)
+            outs.append(prog.advance(vals))
+            t += b
+        np.testing.assert_array_equal(np.concatenate(outs, 0)[:, 0], expect)
+
+
+# ---------------------------------------------------------------------------
+# AST validation + plumbing
+# ---------------------------------------------------------------------------
+
+def test_temporal_ast_validation():
+    a = ATOMS[0]
+    with pytest.raises(ValueError):
+        Q.Duration(a, 0)
+    with pytest.raises(ValueError):
+        Q.Sequence(a, a, 0)
+    with pytest.raises(ValueError):
+        Q.SlidingCount(a, 0, Q.Op.GE, 1)
+    # temporal operators must not nest, at any depth
+    with pytest.raises(TypeError, match="frame-level"):
+        Q.Duration(Q.Duration(a, 2), 3)
+    with pytest.raises(TypeError, match="frame-level"):
+        Q.Sequence(a, Q.And((a, Q.SlidingCount(a, 2, Q.Op.GE, 1))), 2)
+    assert Q.has_temporal(Q.Not(Q.And((a, Q.Duration(a, 2)))))
+    assert not Q.has_temporal(Q.Not(Q.And((a, a))))
+
+
+def test_query_plan_rejects_temporal():
+    from repro.core.plan import QueryPlan
+    with pytest.raises(TypeError, match="temporal"):
+        QueryPlan([Q.Duration(ATOMS[0], 3)])
+
+
+def test_stats_codec_round_trips_temporal():
+    from repro.core.stats import _decode_pred, _encode_pred
+    q = Q.Or((Q.Duration(Q.And((ATOMS[0], ATOMS[2])), 4),
+              Q.Not(Q.Sequence(ATOMS[0], ATOMS[1], 3)),
+              Q.SlidingCount(ATOMS[1], 5, Q.Op.LE, 2)))
+    assert _decode_pred(_encode_pred(q)) == q
+
+
+def test_signal_dedup_across_queries():
+    """Shared sub-predicates become one cascade signal."""
+    a = ATOMS[0]
+    prog = TemporalProgram([Q.Duration(a, 3), Q.Sequence(a, a, 2), a,
+                            Q.SlidingCount(a, 4, Q.Op.GE, 2)])
+    assert prog.n_signals == 1
+    assert prog.n_automata == 3
+
+
+def test_window_overrun_raises():
+    prog = TemporalProgram([Q.Duration(ATOMS[0], 2)])
+    prog.start_window(3)
+    prog.advance(np.zeros((2, 1), bool))
+    with pytest.raises(ValueError, match="window"):
+        prog.advance(np.zeros((2, 1), bool))
+
+
+# ---------------------------------------------------------------------------
+# TemporalEngine end-to-end: short-circuit fires, answers stay exact
+# ---------------------------------------------------------------------------
+
+def _perfect_filter(objs_per_frame):
+    import jax.numpy as jnp
+    from repro.core.filters import FilterOutputs
+
+    def filter_fn(idx):
+        counts = np.zeros((len(idx), C), np.float32)
+        grid = np.zeros((len(idx), GRID, GRID, C), np.float32)
+        for k, t in enumerate(np.asarray(idx)):
+            for c, r, cc in objs_per_frame[int(t)]:
+                counts[k, c] += 1
+                grid[k, r, cc, c] = 1.0
+        return FilterOutputs(counts=jnp.asarray(counts),
+                             grid=jnp.asarray(grid))
+    return filter_fn
+
+
+def test_engine_matches_replay_and_short_circuits(temporal_replay_oracle):
+    rng = np.random.default_rng(7)
+    W = 40
+    objs, fv = exact_trace(rng, W)
+    # Duration(min 30) over a mostly-false atom dies early; the latching
+    # queries decide True early -> whole-batch skips at the window tail
+    queries = [Q.Duration(ATOMS[0], 30),
+               Q.SlidingCount(ATOMS[0], 3, Q.Op.GE, 0),   # latches at t=2
+               Q.Or((Q.Duration(ATOMS[1], 1), Q.Sequence(ATOMS[0],
+                                                         ATOMS[1], 4)))]
+    engine = TemporalEngine(
+        queries, _perfect_filter(objs),
+        lambda idx, sel: [objs[int(np.asarray(idx)[s])] for s in sel],
+        C, GRID)
+    expect = np.array([temporal_replay_oracle(q, fv, W)
+                       for q in queries]).T
+    engine.on_window_start(0, W)
+    outs = []
+    for lo in range(0, W, 8):
+        outs.append(engine(np.arange(lo, min(lo + 8, W))))
+    np.testing.assert_array_equal(np.concatenate(outs, 0), expect)
+    assert engine.stats.frames_in == W
+    assert engine.stats.frames_skipped > 0          # temporal short-circuit
+    assert engine.stats.cost_saved_model > 0.0
+    assert engine.stats.windows == 1
+
+
+def test_engine_under_stream_executor_with_churn(temporal_replay_oracle):
+    """Windows, hopping, mid-stream registration: the executor drives
+    ``on_window_start`` and hit counts match the replay oracle."""
+    from repro.core.streaming import (HoppingWindow,
+                                      MultiQueryStreamExecutor,
+                                      QueryRegistry)
+    rng = np.random.default_rng(11)
+    n = 48
+    objs, fv = exact_trace(rng, n)
+    q0 = Q.SlidingCount(ATOMS[0], 4, Q.Op.GE, 1)
+    q1 = Q.Duration(ATOMS[1], 2)
+    reg = QueryRegistry()
+    qid0 = reg.register(q0)
+    factory = lambda queries: TemporalEngine(    # noqa: E731
+        list(queries), _perfect_filter(objs),
+        lambda idx, sel: [objs[int(np.asarray(idx)[s])] for s in sel],
+        C, GRID)
+    ex = MultiQueryStreamExecutor(reg, factory,
+                                  HoppingWindow(size=16, advance=16),
+                                  batch=8)
+    added = {}
+
+    def on_window(res):
+        if res.span[0] == 0:
+            added["qid"] = reg.register(q1)      # rebuild before window 2
+    results = ex.run(n, on_window=on_window)
+    assert [r.span for r in results] == [(0, 16), (16, 32), (32, 48)]
+
+    def win_hits(q, lo, hi):
+        vals = temporal_replay_oracle(
+            q, lambda p, t: fv(p, lo + t), hi - lo)
+        return sum(vals)
+
+    for r in results:
+        assert r.hits[qid0] == win_hits(q0, *r.span)
+    for r in results[1:]:                        # q1 live from window 2 on
+        assert r.hits[added["qid"]] == win_hits(q1, *r.span)
+    assert ex.rebuilds == 2
