@@ -2,12 +2,23 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-deps bench bench-smoke calibrate docs-check
+.PHONY: test test-fast test-multidevice test-deps bench bench-smoke \
+	calibrate docs-check
 
 # tier-1 verify (full hypothesis profile — the default); depends on
-# docs-check so a stale doc reference fails the same gate as a test
+# docs-check so a stale doc reference fails the same gate as a test,
+# then re-runs the suite under 8 forced host devices (test-multidevice)
+# so single-device green can't hide a sharding regression
 test: docs-check
 	PYTHONPATH=src $(PY) -m pytest -x -q
+	$(MAKE) test-multidevice
+
+# the whole suite under a forced 8-device host topology (ci hypothesis
+# profile — the multi-device pass checks sharded-vs-serial identity, not
+# example budgets): shard_map paths, stream meshes, device_put placement
+test-multidevice:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	REPRO_HYPOTHESIS_PROFILE=ci PYTHONPATH=src $(PY) -m pytest -x -q
 
 # docs/*.md + README consistency: intra-doc links resolve, `make ...`
 # mentions name real targets, referenced file paths exist (also runs
@@ -34,6 +45,7 @@ bench:
 # produced it, so the trajectory stays interpretable across boxes)
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.multi_query_sharing --smoke
+	PYTHONPATH=src $(PY) -m benchmarks.multi_stream_serving --smoke
 
 # measure the staged planner's stage-body costs on THIS backend and write
 # results/calibration/<backend>.json; the adaptive engine loads it on the

@@ -39,6 +39,21 @@ def timeit(fn: Callable, *args, repeat: int = 5, warmup: int = 2) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def device_topology(mesh=None) -> Dict[str, Any]:
+    """Bench provenance: the device layout a result was measured on
+    (recorded next to ``calibration_info`` in results/bench/*.json —
+    a 1-device CPU number and an 8-forced-host-device number are not
+    comparable without it)."""
+    import jax
+    topo: Dict[str, Any] = {"device_count": jax.device_count(),
+                            "platform": jax.default_backend()}
+    topo["mesh_shape"] = (
+        {name: int(n) for name, n in zip(mesh.axis_names,
+                                         mesh.devices.shape)}
+        if mesh is not None else None)
+    return topo
+
+
 def save_result(name: str, payload: Dict[str, Any]):
     os.makedirs("results/bench", exist_ok=True)
     with open(f"results/bench/{name}.json", "w") as f:

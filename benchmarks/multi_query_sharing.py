@@ -68,7 +68,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, save_result, timeit
+from benchmarks.common import device_topology, emit, save_result, timeit
 from repro.core import costmodel
 from repro.core import query as Q
 from repro.core.cascade import MultiQueryCascade
@@ -167,6 +167,7 @@ def run_sharing() -> dict:
         print(f"{n:4d} {us_serial:10.0f} {us_fused:9.0f} {us_shared:10.0f} "
               f"{speedup:7.2f}x {plan.sharing_factor:6.2f} {fps:10.0f}")
 
+    res["device_topology"] = device_topology()
     save_result("multi_query_sharing", res)
     return res
 
@@ -369,6 +370,7 @@ def run_adaptive(smoke: bool = False) -> dict:
                   f"bodies={','.join(report.bodies)}")
 
     res["calibration_info"] = cm.describe()
+    res["device_topology"] = device_topology()
     save_result("multi_query_adaptive", res)
     return res
 
@@ -470,6 +472,7 @@ def run_temporal(smoke: bool = False) -> dict:
           f"{st.signal_evals_skipped} signal evals suppressed, "
           f"{us_frame:.0f} us/frame vs {us_frame_base:.0f} baseline "
           f"({res['shortcircuit_speedup']:.2f}x)")
+    res["device_topology"] = device_topology()
     save_result("multi_query_temporal", res)
     return res
 

@@ -1094,6 +1094,200 @@ class StagedQueryPlan:
         self._pending = (pending, stage_rows)
         return value
 
+    # -- fleet execution (stream-axis group steps) ------------------------
+
+    def _get_group_step(self, si: int, ran: frozenset,
+                        bucket: Optional[int], body: str, n_streams: int,
+                        shard_wrap: Optional[Callable]) -> Callable:
+        """Stream-axis-aware variant of ``_get_step``: the same fused
+        stage step vmapped over a leading (S,) stream axis, optionally
+        wrapped by ``shard_wrap`` (a ``distributed.sharding.shard_map``
+        closure over a device mesh's stream axis) before jitting, so S
+        streams' stage work runs as ONE dispatched program — per device,
+        a contiguous block of streams — instead of S host round-trips.
+
+        Group steps share the single-stream LRU cache (their keys carry
+        the extra stream count + wrap flag, so the two families never
+        collide); caching does not key on the wrap closure's identity —
+        a plan instance is owned by one executor, whose mesh is fixed
+        for the plan's lifetime (registry-epoch rebuilds create a fresh
+        plan).  The per-stream math is identical to the single-stream
+        step — reductions in the stage bodies are over exact
+        integer-valued occupancy data, so the vmapped slices are
+        bit-identical to S serial evaluations (pinned by the
+        multi-stream property tests)."""
+        key = (si, ran, bucket, body, n_streams, shard_wrap is not None)
+        step = self._steps.get(key)
+        if step is not None:
+            self._steps.move_to_end(key)
+            return step
+        plan = self.plan
+        stage_body = self._stage_body(si)
+        slots = self._stage_slots(si)
+        spatial = self.stages[si].kind == "spatial"
+        known = np.zeros(plan.n_unique_leaves, bool)
+        for sj in ran:
+            known[self.stages[sj].slots] = True
+        known[slots] = True
+
+        if bucket is None:
+            def step_fn(out, leaf_vals):
+                vals = stage_body(out)                     # (B, k) bool
+                leaf_vals = leaf_vals.at[:, slots].set(vals)
+                value, decided = plan.propagate_bounds(leaf_vals, known)
+                undec = jnp.concatenate([~decided.all(0), ~decided.all(1)])
+                return leaf_vals, value, decided, undec, vals.sum(0)
+        else:
+            def step_fn(out, leaf_vals, value, decided, idx, n_real):
+                vals = (stage_body(out, rows=idx, body=body) if spatial
+                        else stage_body(out, rows=idx))    # (R, k) bool
+                sub = leaf_vals[idx].at[:, slots].set(vals)
+                leaf_vals = leaf_vals.at[idx].set(sub)
+                v, dec = plan.propagate_bounds(sub, known)
+                value = value.at[idx].set(v)
+                decided = decided.at[idx].set(dec)
+                undec = jnp.concatenate([~decided.all(0), ~decided.all(1)])
+                valid = jnp.arange(vals.shape[0]) < n_real
+                return (leaf_vals, value, decided, undec,
+                        (vals & valid[:, None]).sum(0))
+
+        grp = jax.vmap(step_fn)
+        if shard_wrap is not None:
+            grp = shard_wrap(grp)
+        step = jax.jit(grp)
+        self._trace_count += 1
+        self._steps[key] = step
+        while len(self._steps) > self.step_cache_max:
+            self._steps.popitem(last=False)
+        return step
+
+    def evaluate_group(self, outs: FilterOutputs, *,
+                       shard_wrap: Optional[Callable] = None) -> jax.Array:
+        """(S, B, N) bool masks for S streams' stacked batches —
+        per-stream slice bit-identical to ``evaluate`` on that stream's
+        batch alone.
+
+        ``outs`` carries a leading stream axis (counts (S, B, C), grid
+        (S, B, g, g, C) or None); the caller stacks per-stream filter
+        outputs and typically ``jax.device_put``s them with a
+        stream-axis ``NamedSharding`` one chunk ahead of compute
+        (``distributed.multistream`` owns that double-buffering).
+
+        Staging decisions are **group-uniform**: a tier runs when ANY
+        stream's undecided queries need it, the row-compaction bucket is
+        the power-of-two covering the WORST stream's undecided count,
+        and the spatial body is chosen once for the group at that
+        bucket.  Both relaxations only ever evaluate *more* rows/tiers
+        for a stream than its solo staging would — and decided
+        (frame, query) cells are invariant to extra evaluation (the same
+        monotonicity that makes tier skipping sound) — so per-stream
+        answers stay bit-identical while the group keeps one fused step
+        per stage (one host sync per stage for the whole fleet slice,
+        not per stream).
+
+        Ledger feedback aggregates across streams: full-batch stage
+        evaluations contribute S·B frames of unconditional per-slot
+        pass counts, and the stage row/survival ledgers see the group's
+        total paid rows over an S·B-row batch (``flush_stats`` is
+        unchanged).  ``StageReport`` costs are priced per stream at the
+        rows each stream's slice evaluated, times S — the cost model
+        prices the sharded step as S vmapped stage bodies.
+
+        The temporal tier's ``presumed_decided`` is deliberately not
+        offered here: temporal engines are per-stream stateful and ride
+        the per-stream path."""
+        plan = self.plan
+        S, B = outs.counts.shape[:2]
+        self._last_batch = B
+        N = len(plan.queries)
+        leaf_vals = jnp.zeros((S, B, plan.n_unique_leaves), bool)
+        value = jnp.zeros((S, B, N), bool)
+        decided = jnp.zeros((S, B, N), bool)
+        undecided_cols = np.ones((S, N), bool)
+        undecided_rows = np.ones((S, B), bool)
+        report = StageReport(order=[self.stages[s].name for s in self.order],
+                             cost_total=S * plan.exhaustive_cost_model(
+                                 self.cost_model, batch=B),
+                             batch=S * B)
+        traces_before = self._trace_count
+        pending: List[Tuple[np.ndarray, jax.Array, int]] = []
+        stage_rows: List[Tuple[str, int, int, Optional[int],
+                               Optional[int]]] = []
+        ran: frozenset = frozenset()
+        for si in self.order:
+            st = self.stages[si]
+            if not (self._uses_stage[None, :, si] & undecided_cols).any():
+                report.skipped.append(st.name)
+                stage_rows.append((st.name, 0, S * B, None, None))
+                continue
+            if st.kind != "count" and outs.grid is None:
+                raise ValueError(
+                    f"stage {st.name!r} has Spatial/Region leaves of an "
+                    f"undecided query but the filter head emits no grid "
+                    f"(OD-COF)")
+            n_rows = undecided_rows.sum(1)              # (S,)
+            worst = int(n_rows.max())
+            if worst >= B:
+                bucket = B                              # full-batch step
+            else:
+                bucket = max(1, int(self.min_bucket))
+                while bucket < worst:
+                    bucket <<= 1
+                bucket = min(bucket, B)
+            if bucket >= B:
+                body = self._body_for(si, None)
+                step = self._get_group_step(si, ran, None, body, S,
+                                            shard_wrap)
+                leaf_vals, value, decided, undec, counts = step(
+                    outs, leaf_vals)
+                rows_eval = B
+            else:
+                body = self._body_for(si, bucket)
+                step = self._get_group_step(si, ran, bucket, body, S,
+                                            shard_wrap)
+                # per-stream undecided rows padded (compact_indices
+                # discipline: repeat the last survivor so duplicate
+                # scatters are benign) to the GROUP bucket
+                idx = np.zeros((S, bucket), np.int32)
+                for s in range(S):
+                    rows_s = np.nonzero(undecided_rows[s])[0]
+                    n = rows_s.size
+                    idx[s, :n] = rows_s
+                    idx[s, n:] = rows_s[-1] if n else 0
+                leaf_vals, value, decided, undec, counts = step(
+                    outs, leaf_vals, value, decided, jnp.asarray(idx),
+                    jnp.asarray(n_rows.astype(np.int32)))
+                rows_eval = bucket
+            if rows_eval == B:
+                # full-batch group evaluation: S·B unconditional frames
+                # feed the per-slot ledger (compacted steps stay out —
+                # same conditioning argument as the serial path)
+                pending.append((self._stage_slots(si), counts.sum(0),
+                                S * B))
+            undec = np.asarray(undec)       # ONE (S, N + B) fetch/stage
+            undecided_cols, undecided_rows = undec[:, :N], undec[:, N:]
+            stage_rows.append((st.name, rows_eval * S, S * B,
+                               int(n_rows.sum()),
+                               int(undecided_rows.sum())))
+            ran = ran | {si}
+            report.ran.append(st.name)
+            report.rows_evaluated.append(rows_eval * S)
+            report.undecided_rows_in.append(int(n_rows.sum()))
+            report.bodies.append(body)
+            report.cost_run += S * self.cost_model.stage_cost(
+                st.kind, rows=rows_eval, batch=B, radius=st.radius,
+                body=body if body in ("rows", "full") else None)
+            report.undecided_after.append(int(undecided_cols.sum()))
+            if not undecided_cols.any():
+                break
+        for sj in self.order[len(report.ran) + len(report.skipped):]:
+            report.skipped.append(self.stages[sj].name)
+            stage_rows.append((self.stages[sj].name, 0, S * B, None, None))
+        report.steps_compiled = self._trace_count - traces_before
+        self.last_report = report
+        self._pending = (pending, stage_rows)
+        return value
+
     def flush_stats(self, stats) -> None:
         """Fold the last batch's per-slot pass counts into ``stats`` with
         ONE device fetch (counts were accumulated on device per stage).

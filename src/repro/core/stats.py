@@ -67,7 +67,8 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, Hashable, Sequence
+import warnings
+from typing import Dict, Hashable, Iterable, Sequence
 
 import numpy as np
 
@@ -356,6 +357,32 @@ class SlotStats:
             raise ValueError(f"corrupt SlotStats snapshot {path}: {e}") \
                 from e
         return st
+
+    @classmethod
+    def load_merged(cls, paths: Iterable[str]) -> "SlotStats":
+        """Fleet warm-start (gossip): fold several workers' ``save``
+        snapshots into one fresh store via ``merge``, so a new worker
+        begins with the fleet's pooled selectivity priors and stage
+        ledgers instead of cold-starting.  A corrupt/unreadable snapshot
+        is skipped with a warning — the same survival discipline as
+        ``QueryRegistry``'s single-snapshot resume: a bad peer file must
+        never take down a starting worker.  Priors/decay come from the
+        first snapshot that loads (they parameterize the smoothing, not
+        the observations); with no loadable snapshot the store is simply
+        cold."""
+        st: "SlotStats" = None  # type: ignore[assignment]
+        for p in paths:
+            try:
+                peer = cls.load(p)
+            except (ValueError, OSError) as e:
+                warnings.warn(f"ignoring unreadable SlotStats snapshot "
+                              f"{p!r}: {e}")
+                continue
+            if st is None:
+                st = peer
+            else:
+                st.merge(peer)
+        return st if st is not None else cls()
 
     def merge(self, other: "SlotStats") -> "SlotStats":
         """Fold another store into this one (returns self).

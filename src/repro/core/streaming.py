@@ -19,7 +19,8 @@ import inspect
 import os
 import time
 import warnings
-from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
@@ -54,10 +55,32 @@ class HoppingWindow:
             yield (start, n_frames)
 
 
-class FrameSampler:
-    """Uniform sampling of frame indices within a window (w/o replacement)."""
+def stream_seed(base_seed: int, stream_id) -> int:
+    """Per-stream seed derived from ``(base_seed, stream_id)``.
 
-    def __init__(self, seed: int = 0):
+    S parallel streams configured with one fleet-wide base seed must not
+    sample identical frame offsets (correlated sampling defeats the
+    variance reduction the aggregate tier's estimators assume, and makes
+    every stream hit its oracle on the same chunk positions).  Hashing
+    the pair through blake2b gives each stream an independent,
+    deterministic sub-seed — stable across runs and across workers, so a
+    stream keeps its sampling identity wherever it is routed."""
+    import hashlib
+    h = hashlib.blake2b(f"{base_seed}:{stream_id}".encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big")
+
+
+class FrameSampler:
+    """Uniform sampling of frame indices within a window (w/o replacement).
+
+    ``stream_id`` (optional) derives the rng seed via ``stream_seed`` so
+    per-stream samplers built from one base seed draw independent
+    sequences; without it the base seed is used directly (the legacy
+    single-stream behaviour, unchanged)."""
+
+    def __init__(self, seed: int = 0, stream_id=None):
+        if stream_id is not None:
+            seed = stream_seed(seed, stream_id)
         self.rng = np.random.default_rng(seed)
 
     def sample(self, lo: int, hi: int, n: int) -> np.ndarray:
@@ -205,6 +228,13 @@ class QueryRegistry:
     restarting monitor.  ``save_stats()`` writes the snapshot back
     (call it on shutdown or on a timer).
 
+    ``gossip_paths`` is the fleet-scale variant of the same idea: a list
+    of PEER workers' snapshot files, merged on top at construction
+    (``SlotStats.load_merged`` — corrupt peers skipped with a warning),
+    so a new worker joining a fleet inherits the population's pooled
+    selectivity priors and stage ledgers instead of cold-starting its
+    stage order (docs/architecture.md §multi-stream).
+
     ``calibration_monitor`` (repro.core.costmodel.CalibrationMonitor)
     rides along the same way the stats store does: engine factories
     that declare the parameter receive it, so the cost-model drift
@@ -215,6 +245,7 @@ class QueryRegistry:
 
     def __init__(self, slot_stats: Optional[SlotStats] = None, *,
                  stats_path: Optional[str] = None,
+                 gossip_paths: Optional[Sequence[str]] = None,
                  calibration_monitor=None):
         self._next_id = 0
         self._active: Dict[int, Any] = {}
@@ -228,6 +259,14 @@ class QueryRegistry:
             except (ValueError, OSError) as e:
                 warnings.warn(f"ignoring unreadable SlotStats snapshot "
                               f"{stats_path!r}: {e}")
+        if gossip_paths:
+            # fleet warm-start: peer workers' snapshots merged on top of
+            # whatever this worker already resumed (its own stats_path
+            # above) — stage ordering and park decisions then start from
+            # the fleet's pooled selectivity priors.  load_merged skips
+            # corrupt peers with a warning, same survival discipline as
+            # the single-snapshot resume.
+            self.slot_stats.merge(SlotStats.load_merged(gossip_paths))
 
     def touch(self) -> None:
         """Bump the epoch without changing the query set, forcing every

@@ -67,7 +67,23 @@ DEFAULT_RULES: Dict[str, Axis] = {
     "cache_batch": ("pod", "data"),
     "cache_seq": "model",
     "cache_kv": None,
+    "stream": "stream",              # fleet serving: leading camera-stream
+    #                                  axis of stacked per-stream batches
+    #                                  (distributed.multistream)
 }
+
+
+def stream_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """One-axis ``("stream",)`` mesh over the local devices, for sharding
+    stacked per-stream batches (``distributed.multistream``).  ``n_devices``
+    takes a prefix of ``jax.devices()`` (default: all of them)."""
+    devs = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(f"asked for {n_devices} devices, "
+                             f"have {len(devs)}")
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), ("stream",))
 
 
 def make_rules(overrides: Optional[Mapping[str, Axis]] = None) -> Dict[str, Axis]:

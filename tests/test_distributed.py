@@ -62,6 +62,74 @@ def test_rules_overrides():
     assert r["embed"] is None and SH.DEFAULT_RULES["embed"] == "data"
 
 
+def test_resolve_axis_tuple_shrink_fallback():
+    ma = {"pod": 2, "data": 16, "model": 16}
+    assert SH._resolve_axis(None, 128, ma) is None
+    assert SH._resolve_axis("model", 64, ma) == "model"
+    assert SH._resolve_axis("model", 10, ma) is None      # 10 % 16 != 0
+    assert SH._resolve_axis(("pod", "data"), 64, ma) == ("pod", "data")
+    # dim=2 can't cover pod*data=32: shrink to the ("pod",) prefix
+    assert SH._resolve_axis(("pod", "data"), 2, ma) == "pod"
+    # dim=1 shards nowhere: replicate
+    assert SH._resolve_axis(("pod", "data"), 1, ma) is None
+    # axes absent from the mesh drop out before the divisibility check
+    assert SH._resolve_axis(("ghost", "data"), 32, ma) == "data"
+    assert SH._resolve_axis(("ghost",), 32, ma) is None
+
+
+def test_spec_duplicate_axis_suppression_tuples():
+    mesh = _FakeMesh((2, 16), ("pod", "data"))
+    rules = SH.make_rules({"a": ("pod", "data"), "b": "data", "c": "pod"})
+    # b and c resolve to mesh axes a already consumed: both suppressed
+    s = SH.spec_for(("a", "b", "c"), (32, 16, 2), mesh, rules)
+    assert s == P(("pod", "data"))
+    # a tuple whose *any* member is taken is dropped whole, and the
+    # resulting trailing None is trimmed from the spec
+    s2 = SH.spec_for(("b", "a"), (16, 32), mesh, rules)
+    assert s2 == P("data")
+
+
+def test_shard_map_kwarg_probe_shim(monkeypatch):
+    seen = {}
+
+    def vma_style(fn, *, mesh, in_specs, out_specs, check_vma):
+        seen["kw"] = ("check_vma", check_vma)
+        return fn
+
+    def rep_style(fn, *, mesh, in_specs, out_specs, check_rep):
+        seen["kw"] = ("check_rep", check_rep)
+        return fn
+
+    f = lambda x: x                                           # noqa: E731
+    monkeypatch.setattr(jax, "shard_map", vma_style, raising=False)
+    assert SH.shard_map(f, mesh="m", in_specs=P(), out_specs=P(),
+                        check_vma=False) is f
+    assert seen["kw"] == ("check_vma", False)
+    # jax 0.4/0.5 spelling: the flag is forwarded as check_rep
+    monkeypatch.setattr(jax, "shard_map", rep_style, raising=False)
+    assert SH.shard_map(f, mesh="m", in_specs=P(), out_specs=P()) is f
+    assert seen["kw"] == ("check_rep", True)
+
+
+def test_shard_map_experimental_fallback(monkeypatch):
+    monkeypatch.delattr(jax, "shard_map", raising=False)
+    pytest.importorskip("jax.experimental.shard_map")
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("stream",))
+    f = SH.shard_map(lambda x: x * 2, mesh=mesh, in_specs=P(),
+                     out_specs=P(), check_vma=False)
+    np.testing.assert_array_equal(np.asarray(f(jnp.arange(4))),
+                                  np.arange(4) * 2)
+
+
+def test_stream_mesh():
+    m = SH.stream_mesh()
+    assert m.axis_names == ("stream",)
+    assert m.devices.size == jax.device_count()
+    assert SH.stream_mesh(1).devices.size == 1
+    with pytest.raises(ValueError, match="devices"):
+        SH.stream_mesh(jax.device_count() + 1)
+
+
 # ---------------------------------------------------------------------------
 # Gradient compression
 # ---------------------------------------------------------------------------
