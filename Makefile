@@ -46,6 +46,7 @@ bench:
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.multi_query_sharing --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.multi_stream_serving --smoke
+	PYTHONPATH=src $(PY) -m benchmarks.query_churn --smoke
 
 # measure the staged planner's stage-body costs on THIS backend and write
 # results/calibration/<backend>.json; the adaptive engine loads it on the

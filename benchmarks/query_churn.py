@@ -1,0 +1,263 @@
+"""Query-churn benchmark (PR 8 acceptance): registration-to-first-result
+latency and steady-state throughput under Poisson query arrival/retirement.
+
+The interactive-workload stress the incremental plan lifecycle exists
+for: a pool of query templates arrives and retires mid-stream (Poisson
+event counts per batch interval), and every registry epoch forces an
+engine rebuild at the next batch boundary.  Two configurations answer
+the same churn trace over the same synthetic stream:
+
+  baseline      every rebuild re-canonicalizes into a FRESH leaf table
+                and re-jits into a FRESH private step cache — the
+                pre-refactor lifecycle, where one registration stalls
+                all resident queries behind recompiles.
+  incremental   rebuilds share the registry-owned ``CanonicalLeafTable``
+                (stable slot ids, tombstoned retirements) and
+                ``StepCache`` (content-signature step keys), and arrival
+                bursts coalesce through ``QueryRegistry.batch()`` — a
+                rebuild whose distinct-template set recurred (duplicate
+                registrations included) re-hits every compiled step.
+
+Per churn event we record **registration-to-first-result latency**: the
+wall time from applying the registry mutation to the first batch of
+answers produced by the rebuilt engine (plan build + staging + any
+compiles + the batch itself).  Steady state is reached once the churn
+trace revisits step signatures it has compiled before; the acceptance
+pin is ``steady_state_compiles == 0`` for the incremental
+configuration — a step whose content signature was compiled once is
+never traced again, while the baseline re-traces every resident step
+on every rebuild — with the p50/p99 latency improvement and
+steady-state fps recorded alongside.
+
+Run:  PYTHONPATH=src python -m benchmarks.query_churn [--smoke]
+JSON: results/bench/query_churn.json
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+BATCH, C, G = 32, 6, 8
+TAU = 0.2
+ARRIVAL_RATE = 0.8          # Poisson mean arrivals per batch interval
+RETIRE_RATE = 0.6           # Poisson mean retirements per batch interval
+
+
+def _template_pool():
+    from repro.core import query as Q
+    return (
+        Q.And((Q.ClassCount(0, Q.Op.GE, 3), Q.Spatial(0, Q.Rel.LEFT, 1))),
+        Q.ClassCount(1, Q.Op.LE, 1),
+        Q.Or((Q.Count(Q.Op.GE, 10), Q.Region(2, (0, 0, 4, 4), 1))),
+        Q.Not(Q.ClassCount(2, Q.Op.GE, 2)),
+        Q.And((Q.Region(1, (2, 2, 6, 6), 1, 1),
+               Q.ClassCount(3, Q.Op.GE, 1))),
+        Q.Or((Q.Spatial(2, Q.Rel.ABOVE, 3), Q.Count(Q.Op.LE, 4))),
+    )
+
+
+def _stream_data(n_frames):
+    import jax.numpy as jnp
+    import numpy as np
+    r = np.random.default_rng(11)
+    return (jnp.asarray(r.poisson(0.5, (n_frames, C)).astype(np.float32)),
+            jnp.asarray((r.random((n_frames, G, G, C)) < 0.05)
+                        .astype(np.float32)))
+
+
+def _churn_trace(n_batches, seed=17):
+    """Deterministic Poisson arrival/retirement schedule over the pool:
+    per batch, a list of ('register', template_idx) / ('retire',) events.
+    Both configurations replay the identical trace."""
+    import numpy as np
+    r = np.random.default_rng(seed)
+    pool_n = len(_template_pool())
+    trace = []
+    for _ in range(n_batches):
+        events = []
+        for _ in range(r.poisson(ARRIVAL_RATE)):
+            events.append(("register", int(r.integers(0, pool_n))))
+        for _ in range(r.poisson(RETIRE_RATE)):
+            events.append(("retire",))
+        trace.append(events)
+    return trace
+
+
+def _run_config(incremental: bool, n_batches: int) -> dict:
+    import numpy as np
+    from repro.core import costmodel as CM
+    from repro.core.filters import FilterOutputs
+    from repro.core.plan import QueryPlan
+    from repro.core.streaming import QueryRegistry
+
+    pool = _template_pool()
+    counts, grid = _stream_data(n_batches * BATCH)
+    cm = CM.static_cost_model()
+    registry = QueryRegistry()
+    trace = _churn_trace(n_batches)
+
+    # resident floor: two templates always live, so the engine never
+    # empties and retirements always have something to take
+    floor = [registry.register(pool[0]), registry.register(pool[1])]
+    retirable: list = []
+
+    def build_engine(queries):
+        kw = {}
+        if incremental:
+            kw["leaf_table"] = registry.leaf_table
+        plan = QueryPlan(queries, tau=TAU, **kw)
+        staged = plan.build_staged(
+            None, cost_model=cm,
+            step_cache=registry.step_cache if incremental else None)
+        return plan, staged
+
+    epoch = -1
+    plan = staged = None
+    seen_sigs: set = set()      # plan signatures already built once
+    seen_keys: set = set()      # step signatures already compiled once
+    reg_latencies = []          # registration -> first batch of answers
+    redundant_compiles = 0      # traces for an already-seen step signature
+    steady_rebuilds = 0
+    rebuilds = 0
+    total_traces = 0
+    frames = 0
+    t_stream = 0.0
+
+    def run_batch(out):
+        """Evaluate one batch; return traces paid and how many of them
+        re-compiled a step signature compiled earlier in the run."""
+        before = staged._trace_count
+        np.asarray(staged.evaluate(out))
+        dt = staged._trace_count - before
+        new = [k for k in staged.step_cache.keys() if k not in seen_keys]
+        seen_keys.update(new)
+        return dt, dt - min(dt, len(new))
+
+    for b, events in enumerate(trace):
+        t_churn = None
+        if events:
+            t_churn = time.perf_counter()
+            ctx = registry.batch() if incremental else None
+            if ctx is not None:
+                ctx.__enter__()
+            for ev in events:
+                if ev[0] == "register":
+                    retirable.append(registry.register(pool[ev[1]]))
+                elif retirable:
+                    registry.retire(retirable.pop(0))
+            if ctx is not None:
+                ctx.__exit__(None, None, None)
+        idx = np.arange(b * BATCH, (b + 1) * BATCH)
+        out = FilterOutputs(counts=counts[idx], grid=grid[idx])
+        t0 = time.perf_counter()
+        if registry.epoch != epoch:
+            queries = tuple(q for _, q in registry.active())
+            plan, staged = build_engine(queries)
+            if plan.plan_sig in seen_sigs:
+                steady_rebuilds += 1
+            seen_sigs.add(plan.plan_sig)
+            dt, redo = run_batch(out)               # first answers
+            total_traces += dt
+            redundant_compiles += redo
+            rebuilds += 1
+            epoch = registry.epoch
+            if t_churn is not None:
+                reg_latencies.append(time.perf_counter() - t_churn)
+        else:
+            dt, redo = run_batch(out)
+            total_traces += dt
+            redundant_compiles += redo
+        t_stream += time.perf_counter() - t0
+        frames += BATCH
+
+    lat = np.sort(np.asarray(reg_latencies))
+
+    def pct(p):
+        if not lat.size:
+            return None
+        return float(lat[min(int(round(p / 100 * (lat.size - 1))),
+                             lat.size - 1)]) * 1e3
+
+    res = {"config": "incremental" if incremental else "baseline",
+           "batches": n_batches, "frames": frames,
+           "churn_events": int(sum(len(e) for e in trace)),
+           "rebuilds": rebuilds,
+           "rebuilds_on_recurring_sig": steady_rebuilds,
+           "steady_state_compiles": redundant_compiles,
+           "total_steps_compiled": total_traces,
+           "distinct_step_sigs": len(seen_keys),
+           "reg_to_first_result_p50_ms": pct(50),
+           "reg_to_first_result_p99_ms": pct(99),
+           "steady_state_fps": frames / t_stream}
+    if incremental:
+        res["step_cache"] = registry.step_cache.snapshot()
+        res["leaf_table"] = registry.leaf_table.snapshot()
+    return res
+
+
+def run(smoke: bool = False) -> dict:
+    from benchmarks.common import device_topology, emit, save_result
+
+    n_batches = 48 if smoke else 240
+    print(f"query churn: {n_batches} batches x {BATCH} frames, "
+          f"Poisson arrivals={ARRIVAL_RATE}/batch "
+          f"retirements={RETIRE_RATE}/batch (smoke={smoke})")
+    base = _run_config(False, n_batches)
+    incr = _run_config(True, n_batches)
+
+    p99_speedup = (base["reg_to_first_result_p99_ms"]
+                   / max(incr["reg_to_first_result_p99_ms"], 1e-9))
+    p50_speedup = (base["reg_to_first_result_p50_ms"]
+                   / max(incr["reg_to_first_result_p50_ms"], 1e-9))
+    fps_ratio = incr["steady_state_fps"] / base["steady_state_fps"]
+    payload = {"batch": BATCH, "smoke": smoke,
+               "arrival_rate": ARRIVAL_RATE, "retire_rate": RETIRE_RATE,
+               "baseline": base, "incremental": incr,
+               "reg_latency_p50_speedup": p50_speedup,
+               "reg_latency_p99_speedup": p99_speedup,
+               "steady_state_fps_ratio": fps_ratio,
+               "device_topology": device_topology()}
+    save_result("query_churn", payload)
+
+    emit("query_churn/baseline_reg_p99",
+         base["reg_to_first_result_p99_ms"] * 1e3,
+         f"p50_ms={base['reg_to_first_result_p50_ms']:.1f};"
+         f"compiles={base['total_steps_compiled']}")
+    emit("query_churn/incremental_reg_p99",
+         incr["reg_to_first_result_p99_ms"] * 1e3,
+         f"p50_ms={incr['reg_to_first_result_p50_ms']:.1f};"
+         f"compiles={incr['total_steps_compiled']};"
+         f"steady_compiles={incr['steady_state_compiles']}")
+    for r in (base, incr):
+        print(f"{r['config']:>12}: reg->result "
+              f"p50={r['reg_to_first_result_p50_ms']:.1f}ms "
+              f"p99={r['reg_to_first_result_p99_ms']:.1f}ms | "
+              f"{r['rebuilds']} rebuilds "
+              f"({r['rebuilds_on_recurring_sig']} recurring-sig) | "
+              f"{r['total_steps_compiled']} steps compiled, "
+              f"{r['steady_state_compiles']} redundant of "
+              f"{r['distinct_step_sigs']} distinct sigs | "
+              f"fps={r['steady_state_fps']:.0f}")
+    print(f"reg-latency speedup: p50 {p50_speedup:.2f}x, "
+          f"p99 {p99_speedup:.2f}x; steady-state fps ratio "
+          f"{fps_ratio:.2f}x")
+    ok = (incr["steady_state_compiles"] == 0
+          and base["steady_state_compiles"] > 0
+          and p50_speedup > 1.0)
+    print(f"acceptance (incremental compiles 0 steps for already-seen "
+          f"signatures, baseline recompiles them, and p50 "
+          f"registration latency improves): {'PASS' if ok else 'FAIL'}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale budget; still writes "
+                         "results/bench/query_churn.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

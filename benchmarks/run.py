@@ -25,6 +25,7 @@ BENCHES = [
     ("table3_query_speedup", "benchmarks.table3_query_speedup"),
     ("table4_cv_variance", "benchmarks.table4_cv_variance"),
     ("multi_query_sharing", "benchmarks.multi_query_sharing"),
+    ("query_churn", "benchmarks.query_churn"),
 ]
 
 

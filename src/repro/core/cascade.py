@@ -377,14 +377,20 @@ class MultiQueryCascade:
                  step_overhead: Optional[float] = None,
                  min_bucket: Optional[int] = None, cost_model=None,
                  spatial_body: str = "auto",
-                 calibration_monitor=None):
+                 calibration_monitor=None,
+                 leaf_table=None, step_cache=None):
         from repro.core import costmodel as CM
         from repro.core.plan import QueryPlan
         self.queries = tuple(queries)
         self.tau = tau
         self.adaptive = adaptive
         self.restage_every = restage_every
-        self.plan = QueryPlan(self.queries, tau=tau)
+        # ``leaf_table``/``step_cache`` are the epoch-surviving halves of
+        # the plan lifecycle (repro.core.stepcache): a registry-owned
+        # CanonicalLeafTable keeps slot ids stable across rebuilds, a
+        # registry-owned StepCache lets the rebuilt staged plan reuse
+        # compiled steps whose stage signatures didn't move.
+        self.plan = QueryPlan(self.queries, tau=tau, leaf_table=leaf_table)
         if not adaptive:
             # a forgotten adaptive=True would otherwise silently leave the
             # shared population store unread AND unfed (and the cost model
@@ -400,6 +406,9 @@ class MultiQueryCascade:
                 raise ValueError("calibration_monitor is only fed by the "
                                  "adaptive cascade's staged batches; pass "
                                  "adaptive=True")
+            if step_cache is not None:
+                raise ValueError("step_cache holds the adaptive cascade's "
+                                 "compiled staged steps; pass adaptive=True")
         if restage_every < 1:
             raise ValueError(f"restage_every must be >= 1, "
                              f"got {restage_every}")
@@ -415,7 +424,8 @@ class MultiQueryCascade:
         self._staged = (self.plan.build_staged(self.slot_stats,
                                                min_bucket=min_bucket,
                                                cost_model=self.cost_model,
-                                               spatial_body=spatial_body)
+                                               spatial_body=spatial_body,
+                                               step_cache=step_cache)
                         if adaptive else None)
         # drift watch: measured models are monitored by default (one
         # perf_counter pair + an EWMA update per staged batch); pass a
@@ -487,8 +497,8 @@ class MultiQueryCascade:
         return m
 
     def _flush_exhaustive_counts(self, counts: jax.Array, B: int) -> None:
-        self.slot_stats.observe_many(self.plan.slot_keys, np.asarray(counts),
-                                     B, canonical=True)
+        self.slot_stats.observe_many(self.plan.live_slot_keys,
+                                     np.asarray(counts), B, canonical=True)
 
     def masks(self, out: FilterOutputs,
               presumed_decided=None) -> jax.Array:

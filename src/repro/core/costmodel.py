@@ -694,9 +694,9 @@ def calibrate(*, batch: int = 256, grid: int = 16, classes: int = 8,
             Q.Or((Q.Spatial(i % C, Q.Rel.LEFT, (i + 1) % C),
                   Q.Region(i % C, (0, 0, G // 2, G), 1))))))
     ref_plan = QueryPlan(ref_queries, tau=tau)
-    known = np.ones(ref_plan.n_unique_leaves, bool)
+    known = np.ones(ref_plan.n_slot_cols, bool)
     leaf_vals = jnp.asarray(
-        rng.random((B, ref_plan.n_unique_leaves)) < 0.5)
+        rng.random((B, ref_plan.n_slot_cols)) < 0.5)
 
     @jax.jit
     def step_overhead_body(lv):

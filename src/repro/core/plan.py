@@ -144,10 +144,170 @@ from repro.core import costmodel as CM
 from repro.core import query as Q
 from repro.core.cascade import compact_indices
 from repro.core.filters import FilterOutputs
+from repro.core.stepcache import StepCache, content_digest
 from repro.kernels import spatial_predicate as SP
 
 _I32_MAX = np.iinfo(np.int32).max
 _I32_MIN = np.iinfo(np.int32).min
+
+
+class CanonicalLeafTable:
+    """Persistent canonical-predicate -> slot map with stable slot ids.
+
+    The incremental half of the plan lifecycle: a ``QueryPlan`` built
+    against a shared table (``QueryPlan(..., leaf_table=...)`` — the
+    ``QueryRegistry`` owns one the same way it owns ``SlotStats``) keeps
+    slot ids stable across registry epochs, so a query registering or
+    retiring is a *delta* against the table instead of a re-numbering of
+    every leaf:
+
+    - ``sync(queries)`` diffs the new query multiset against the last
+      synced one at canonical-tree granularity (each tree canonicalized
+      once ever, memoized) — only the changed trees' leaves touch the
+      refcounts, so a K-query delta over an N-query population is O(K),
+      not O(N).
+    - A leaf whose refcount drops to zero is **tombstoned**, not freed:
+      it keeps its slot id, so re-registering the same predicate
+      resurrects the slot — and every compiled-step signature that
+      mentions it — instead of allocating a fresh column.
+    - Tombstones are compacted (dead columns dropped, live slots
+      renumbered densely, ``version`` bumped so plan signatures move)
+      only when the dead fraction of the slot space crosses
+      ``compact_threshold`` — fragmentation is bounded without paying a
+      global renumber per retirement.
+
+    Slot ids are allocated first-seen in query order, exactly like the
+    pre-table planner, so a fresh private table (what a standalone
+    ``QueryPlan`` builds) reproduces the legacy slot layout verbatim.
+    """
+
+    def __init__(self, *, compact_threshold: float = 0.5):
+        if not 0.0 < compact_threshold <= 1.0:
+            raise ValueError(f"compact_threshold must be in (0, 1], "
+                             f"got {compact_threshold}")
+        self.compact_threshold = compact_threshold
+        self._slots: Dict[Q.Predicate, int] = {}    # key -> slot (live
+        self._keys: List[Q.Predicate] = []          # AND tombstoned)
+        self._refs: Dict[Q.Predicate, int] = {}     # leaf-occurrence refs
+        self._canon: Dict[Q.Predicate, Q.Predicate] = {}   # query memo
+        self._synced: "Dict[Q.Predicate, int]" = {}  # canon tree -> mult
+        self.version = 0            # bumps on compaction (slot ids moved)
+        self.registrations = 0      # new slots ever allocated
+        self.retirements = 0        # slots that hit refcount 0
+        self.resurrections = 0      # tombstones brought back live
+        self.compactions = 0
+
+    def canonical(self, query: Q.Predicate) -> Q.Predicate:
+        """Memoized ``Q.canonicalize`` — each distinct query tree is
+        canonicalized once per table lifetime, however many epochs
+        re-register it."""
+        tree = self._canon.get(query)
+        if tree is None:
+            tree = Q.canonicalize(query)
+            self._canon[query] = tree
+        return tree
+
+    @property
+    def width(self) -> int:
+        """Slot-column count (live + tombstoned) — the leaf-matrix width
+        of every plan built against this table."""
+        return len(self._keys)
+
+    @property
+    def n_live(self) -> int:
+        return sum(1 for k in self._keys if self._refs.get(k, 0) > 0)
+
+    @property
+    def n_tombstones(self) -> int:
+        return len(self._keys) - self.n_live
+
+    def is_live(self, slot: int) -> bool:
+        return self._refs.get(self._keys[slot], 0) > 0
+
+    def slot_of(self, key: Q.Predicate) -> int:
+        return self._slots[key]
+
+    def live_items(self) -> List[Tuple[Q.Predicate, int]]:
+        """(canonical key, slot) pairs of live slots, slot-ordered."""
+        return [(k, self._slots[k]) for k in self._keys
+                if self._refs.get(k, 0) > 0]
+
+    def sync(self, queries: Sequence[Q.Predicate]) -> None:
+        """Make the table's refcounts reflect ``queries`` (a multiset).
+
+        The delta-registration path: trees present in both the old and
+        new population are untouched; retired trees decrement their
+        leaves (tombstoning zeros), new trees allocate/resurrect slots
+        first-seen in query order.  May compact (see class docstring) —
+        callers build the plan *after* sync so they see the final ids."""
+        trees = [self.canonical(q) for q in queries]
+        new: Dict[Q.Predicate, int] = {}
+        for t in trees:
+            new[t] = new.get(t, 0) + 1
+        # retired trees first: a slot freed here can be resurrected (not
+        # re-allocated) by a new tree registering the same predicate
+        for tree, old_mult in self._synced.items():
+            drop = old_mult - new.get(tree, 0)
+            if drop <= 0:
+                continue
+            for leaf in Q.leaves(tree):
+                key = Q.leaf_key(leaf)
+                r = self._refs[key] - drop
+                assert r >= 0, f"refcount underflow for {key!r}"
+                self._refs[key] = r
+                if r == 0:
+                    self.retirements += 1
+        seen: set = set()
+        for tree in trees:
+            add = new[tree] - self._synced.get(tree, 0)
+            if add <= 0 or tree in seen:
+                continue
+            seen.add(tree)
+            for leaf in Q.leaves(tree):
+                key = Q.leaf_key(leaf)
+                if key not in self._slots:
+                    self._slots[key] = len(self._keys)
+                    self._keys.append(key)
+                    self._refs[key] = 0
+                    self.registrations += 1
+                elif self._refs.get(key, 0) == 0:
+                    self.resurrections += 1
+                self._refs[key] += add
+        self._synced = new
+        self.maybe_compact()
+
+    def maybe_compact(self) -> bool:
+        """Drop tombstoned columns when they exceed ``compact_threshold``
+        of the slot space.  Renumbers live slots densely (stable order),
+        bumps ``version`` — plans built before a compaction keep working
+        (they hold their own baked arrays) but their step signatures no
+        longer match newly built plans', which is exactly right: the
+        column layout changed."""
+        width = len(self._keys)
+        dead = [k for k in self._keys if self._refs.get(k, 0) == 0]
+        if not dead or len(dead) / max(width, 1) <= self.compact_threshold:
+            return False
+        live = [k for k in self._keys if self._refs.get(k, 0) > 0]
+        self._keys = live
+        self._slots = {k: i for i, k in enumerate(live)}
+        for k in dead:
+            del self._refs[k]
+        self.version += 1
+        self.compactions += 1
+        return True
+
+    def snapshot(self) -> Dict[str, int]:
+        return {"width": self.width, "live": self.n_live,
+                "tombstones": self.n_tombstones, "version": self.version,
+                "registrations": self.registrations,
+                "retirements": self.retirements,
+                "resurrections": self.resurrections,
+                "compactions": self.compactions}
+
+    def __repr__(self) -> str:
+        return (f"CanonicalLeafTable(width={self.width}, "
+                f"live={self.n_live}, tombstones={self.n_tombstones}, "
+                f"version={self.version})")
 
 
 def _count_bounds(op: Q.Op, value: int, tol: int) -> Tuple[int, int]:
@@ -191,7 +351,9 @@ class QueryPlan:
     executor (see module docstring §4).
     """
 
-    def __init__(self, queries: Sequence[Q.Predicate], *, tau: float = 0.2):
+    def __init__(self, queries: Sequence[Q.Predicate], *, tau: float = 0.2,
+                 leaf_table: Optional[CanonicalLeafTable] = None,
+                 prev: Optional["QueryPlan"] = None):
         if not queries:
             raise ValueError("QueryPlan needs at least one query")
         self.queries = tuple(queries)
@@ -203,36 +365,72 @@ class QueryPlan:
                     f"repro.core.temporal (TemporalProgram strips them "
                     f"and plans their frame-level sub-predicates): {q!r}")
         self.tau = tau
+        # delta path: ``prev=`` inherits the previous epoch's table (and
+        # through it the canonicalization memo + stable slot ids);
+        # ``leaf_table=`` shares a registry-owned table directly.  A
+        # standalone plan builds a private table — same code path, and a
+        # fresh table's first-seen allocation reproduces the legacy
+        # dense slot layout exactly.
+        if leaf_table is None and prev is not None:
+            leaf_table = prev.leaf_table
+        self.leaf_table = (leaf_table if leaf_table is not None
+                           else CanonicalLeafTable())
 
-        # ---- pass 1: canonical leaf slots (dedup across all queries) ----
-        self._slots: Dict[Q.Predicate, int] = {}
-        self.n_total_leaves = 0
-        for q in self.queries:
-            for leaf in Q.leaves(q):
-                self.n_total_leaves += 1
-                key = Q.leaf_key(leaf)
-                if key not in self._slots:
-                    self._slots[key] = len(self._slots)
-        self.n_unique_leaves = len(self._slots)
-        self.slot_keys: List[Q.Predicate] = [None] * self.n_unique_leaves
-        for key, slot in self._slots.items():
+        # ---- pass 1: canonical leaf slots (delta-sync on the table) ----
+        table = self.leaf_table
+        table.sync(self.queries)
+        self.n_total_leaves = sum(
+            len(Q.leaves(q)) for q in self.queries)
+        # n_unique_leaves stays the LIVE unique count (the sharing-factor
+        # denominator); n_slot_cols is the leaf-matrix width — equal on a
+        # private table, wider on a shared one carrying tombstones
+        self.n_slot_cols = table.width
+        live = table.live_items()                   # (key, slot) pairs
+        self.n_unique_leaves = len(live)
+        self.slot_keys: List[Optional[Q.Predicate]] = \
+            [None] * self.n_slot_cols               # None == tombstone
+        for key, slot in live:
             self.slot_keys[slot] = key
+        self.live_slots = np.array([slot for _, slot in live], np.int64) \
+            if live else np.zeros(0, np.int64)
+
+        # ---- distinct-tree dedup: compile each canonical query tree
+        # once.  Steps, propagation state, and the incidence program all
+        # live in *distinct* space (D columns); per-qid answers are an
+        # O(1) gather through ``dup_map`` OUTSIDE the jitted steps — so
+        # registering another copy of an already-resident template
+        # changes neither the program nor any step signature.  Distinct
+        # order is canonical (sorted by repr), not first-seen: retiring
+        # one of several duplicates then never perturbs the program.
+        trees = [table.canonical(q) for q in self.queries]
+        distinct = sorted(set(trees), key=repr)
+        tree_to_di = {t: i for i, t in enumerate(distinct)}
+        self.dup_map = np.array([tree_to_di[t] for t in trees], np.int64)
+        self.n_distinct = len(distinct)
+        self._distinct_trees = tuple(distinct)
 
         # query <-> slot incidence, the population weight behind adaptive
-        # ordering and the undecided-set stage-skip test
+        # ordering; the stage-skip test uses the distinct-space variant
         self.query_slot_incidence = np.zeros(
-            (len(self.queries), self.n_unique_leaves), bool)
-        for qi, q in enumerate(self.queries):
-            for leaf in Q.leaves(q):
-                self.query_slot_incidence[qi, self._slots[Q.leaf_key(leaf)]] \
-                    = True
+            (len(self.queries), self.n_slot_cols), bool)
+        for qi, tree in enumerate(trees):
+            for leaf in Q.leaves(tree):
+                self.query_slot_incidence[qi, table.slot_of(
+                    Q.leaf_key(leaf))] = True
+        self.distinct_slot_incidence = np.zeros(
+            (self.n_distinct, self.n_slot_cols), bool)
+        for di, tree in enumerate(distinct):
+            for leaf in Q.leaves(tree):
+                self.distinct_slot_incidence[di, table.slot_of(
+                    Q.leaf_key(leaf))] = True
 
-        # ---- lower slots by kind into grouped numpy index tables ----
+        # ---- lower LIVE slots by kind into grouped numpy index tables
+        # (tombstoned columns are never evaluated, never read) ----
         cnt: List[Tuple[int, int, int, int]] = []    # (slot, cls|C, lo, hi)
         spa: List[Tuple[int, int, int, bool, int]] = []  # slot,a,b,row?,r
         reg: Dict[int, List[Tuple[int, int, Tuple, int]]] = defaultdict(list)
         self._needs_grid = False
-        for leaf, slot in self._slots.items():
+        for leaf, slot in live:
             if isinstance(leaf, Q.Count):
                 lo, hi = _count_bounds(leaf.op, leaf.value, leaf.tolerance)
                 cnt.append((slot, -1, lo, hi))
@@ -271,17 +469,24 @@ class QueryPlan:
             minc = np.array([i[3] for i in items], np.float32)
             self._reg.append((radius, slots, cls, rects, minc))
 
-        # ---- pass 2: levelized node program over NNF trees ----
-        L = self.n_unique_leaves
+        # ---- pass 2: levelized node program over distinct NNF trees ----
+        L = self.n_slot_cols
         internal: List[Tuple[bool, List[Tuple[int, bool]]]] = []
         node_level: Dict[int, int] = {}
+        memo: Dict[Q.Predicate, Tuple[int, bool, int]] = {}
 
         def compile_node(node) -> Tuple[int, bool, int]:
-            """-> (column, negated, level); columns 0..L-1 are leaf slots."""
+            """-> (column, negated, level); columns 0..L-1 are leaf slots.
+            Memoized on the (hashable, canonical) subtree, so a
+            connective shared across distinct queries compiles to one
+            internal column."""
+            hit = memo.get(node)
+            if hit is not None:
+                return hit
             if isinstance(node, Q.Not):          # NNF: term is a leaf
                 col, neg, lvl = compile_node(node.term)
-                return col, not neg, lvl
-            if isinstance(node, (Q.And, Q.Or)):
+                res = (col, not neg, lvl)
+            elif isinstance(node, (Q.And, Q.Or)):
                 if not node.terms:
                     raise ValueError(f"empty connective: {node!r}")
                 ch = [compile_node(t) for t in node.terms]
@@ -290,11 +495,14 @@ class QueryPlan:
                 internal.append((isinstance(node, Q.And),
                                  [(c[0], c[1]) for c in ch]))
                 node_level[col] = lvl
-                return col, False, lvl
-            return self._slots[Q.leaf_key(node)], False, 0
+                res = (col, False, lvl)
+            else:
+                res = (table.slot_of(Q.leaf_key(node)), False, 0)
+            memo[node] = res
+            return res
 
-        roots = [compile_node(Q.to_nnf(q)) for q in self.queries]
-        self._roots = np.array([r[0] for r in roots])
+        roots = [compile_node(Q.to_nnf(t)) for t in distinct]
+        self._roots = np.array([r[0] for r in roots])       # (D,)
         self._root_neg = np.array([r[1] for r in roots], bool)
         self.n_internal = len(internal)
 
@@ -323,6 +531,19 @@ class QueryPlan:
                 child_neg=np.array(child_neg, bool),
                 incidence=inc,
                 required=np.array(required, np.float32)))
+
+        # content signature of everything a compiled step bakes from the
+        # PLAN side (the stage payloads get their own signatures): the
+        # incidence program, distinct roots, leaf-matrix width, tau.
+        # Duplicate registrations of a resident template change none of
+        # it, so a rebuilt plan with an unchanged signature hits every
+        # cached step of the previous epoch verbatim.
+        sig_parts: List = [L, self.n_internal, self.n_distinct, self.tau,
+                           self._roots, self._root_neg]
+        for lev in self._levels:
+            sig_parts.extend([lev.node_ids, lev.child_idx, lev.child_neg,
+                              lev.incidence, lev.required])
+        self.plan_sig = content_digest(*sig_parts)
 
     # -- grouped leaf evaluation ------------------------------------------
 
@@ -425,15 +646,15 @@ class QueryPlan:
                 parts.append(self._region_sat_values(occ, cls, rects, minc))
                 cols.append(slots)
         order = np.concatenate(cols)
-        inv = np.empty(self.n_unique_leaves, np.int64)
-        inv[order] = np.arange(order.size)
-        return jnp.concatenate(parts, axis=1)[:, inv]
+        inv = np.zeros(self.n_slot_cols, np.int64)
+        inv[order] = np.arange(order.size)     # tombstoned columns keep
+        return jnp.concatenate(parts, axis=1)[:, inv]   # 0 — never read
 
     # -- full evaluation --------------------------------------------------
 
     def _assemble(self, leaf: jax.Array) -> jax.Array:
         """(B, L) bool leaf matrix -> (B, N) root masks via the levelized
-        incidence program."""
+        incidence program (distinct columns expanded through dup_map)."""
         leaf = leaf.astype(jnp.float32)
         B = leaf.shape[0]
         vals = jnp.concatenate(
@@ -445,8 +666,8 @@ class QueryPlan:
                               jnp.asarray(lev.incidence))
             newv = (sums >= jnp.asarray(lev.required) - 0.5)
             vals = vals.at[:, lev.node_ids].set(newv.astype(jnp.float32))
-        masks = vals[:, self._roots] > 0.5
-        return masks ^ jnp.asarray(self._root_neg)
+        masks = (vals[:, self._roots] > 0.5) ^ jnp.asarray(self._root_neg)
+        return masks[:, self.dup_map]                    # (B, D) -> (B, N)
 
     def evaluate(self, out: FilterOutputs) -> jax.Array:
         """(B, N) per-query candidate masks from one shared leaf pass."""
@@ -454,11 +675,19 @@ class QueryPlan:
 
     def evaluate_with_counts(self, out: FilterOutputs
                              ) -> Tuple[jax.Array, jax.Array]:
-        """``(masks (B, N), per-slot pass counts (L,))`` in one program —
+        """``(masks (B, N), per-LIVE-slot pass counts)`` in one program —
         the exhaustive path of the adaptive cascade uses this so the
-        population statistics keep learning while staging is parked."""
+        population statistics keep learning while staging is parked.
+        Counts align with ``live_slot_keys`` (tombstoned columns are
+        never evaluated and feed no ledger)."""
         leaf = self.leaf_values(out)
-        return self._assemble(leaf), leaf.sum(0)
+        return self._assemble(leaf), leaf[:, self.live_slots].sum(0)
+
+    @property
+    def live_slot_keys(self) -> List[Q.Predicate]:
+        """Canonical keys of live slots, aligned with
+        ``evaluate_with_counts``'s count vector."""
+        return [self.slot_keys[s] for s in self.live_slots]
 
     # -- three-valued propagation (staged execution) ----------------------
 
@@ -472,7 +701,21 @@ class QueryPlan:
         to 0 (lower bound) then to 1 (upper bound).  And/Or gates are
         monotone in their children, so the two runs bracket the true
         value exactly and agreement means *decided* (``value`` is then
-        the exact answer, bit-identical to ``evaluate``)."""
+        the exact answer, bit-identical to ``evaluate``).
+
+        The program itself runs over *distinct* canonical query columns
+        (the staged steps stay in that space — ``_propagate_distinct``);
+        this public entry point expands to per-qid columns through
+        ``dup_map``, preserving the (B, N) contract the cost-model
+        calibration and external callers rely on."""
+        lo, dec = self._propagate_distinct(leaf_vals, known)
+        return lo[:, self.dup_map], dec[:, self.dup_map]
+
+    def _propagate_distinct(self, leaf_vals: jax.Array,
+                            known: jax.Array
+                            ) -> Tuple[jax.Array, jax.Array]:
+        """``propagate_bounds`` in distinct-query space: (B, D) value and
+        decided columns, one per distinct canonical tree."""
         leaf = leaf_vals.astype(jnp.float32)
         B = leaf.shape[0]
         known_ext = jnp.concatenate(
@@ -546,11 +789,16 @@ class QueryPlan:
                      order: Optional[Sequence[int]] = None,
                      min_bucket: Optional[int] = None,
                      cost_model: Optional[CM.CostModel] = None,
-                     spatial_body: str = "auto") -> "StagedQueryPlan":
-        """Adaptive stage-by-stage executor over this plan's lowering."""
+                     spatial_body: str = "auto",
+                     step_cache: Optional[StepCache] = None
+                     ) -> "StagedQueryPlan":
+        """Adaptive stage-by-stage executor over this plan's lowering.
+        ``step_cache`` shares a registry-owned compiled-step cache across
+        epoch rebuilds (default: a fresh private cache)."""
         return StagedQueryPlan(self, stats, order=order,
                                min_bucket=min_bucket, cost_model=cost_model,
-                               spatial_body=spatial_body)
+                               spatial_body=spatial_body,
+                               step_cache=step_cache)
 
     @property
     def sharing_factor(self) -> float:
@@ -688,7 +936,8 @@ class StagedQueryPlan:
                  order: Optional[Sequence[int]] = None,
                  min_bucket: Optional[int] = None,
                  cost_model: Optional[CM.CostModel] = None,
-                 spatial_body: str = "auto"):
+                 spatial_body: str = "auto",
+                 step_cache: Optional[StepCache] = None):
         self.plan = plan
         self.cost_model = (cost_model if cost_model is not None
                            else CM.static_cost_model())
@@ -707,11 +956,14 @@ class StagedQueryPlan:
         self.spatial_body = spatial_body
         self._last_batch: Optional[int] = None
         self.stages = plan.stage_descriptors(self.cost_model)
-        # (N, n_stages) — does query q own a slot in stage s?
+        # (D, n_stages) — does distinct query column d own a slot in
+        # stage s?  Steps and the skip test run in distinct space.
         self._uses_stage = np.stack(
-            [plan.query_slot_incidence[:, st.slots].any(1)
+            [plan.distinct_slot_incidence[:, st.slots].any(1)
              for st in self.stages], axis=1)
         # population weight per slot: how many registered queries read it
+        # (qid space on purpose — duplicate registrations of a template
+        # are real demand and must weight the ordering benefit)
         self._slot_weight = plan.query_slot_incidence.sum(0).astype(float)
         self.order, self._perms = self._staging_order(stats)
         self._forced_order = order is not None
@@ -720,31 +972,75 @@ class StagedQueryPlan:
                 raise ValueError(f"order must permute stages "
                                  f"0..{len(self.stages) - 1}, got {order!r}")
             self.order = list(order)
-        # fused step cache: (stage, frozenset(stages already run), bucket
-        # or None for a full-batch step) -> fn.  LRU-bounded: the key
-        # space is exponential in the stage count in the worst case
-        # (every undecided pattern is a distinct prefix, times the
-        # power-of-two bucket sizes), but real traffic revisits a handful
-        # of prefixes and one or two buckets — evicting cold entries caps
-        # compiled-program memory over a long-running stream at the price
-        # of a re-trace if an evicted pattern ever recurs.
-        self._steps: "OrderedDict[Tuple[int, frozenset, Optional[int]]," \
-                     " Callable]" = OrderedDict()
-        self.step_cache_max = 64
-        self._trace_count = 0       # lifetime step-cache misses (traces)
+        # compiled-step cache: signature-keyed (see repro.core.stepcache),
+        # so it can be SHARED across plan instances — a registry-owned
+        # cache survives epoch rebuilds and a rebuilt plan whose stage
+        # signatures didn't move reuses every compiled step verbatim.
+        # Without one, a private cache reproduces the per-plan behaviour.
+        self.step_cache = (step_cache if step_cache is not None
+                           else StepCache())
+        self._stage_sigs = [self._stage_sig(si)
+                            for si in range(len(self.stages))]
+        self._prefix_sigs: Dict[frozenset, str] = {}
+        self._wrap_refs: List = []  # keep unsigned shard_wraps alive so
+        #                             their id()-based keys stay unique
+        self._trace_count = 0       # lifetime traces paid by THIS plan
         self.last_report: Optional[StageReport] = None
         self._pending: Optional[Tuple[
             List[Tuple[np.ndarray, jax.Array, int]],
             List[Tuple[str, int, int, Optional[int], Optional[int]]]]] = None
 
+    @property
+    def step_cache_max(self) -> int:
+        """Capacity of the (possibly shared) compiled-step cache."""
+        return self.step_cache.capacity
+
+    # -- step signatures --------------------------------------------------
+
+    def _stage_sig(self, si: int) -> str:
+        """Digest of everything stage ``si``'s body bakes: kind, the
+        slot-permuted payload arrays, and the slot columns it scatters
+        into.  Content-addressed — two epochs' plans over the same leaf
+        table produce equal signatures for a stage whose leaf content
+        (and within-stage order) didn't change, whatever their stage
+        *indices* are."""
+        st = self.stages[si]
+        perm = self._perms[si]
+        parts: List = [st.kind, st.radius]
+        for p in st.payload:
+            if isinstance(p, np.ndarray):
+                parts.append(p[perm])
+            else:
+                parts.append(p)                  # region radius scalar
+        parts.append(st.slots[perm])
+        return content_digest(*parts)
+
+    def _prefix_sig(self, ran: frozenset) -> str:
+        """Digest of the SET of slot columns already known when a step
+        runs.  Steps bake ``known`` as a slot-set union, so the
+        signature is order-free: two stage orders reaching the same
+        known-set share one compiled step, and a re-permutation inside
+        an earlier stage never invalidates later stages' steps."""
+        sig = self._prefix_sigs.get(ran)
+        if sig is None:
+            slots = np.zeros(0, np.int64) if not ran else np.unique(
+                np.concatenate([self.stages[sj].slots for sj in ran]))
+            sig = content_digest(slots)
+            self._prefix_sigs[ran] = sig
+        return sig
+
     # -- ordering ---------------------------------------------------------
 
     def _slot_rates(self, stats) -> np.ndarray:
-        """(L,) prior-smoothed pass rate per slot, quantized so a stable
-        order does not flap (and re-jit) on statistical noise."""
-        if stats is None:
-            return np.full(self.plan.n_unique_leaves, 0.5)
-        rates = stats.pass_rates(self.plan.slot_keys, canonical=True)
+        """(L,) prior-smoothed pass rate per slot column, quantized so a
+        stable order does not flap (and re-jit) on statistical noise.
+        Tombstoned columns (no canonical key) sit at the neutral prior —
+        they appear in no stage, so the value is never consulted."""
+        rates = np.full(self.plan.n_slot_cols, 0.5)
+        if stats is None or self.plan.live_slots.size == 0:
+            return rates
+        rates[self.plan.live_slots] = stats.pass_rates(
+            self.plan.live_slot_keys, canonical=True)
         return np.round(rates, 3)
 
     def _staging_order(self, stats
@@ -800,12 +1096,19 @@ class StagedQueryPlan:
 
     def restage(self, stats) -> bool:
         """Re-sort stages/slots from the population stats.  Returns True
-        when anything changed.  A stage whose within-stage slot order
-        moved re-jits lazily (its cached steps are dropped); a pure stage
-        re-ordering keeps every compiled step — step identity is (stage,
-        set of stages already run), not position.  An explicit ``order=``
-        given at construction is sticky: restage only refreshes the
-        within-stage slot permutations, never the forced stage order."""
+        when anything changed.  Nothing is ever *dropped* from the step
+        cache here: step identity is content-signed (stage signature +
+        known-slot-set prefix), so a stage whose within-stage slot order
+        moved simply starts producing a new signature and re-jits
+        lazily, a pure stage re-ordering keeps hitting every compiled
+        step, and a permutation that flips back re-hits the retained
+        old-signature entries instead of paying a fresh trace (rate
+        noise oscillating across the quantization boundary used to
+        re-trace per flip — the per-stage-index invalidation this
+        replaces also wiped steps whose leaf content never changed).
+        An explicit ``order=`` given at construction is sticky: restage
+        only refreshes the within-stage slot permutations, never the
+        forced stage order."""
         order, perms = self._staging_order(stats)
         if self._forced_order:
             order = self.order
@@ -813,8 +1116,7 @@ class StagedQueryPlan:
         for si in range(len(self.stages)):
             if not np.array_equal(perms[si], self._perms[si]):
                 self._perms[si] = perms[si]
-                self._steps = OrderedDict(
-                    (k, f) for k, f in self._steps.items() if k[0] != si)
+                self._stage_sigs[si] = self._stage_sig(si)
                 changed = True
         self.order = order
         return changed
@@ -897,17 +1199,22 @@ class StagedQueryPlan:
         ``body`` (from ``_body_for``) selects the compacted spatial
         stage's evaluation body and is part of the cache key: both
         variants stay jitted side by side, so the crossover decision
-        flipping between bucket sizes never re-traces."""
-        key = (si, ran, bucket, body)
-        step = self._steps.get(key)
+        flipping between bucket sizes never re-traces.
+
+        Keys are content signatures (plan program + stage payload +
+        known-slot set), never stage indices or object identity, so a
+        shared registry-owned cache serves rebuilt plans across epochs —
+        and can never serve a step whose baked content changed."""
+        key = ("step", self.plan.plan_sig, self._stage_sigs[si],
+               self._prefix_sig(ran), bucket, body)
+        step = self.step_cache.get(key)
         if step is not None:
-            self._steps.move_to_end(key)
             return step
         plan = self.plan
         stage_body = self._stage_body(si)
         slots = self._stage_slots(si)
         spatial = self.stages[si].kind == "spatial"
-        known = np.zeros(plan.n_unique_leaves, bool)
+        known = np.zeros(plan.n_slot_cols, bool)
         for sj in ran:
             known[self.stages[sj].slots] = True
         known[slots] = True
@@ -915,15 +1222,16 @@ class StagedQueryPlan:
         if bucket is None:
             # full-batch step: every row is (re)evaluated and the bounds
             # derive from leaf_vals alone, so no prior value/decided
-            # state is threaded in.  ``presumed`` is a traced (N,) bool
-            # mask of query columns the caller already decided (temporal
-            # window short-circuit): it joins the undecided reductions
-            # only — the raw decided state stays propagation-derived —
-            # so presumption changing between batches never re-traces.
+            # state is threaded in.  ``presumed`` is a traced (D,) bool
+            # mask of distinct query columns the caller already decided
+            # (temporal window short-circuit): it joins the undecided
+            # reductions only — the raw decided state stays
+            # propagation-derived — so presumption changing between
+            # batches never re-traces.
             def step_fn(out, leaf_vals, presumed):
                 vals = stage_body(out)                     # (B, k) bool
                 leaf_vals = leaf_vals.at[:, slots].set(vals)
-                value, decided = plan.propagate_bounds(leaf_vals, known)
+                value, decided = plan._propagate_distinct(leaf_vals, known)
                 dec = decided | presumed[None, :]
                 undec = jnp.concatenate([~dec.all(0), ~dec.all(1)])
                 return leaf_vals, value, decided, undec, vals.sum(0)
@@ -934,7 +1242,7 @@ class StagedQueryPlan:
                         else stage_body(out, rows=idx))    # (R, k) bool
                 sub = leaf_vals[idx].at[:, slots].set(vals)
                 leaf_vals = leaf_vals.at[idx].set(sub)
-                v, dec = plan.propagate_bounds(sub, known)
+                v, dec = plan._propagate_distinct(sub, known)
                 value = value.at[idx].set(v)
                 decided = decided.at[idx].set(dec)
                 dec_eff = decided | presumed[None, :]
@@ -946,9 +1254,7 @@ class StagedQueryPlan:
 
         step = jax.jit(step_fn)
         self._trace_count += 1
-        self._steps[key] = step
-        while len(self._steps) > self.step_cache_max:
-            self._steps.popitem(last=False)              # evict coldest
+        self.step_cache.put(key, step)
         return step
 
     # -- execution --------------------------------------------------------
@@ -1000,11 +1306,21 @@ class StagedQueryPlan:
             self.last_report = report
             self._pending = ([], stage_rows)
             return jnp.zeros((B, N), bool)
-        presumed_dev = jnp.asarray(presumed)
-        leaf_vals = jnp.zeros((B, plan.n_unique_leaves), bool)
-        value = jnp.zeros((B, N), bool)
-        decided = jnp.zeros((B, N), bool)
-        undecided_cols = ~presumed
+        # Distinct-query space: stage state, propagation, and the skip /
+        # stop tests run over the D distinct canonical trees; expansion
+        # to the N query columns happens once at return (outside every
+        # jitted step), so duplicate registrations of a template never
+        # change a traced program.  A distinct column is presumed only
+        # when ALL the query columns mapping to it are presumed — a
+        # shared column with one live subscriber must keep evaluating.
+        D = plan.n_distinct
+        presumed_d = np.ones(D, bool)
+        np.logical_and.at(presumed_d, plan.dup_map, presumed)
+        presumed_dev = jnp.asarray(presumed_d)
+        leaf_vals = jnp.zeros((B, plan.n_slot_cols), bool)
+        value = jnp.zeros((B, D), bool)
+        decided = jnp.zeros((B, D), bool)
+        undecided_cols = ~presumed_d
         undecided_rows = np.ones(B, bool)
         report = StageReport(order=[self.stages[s].name for s in self.order],
                              cost_total=plan.exhaustive_cost_model(
@@ -1019,7 +1335,7 @@ class StagedQueryPlan:
             st = self.stages[si]
             if not (self._uses_stage[:, si] & undecided_cols).any():
                 report.skipped.append(st.name)
-                if (self._uses_stage[:, si] & presumed).any():
+                if (self._uses_stage[:, si] & presumed_d).any():
                     # would have run for a presumed column's sake alone
                     report.skipped_presumed.append(st.name)
                     report.cost_presumed_saved += \
@@ -1064,8 +1380,8 @@ class StagedQueryPlan:
                 # wrong-converged; the exhaustive path and full-batch
                 # stages keep those slots learning.
                 pending.append((self._stage_slots(si), counts, seen))
-            undec = np.asarray(undec)               # ONE (N + B,) fetch
-            undecided_cols, undecided_rows = undec[:N], undec[N:]
+            undec = np.asarray(undec)               # ONE (D + B,) fetch
+            undecided_cols, undecided_rows = undec[:D], undec[D:]
             # (rows paid incl. padding, true undecided in/out: the row
             # ledger uses the work convention, the survival ledger the
             # real-row one)
@@ -1081,7 +1397,10 @@ class StagedQueryPlan:
             report.cost_run += self.cost_model.stage_cost(
                 st.kind, rows=rows_eval, batch=B, radius=st.radius,
                 body=body if body in ("rows", "full") else None)
-            report.undecided_after.append(int(undecided_cols.sum()))
+            # reported in query columns (the operator-facing unit): a
+            # distinct column counts once per non-presumed subscriber
+            report.undecided_after.append(
+                int((undecided_cols[plan.dup_map] & ~presumed).sum()))
             if not undecided_cols.any():
                 break
         assert report.ran, "every query owns at least one slot, so the " \
@@ -1092,13 +1411,14 @@ class StagedQueryPlan:
         report.steps_compiled = self._trace_count - traces_before
         self.last_report = report
         self._pending = (pending, stage_rows)
-        return value
+        return value[:, plan.dup_map]
 
     # -- fleet execution (stream-axis group steps) ------------------------
 
     def _get_group_step(self, si: int, ran: frozenset,
                         bucket: Optional[int], body: str, n_streams: int,
-                        shard_wrap: Optional[Callable]) -> Callable:
+                        shard_wrap: Optional[Callable],
+                        wrap_sig: Optional[Tuple] = None) -> Callable:
         """Stream-axis-aware variant of ``_get_step``: the same fused
         stage step vmapped over a leading (S,) stream axis, optionally
         wrapped by ``shard_wrap`` (a ``distributed.sharding.shard_map``
@@ -1106,26 +1426,38 @@ class StagedQueryPlan:
         streams' stage work runs as ONE dispatched program — per device,
         a contiguous block of streams — instead of S host round-trips.
 
-        Group steps share the single-stream LRU cache (their keys carry
-        the extra stream count + wrap flag, so the two families never
-        collide); caching does not key on the wrap closure's identity —
-        a plan instance is owned by one executor, whose mesh is fixed
-        for the plan's lifetime (registry-epoch rebuilds create a fresh
-        plan).  The per-stream math is identical to the single-stream
+        Group steps share the single-stream signature-keyed cache (their
+        keys carry the extra stream count + mesh identity, so the two
+        families never collide).  The wrap closure itself cannot be
+        content-hashed, so callers owning a stable mesh pass
+        ``wrap_sig`` — a digest of the mesh topology
+        (``ShardedPlanGroupEngine`` derives one from device ids + axis
+        layout) — letting rebuilt engines over the same mesh re-hit
+        compiled group steps across epochs.  Without one we fall back to
+        the closure's ``id`` and pin the closure alive for the cache's
+        lifetime (a recycled id must never alias a dead closure's
+        entries).  The per-stream math is identical to the single-stream
         step — reductions in the stage bodies are over exact
         integer-valued occupancy data, so the vmapped slices are
         bit-identical to S serial evaluations (pinned by the
         multi-stream property tests)."""
-        key = (si, ran, bucket, body, n_streams, shard_wrap is not None)
-        step = self._steps.get(key)
+        if shard_wrap is None:
+            wrap_key: Optional[Tuple] = None
+        elif wrap_sig is not None:
+            wrap_key = wrap_sig
+        else:
+            self._wrap_refs.append(shard_wrap)     # keep id() unambiguous
+            wrap_key = ("wrapid", id(shard_wrap))
+        key = ("gstep", self.plan.plan_sig, self._stage_sigs[si],
+               self._prefix_sig(ran), bucket, body, n_streams, wrap_key)
+        step = self.step_cache.get(key)
         if step is not None:
-            self._steps.move_to_end(key)
             return step
         plan = self.plan
         stage_body = self._stage_body(si)
         slots = self._stage_slots(si)
         spatial = self.stages[si].kind == "spatial"
-        known = np.zeros(plan.n_unique_leaves, bool)
+        known = np.zeros(plan.n_slot_cols, bool)
         for sj in ran:
             known[self.stages[sj].slots] = True
         known[slots] = True
@@ -1134,7 +1466,7 @@ class StagedQueryPlan:
             def step_fn(out, leaf_vals):
                 vals = stage_body(out)                     # (B, k) bool
                 leaf_vals = leaf_vals.at[:, slots].set(vals)
-                value, decided = plan.propagate_bounds(leaf_vals, known)
+                value, decided = plan._propagate_distinct(leaf_vals, known)
                 undec = jnp.concatenate([~decided.all(0), ~decided.all(1)])
                 return leaf_vals, value, decided, undec, vals.sum(0)
         else:
@@ -1143,7 +1475,7 @@ class StagedQueryPlan:
                         else stage_body(out, rows=idx))    # (R, k) bool
                 sub = leaf_vals[idx].at[:, slots].set(vals)
                 leaf_vals = leaf_vals.at[idx].set(sub)
-                v, dec = plan.propagate_bounds(sub, known)
+                v, dec = plan._propagate_distinct(sub, known)
                 value = value.at[idx].set(v)
                 decided = decided.at[idx].set(dec)
                 undec = jnp.concatenate([~decided.all(0), ~decided.all(1)])
@@ -1156,13 +1488,12 @@ class StagedQueryPlan:
             grp = shard_wrap(grp)
         step = jax.jit(grp)
         self._trace_count += 1
-        self._steps[key] = step
-        while len(self._steps) > self.step_cache_max:
-            self._steps.popitem(last=False)
+        self.step_cache.put(key, step)
         return step
 
     def evaluate_group(self, outs: FilterOutputs, *,
-                       shard_wrap: Optional[Callable] = None) -> jax.Array:
+                       shard_wrap: Optional[Callable] = None,
+                       wrap_sig: Optional[Tuple] = None) -> jax.Array:
         """(S, B, N) bool masks for S streams' stacked batches —
         per-stream slice bit-identical to ``evaluate`` on that stream's
         batch alone.
@@ -1195,15 +1526,20 @@ class StagedQueryPlan:
 
         The temporal tier's ``presumed_decided`` is deliberately not
         offered here: temporal engines are per-stream stateful and ride
-        the per-stream path."""
+        the per-stream path.
+
+        ``wrap_sig`` — optional stable content signature for
+        ``shard_wrap`` (mesh topology digest); lets rebuilt engines over
+        the same mesh re-hit compiled group steps across registry
+        epochs (see ``_get_group_step``)."""
         plan = self.plan
         S, B = outs.counts.shape[:2]
         self._last_batch = B
-        N = len(plan.queries)
-        leaf_vals = jnp.zeros((S, B, plan.n_unique_leaves), bool)
-        value = jnp.zeros((S, B, N), bool)
-        decided = jnp.zeros((S, B, N), bool)
-        undecided_cols = np.ones((S, N), bool)
+        D = plan.n_distinct
+        leaf_vals = jnp.zeros((S, B, plan.n_slot_cols), bool)
+        value = jnp.zeros((S, B, D), bool)
+        decided = jnp.zeros((S, B, D), bool)
+        undecided_cols = np.ones((S, D), bool)
         undecided_rows = np.ones((S, B), bool)
         report = StageReport(order=[self.stages[s].name for s in self.order],
                              cost_total=S * plan.exhaustive_cost_model(
@@ -1237,14 +1573,14 @@ class StagedQueryPlan:
             if bucket >= B:
                 body = self._body_for(si, None)
                 step = self._get_group_step(si, ran, None, body, S,
-                                            shard_wrap)
+                                            shard_wrap, wrap_sig)
                 leaf_vals, value, decided, undec, counts = step(
                     outs, leaf_vals)
                 rows_eval = B
             else:
                 body = self._body_for(si, bucket)
                 step = self._get_group_step(si, ran, bucket, body, S,
-                                            shard_wrap)
+                                            shard_wrap, wrap_sig)
                 # per-stream undecided rows padded (compact_indices
                 # discipline: repeat the last survivor so duplicate
                 # scatters are benign) to the GROUP bucket
@@ -1264,8 +1600,8 @@ class StagedQueryPlan:
                 # same conditioning argument as the serial path)
                 pending.append((self._stage_slots(si), counts.sum(0),
                                 S * B))
-            undec = np.asarray(undec)       # ONE (S, N + B) fetch/stage
-            undecided_cols, undecided_rows = undec[:, :N], undec[:, N:]
+            undec = np.asarray(undec)       # ONE (S, D + B) fetch/stage
+            undecided_cols, undecided_rows = undec[:, :D], undec[:, D:]
             stage_rows.append((st.name, rows_eval * S, S * B,
                                int(n_rows.sum()),
                                int(undecided_rows.sum())))
@@ -1277,7 +1613,8 @@ class StagedQueryPlan:
             report.cost_run += S * self.cost_model.stage_cost(
                 st.kind, rows=rows_eval, batch=B, radius=st.radius,
                 body=body if body in ("rows", "full") else None)
-            report.undecided_after.append(int(undecided_cols.sum()))
+            report.undecided_after.append(
+                int(undecided_cols[:, plan.dup_map].sum()))
             if not undecided_cols.any():
                 break
         for sj in self.order[len(report.ran) + len(report.skipped):]:
@@ -1286,7 +1623,7 @@ class StagedQueryPlan:
         report.steps_compiled = self._trace_count - traces_before
         self.last_report = report
         self._pending = (pending, stage_rows)
-        return value
+        return value[:, :, plan.dup_map]
 
     def flush_stats(self, stats) -> None:
         """Fold the last batch's per-slot pass counts into ``stats`` with
@@ -1366,5 +1703,7 @@ class StagedQueryPlan:
 
 
 def plan_queries(queries: Sequence[Q.Predicate], *,
-                 tau: float = 0.2) -> QueryPlan:
-    return QueryPlan(queries, tau=tau)
+                 tau: float = 0.2,
+                 leaf_table: Optional[CanonicalLeafTable] = None,
+                 prev: Optional[QueryPlan] = None) -> QueryPlan:
+    return QueryPlan(queries, tau=tau, leaf_table=leaf_table, prev=prev)

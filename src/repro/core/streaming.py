@@ -14,6 +14,7 @@ machine — docs/tuning.md has the full policy).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import inspect
 import os
@@ -241,16 +242,41 @@ class QueryRegistry:
     ledger — like the selectivity ledgers — survives epoch-lazy plan
     rebuilds instead of restarting cold each time a query registers.
     ``MultiQueryStreamExecutor(auto_recalibrate=True)`` reads it to
-    decide when to re-run calibration."""
+    decide when to re-run calibration.
+
+    The registry also owns the two *plan-lifecycle* stores
+    (docs/architecture.md §plan lifetime): ``leaf_table`` — a
+    ``plan.CanonicalLeafTable`` keeping canonical-predicate slot ids
+    stable across epochs so each rebuild delta-registers the changed
+    queries instead of renumbering every leaf — and ``step_cache`` — a
+    ``stepcache.StepCache`` holding compiled staged steps keyed by
+    content signature, so a rebuilt engine re-hits every step whose
+    stage content didn't change instead of re-jitting the world.
+    Factories opt in by parameter name exactly as for ``slot_stats``
+    (``MultiQueryCascade`` and ``ShardedPlanGroupEngine`` accept both).
+
+    ``batch()`` / ``register_many`` coalesce a burst of
+    registrations/retirements into ONE epoch bump — without it, k
+    arrivals forced up to k back-to-back engine rebuilds at the next
+    batch boundaries."""
 
     def __init__(self, slot_stats: Optional[SlotStats] = None, *,
                  stats_path: Optional[str] = None,
                  gossip_paths: Optional[Sequence[str]] = None,
-                 calibration_monitor=None):
+                 calibration_monitor=None,
+                 leaf_table=None, step_cache=None):
+        from repro.core.plan import CanonicalLeafTable
+        from repro.core.stepcache import StepCache
         self._next_id = 0
         self._active: Dict[int, Any] = {}
         self.epoch = 0
+        self._batch_depth = 0
+        self._batch_dirty = False
         self.slot_stats = slot_stats if slot_stats is not None else SlotStats()
+        self.leaf_table = (leaf_table if leaf_table is not None
+                           else CanonicalLeafTable())
+        self.step_cache = (step_cache if step_cache is not None
+                           else StepCache())
         self.calibration_monitor = calibration_monitor
         self.stats_path = stats_path
         if stats_path is not None and os.path.exists(stats_path):
@@ -272,8 +298,40 @@ class QueryRegistry:
         """Bump the epoch without changing the query set, forcing every
         executor to rebuild its engine at the next batch boundary —
         how a recalibration installs fresh cost coefficients into
-        engines that were built against the old model."""
-        self.epoch += 1
+        engines that were built against the old model.  Inside a
+        ``batch()`` the bump is deferred to the context exit like any
+        other mutation."""
+        self._bump()
+
+    def _bump(self) -> None:
+        if self._batch_depth > 0:
+            self._batch_dirty = True
+        else:
+            self.epoch += 1
+
+    @contextlib.contextmanager
+    def batch(self):
+        """Coalesce every register/retire/touch inside the ``with`` into
+        a single epoch bump at exit (none if nothing changed): an
+        arrival burst then costs executors ONE engine rebuild instead of
+        one per mutation.  Reentrant — nested batches bump once at the
+        outermost exit.  The bump happens even if the block raises:
+        mutations applied before the exception are real, and executors
+        must not keep serving the pre-burst engine against them."""
+        self._batch_depth += 1
+        try:
+            yield self
+        finally:
+            self._batch_depth -= 1
+            if self._batch_depth == 0 and self._batch_dirty:
+                self._batch_dirty = False
+                self.epoch += 1
+
+    def register_many(self, queries: Sequence[Any]) -> List[int]:
+        """Register a burst under one epoch bump (``batch()`` shorthand);
+        returns the new qids in order."""
+        with self.batch():
+            return [self.register(q) for q in queries]
 
     def save_stats(self, path: Optional[str] = None) -> str:
         """Snapshot the population store to ``path`` (default: the
@@ -288,7 +346,7 @@ class QueryRegistry:
         qid = self._next_id
         self._next_id += 1
         self._active[qid] = query
-        self.epoch += 1
+        self._bump()
         return qid
 
     def retire(self, qid: int) -> None:
@@ -298,7 +356,7 @@ class QueryRegistry:
                 f"retired, or never issued by this registry); active ids: "
                 f"{sorted(self._active)}")
         del self._active[qid]
-        self.epoch += 1
+        self._bump()
 
     def active(self) -> List[Tuple[int, Any]]:
         """(qid, query) pairs in registration order."""
@@ -333,7 +391,10 @@ class MultiQueryStreamExecutor:
     across epoch rebuilds then share one learned-selectivity ledger
     (pass it to ``MultiQueryCascade(..., adaptive=True, slot_stats=...)``).
     A parameter named ``calibration_monitor`` opts into the registry's
-    shared drift monitor the same way (pass it through to the cascade).
+    shared drift monitor the same way (pass it through to the cascade),
+    and ``leaf_table`` / ``step_cache`` opt into the registry's
+    plan-lifecycle stores (stable slot ids + epoch-surviving compiled
+    steps — pass them to ``MultiQueryCascade(..., adaptive=True)``).
     The opt-in is by parameter name, never arity, so legacy factories
     with unrelated defaults keep the one-argument contract.
 
@@ -380,6 +441,10 @@ class MultiQueryStreamExecutor:
                                                 "slot_stats")
         self._factory_takes_monitor = _accepts_kw(engine_factory,
                                                   "calibration_monitor")
+        self._factory_takes_table = _accepts_kw(engine_factory,
+                                                "leaf_table")
+        self._factory_takes_cache = _accepts_kw(engine_factory,
+                                                "step_cache")
 
     def _refresh(self):
         if self.registry.epoch != self._epoch:
@@ -395,6 +460,10 @@ class MultiQueryStreamExecutor:
                 if self._factory_takes_monitor:
                     kw["calibration_monitor"] = \
                         self.registry.calibration_monitor
+                if self._factory_takes_table:
+                    kw["leaf_table"] = self.registry.leaf_table
+                if self._factory_takes_cache:
+                    kw["step_cache"] = self.registry.step_cache
                 self._engine = self.engine_factory(queries, **kw)
             self._epoch = self.registry.epoch
             self.rebuilds += 1

@@ -135,13 +135,24 @@ class ShardedPlanGroupEngine:
     construction and keeps learning from the group's full-batch tiers;
     every ``restage_every`` chunks the engine re-sorts its stage order
     from the live ledger.  ``cost_model`` prices the group steps
-    (default: the per-backend ``default_cost_model()``)."""
+    (default: the per-backend ``default_cost_model()``).
+
+    ``leaf_table`` / ``step_cache`` are the registry's plan-lifecycle
+    stores (repro.core.stepcache): with both, a registry-epoch rebuild
+    of this engine keeps its slot ids stable and re-hits every compiled
+    group step whose stage signature didn't change — mid-stream
+    register/retire stops cold-starting the untouched stages' sharded
+    steps.  The mesh identity in those step keys is a *content* digest
+    of the device assignment (``wrap_sig``), not the wrap closure's
+    object identity, precisely so rebuilt engines over the same mesh
+    share steps."""
 
     def __init__(self, queries: Sequence, streams: Sequence[StreamContext],
                  fetch: Callable[[StreamContext, np.ndarray], FilterOutputs],
                  *, slot_stats=None, mesh=None, tau: float = 0.2,
                  cost_model=None, min_bucket: Optional[int] = None,
-                 spatial_body: str = "auto", restage_every: int = 16):
+                 spatial_body: str = "auto", restage_every: int = 16,
+                 leaf_table=None, step_cache=None):
         from repro.core import costmodel as CM
         self.streams = sorted(streams, key=lambda c: c.position)
         if [c.position for c in self.streams] != list(range(len(streams))):
@@ -151,17 +162,19 @@ class ShardedPlanGroupEngine:
         self.slot_stats = slot_stats
         self.mesh = mesh
         self.restage_every = restage_every
-        self.plan = QueryPlan(tuple(queries), tau=tau)
+        self.plan = QueryPlan(tuple(queries), tau=tau,
+                              leaf_table=leaf_table)
         cm = cost_model if cost_model is not None \
             else CM.default_cost_model()
         self.staged = self.plan.build_staged(
             slot_stats, min_bucket=min_bucket, cost_model=cm,
-            spatial_body=spatial_body)
+            spatial_body=spatial_body, step_cache=step_cache)
         self._chunks = 0
         self._next: Optional[Tuple[Tuple[int, int, int], FilterOutputs]] = \
             None
         self._sharding = None
         self.shard_wrap: Optional[Callable] = None
+        self.wrap_sig: Optional[Tuple] = None
         if mesh is not None:
             S = len(self.streams)
             spec = SH.spec_for(("stream",), (S,), mesh, SH.DEFAULT_RULES)
@@ -171,6 +184,10 @@ class ShardedPlanGroupEngine:
                 self.shard_wrap = lambda fn: SH.shard_map(
                     fn, mesh=mesh, in_specs=spec, out_specs=spec,
                     check_vma=False)
+                self.wrap_sig = ("mesh",
+                                 tuple(d.id for d in mesh.devices.flat),
+                                 tuple(mesh.axis_names),
+                                 tuple(mesh.devices.shape), repr(spec))
 
     @staticmethod
     def _key(idx: np.ndarray) -> Tuple[int, int, int]:
@@ -207,7 +224,8 @@ class ShardedPlanGroupEngine:
             outs = self._stack(idx)
         self._next = None
         value = self.staged.evaluate_group(outs,
-                                           shard_wrap=self.shard_wrap)
+                                           shard_wrap=self.shard_wrap,
+                                           wrap_sig=self.wrap_sig)
         if next_idx is not None and next_idx.size:
             self.prefetch(next_idx)         # overlaps the block below
         ans = np.asarray(value)             # block on this chunk
@@ -224,9 +242,12 @@ def plan_group_engine_factory(fetch, **engine_kw) -> Callable:
     """Adapter: a ``MultiStreamExecutor`` engine factory around
     ``ShardedPlanGroupEngine`` (``fetch(stream_ctx, idx)`` as above;
     ``engine_kw`` forwarded — mesh, tau, cost_model, ...)."""
-    def factory(queries, streams, slot_stats=None):
+    def factory(queries, streams, slot_stats=None, leaf_table=None,
+                step_cache=None):
         return ShardedPlanGroupEngine(queries, streams, fetch,
-                                      slot_stats=slot_stats, **engine_kw)
+                                      slot_stats=slot_stats,
+                                      leaf_table=leaf_table,
+                                      step_cache=step_cache, **engine_kw)
     return factory
 
 
@@ -293,6 +314,10 @@ class MultiStreamExecutor:
         self._qids: Tuple[int, ...] = ()
         self._factory_takes_stats = _accepts_kw(engine_factory,
                                                 "slot_stats")
+        self._factory_takes_table = _accepts_kw(engine_factory,
+                                                "leaf_table")
+        self._factory_takes_cache = _accepts_kw(engine_factory,
+                                                "step_cache")
 
     def _refresh(self):
         if self.registry.epoch != self._epoch:
@@ -305,6 +330,10 @@ class MultiStreamExecutor:
                 kw = {}
                 if self._factory_takes_stats:
                     kw["slot_stats"] = self.registry.slot_stats
+                if self._factory_takes_table:
+                    kw["leaf_table"] = self.registry.leaf_table
+                if self._factory_takes_cache:
+                    kw["step_cache"] = self.registry.step_cache
                 self._engine = self.engine_factory(queries, self.streams,
                                                    **kw)
             self._epoch = self.registry.epoch
