@@ -2,8 +2,8 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-multidevice test-deps bench bench-smoke \
-	calibrate docs-check
+.PHONY: test test-fast test-slow test-multidevice test-deps bench \
+	bench-smoke calibrate docs-check
 
 # tier-1 verify (full hypothesis profile — the default); depends on
 # docs-check so a stale doc reference fails the same gate as a test,
@@ -32,6 +32,13 @@ docs-check:
 test-fast:
 	REPRO_HYPOTHESIS_PROFILE=ci PYTHONPATH=src $(PY) -m pytest -x -q
 
+# extended repeated-trial statistical sweeps (hundreds of seeded trials
+# per contract shape — tests/test_contracts.py): the default profile
+# runs cheap seeded variants of the same properties, this runs the full
+# >=200-trial versions
+test-slow:
+	REPRO_SLOW=1 PYTHONPATH=src $(PY) -m pytest -x -q -m slow
+
 # optional extras (hypothesis) — the suite is green without them
 test-deps:
 	$(PY) -m pip install -r tests/requirements-test.txt
@@ -47,6 +54,7 @@ bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.multi_query_sharing --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.multi_stream_serving --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.query_churn --smoke
+	PYTHONPATH=src $(PY) -m benchmarks.aggregate_contracts --smoke
 
 # measure the staged planner's stage-body costs on THIS backend and write
 # results/calibration/<backend>.json; the adaptive engine loads it on the

@@ -26,6 +26,7 @@ BENCHES = [
     ("table4_cv_variance", "benchmarks.table4_cv_variance"),
     ("multi_query_sharing", "benchmarks.multi_query_sharing"),
     ("query_churn", "benchmarks.query_churn"),
+    ("aggregate_contracts", "benchmarks.aggregate_contracts"),
 ]
 
 

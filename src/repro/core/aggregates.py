@@ -11,16 +11,41 @@ filter answers on the same frames.  ``CVAccumulator`` maintains streaming
 (Welford-style) joint moments and is *mergeable*, so per-shard accumulators
 on the data mesh axis combine with a psum-tree (``merge`` is associative)
 — the distributed reduction used by the streaming aggregation executor.
+
+This module also holds the *state* side of the adaptive aggregate engine
+(repro.core.contracts compiles declarative accuracy contracts into an
+executor over it): ``ChunkPosteriors`` — per-chunk Beta / sampled-variance
+posteriors for ExSample-style Thompson allocation of oracle calls — and
+``BudgetLedger`` — the oracle/filter spend ledger the filter and aggregate
+halves of the engine share (one call, one charge, priced by the measured
+``CostModel``).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class DegenerateSampleError(ValueError):
+    """Raised when an estimate is requested from too few samples.
+
+    The former ``assert n >= 3`` vanished under ``python -O`` and carried
+    no diagnostics; this error survives optimization and tells the caller
+    *how short* the sample was (``n`` observed vs ``needed``) so adaptive
+    executors can react (sample more) instead of crashing on a bare
+    AssertionError."""
+
+    def __init__(self, n: int, needed: int = 3):
+        self.n = int(n)
+        self.needed = int(needed)
+        super().__init__(
+            f"need >= {needed} samples to estimate (got {n}): the "
+            f"residual variance has no degrees of freedom below that")
 
 
 @dataclasses.dataclass
@@ -72,16 +97,27 @@ def mcv_estimate(y: np.ndarray, Z: np.ndarray,
     y = np.asarray(y, np.float64)
     Z = np.asarray(Z, np.float64)
     n, d = Z.shape
-    assert y.shape[0] == n and n >= 3
+    if y.shape[0] != n:
+        raise ValueError(f"y has {y.shape[0]} samples but Z has {n}")
+    if n < 3:
+        raise DegenerateSampleError(n)
     ybar = y.mean()
     zbar = Z.mean(0)
     mu = zbar if mu_z is None else np.asarray(mu_z, np.float64)
 
     yc = y - ybar
+    var_y = float(yc @ yc) / (n - 1)
+    if d == 0:
+        # no control variates: the CV estimator degenerates to the naive
+        # sample mean (np.linalg.solve on a (0, 0) system would crash) —
+        # the aggregate engine reaches this when a contract runs without
+        # a filter tap
+        return CVEstimate(mean=float(ybar), var=var_y / n,
+                          naive_var=var_y / n,
+                          beta=np.zeros(0, np.float64), n=n)
     Zc = Z - zbar
     S_zz = (Zc.T @ Zc) / (n - 1)
     S_yz = (Zc.T @ yc) / (n - 1)
-    var_y = float(yc @ yc) / (n - 1)
     # ridge for singular covariances (constant filters)
     beta = np.linalg.solve(S_zz + 1e-12 * np.eye(d), S_yz)
 
@@ -144,13 +180,21 @@ class CVAccumulator:
 
     def estimate(self, mu_z: Optional[np.ndarray] = None) -> CVEstimate:
         n = float(self.n)
-        assert n >= 3, "need >= 3 samples"
+        if n < 3:
+            raise DegenerateSampleError(int(n))
         mean = np.asarray(self.mean, np.float64)
         cov = np.asarray(self.M2, np.float64) / (n - 1)
         var_y = cov[0, 0]
         S_yz = cov[0, 1:]
         S_zz = cov[1:, 1:]
         d = S_zz.shape[0]
+        if d == 0:
+            # degenerate d=0 (accumulator built with no control variates):
+            # fall back to the naive mean estimator instead of handing
+            # np.linalg.solve an empty system
+            return CVEstimate(mean=float(mean[0]), var=max(var_y, 0.0) / n,
+                              naive_var=var_y / n,
+                              beta=np.zeros(0, np.float64), n=int(n))
         beta = np.linalg.solve(S_zz + 1e-12 * np.eye(d), S_yz)
         mu = mean[1:] if mu_z is None else np.asarray(mu_z, np.float64)
         mean_cv = float(mean[0] - beta @ (mean[1:] - mu))
@@ -167,6 +211,132 @@ def _combine(a: CVAccumulator, b: CVAccumulator) -> CVAccumulator:
     mean = a.mean + delta * (b.n / safe_n)
     M2 = a.M2 + b.M2 + jnp.outer(delta, delta) * (a.n * b.n / safe_n)
     return CVAccumulator(n=n, mean=mean, M2=M2)
+
+
+# --------------------------------------------------------------------------
+# Adaptive-allocation state: per-chunk posteriors + the budget ledger
+# --------------------------------------------------------------------------
+
+class ChunkPosteriors:
+    """Per-chunk posterior state for ExSample-style Thompson allocation.
+
+    The stream is partitioned into ``n_chunks`` contiguous chunks; the
+    allocator (repro.core.contracts.ContractExecutor) decides, per oracle
+    batch, WHICH chunk the next oracle calls go to by drawing from each
+    chunk's posterior and taking the best draw — exploration and
+    exploitation in one rule (ExSample, PAPERS.md).  Two posterior
+    families cover the two query shapes:
+
+    - ``draw_rates`` — Beta(prior + hits, prior + misses) over each
+      chunk's Bernoulli result rate.  LIMIT-k search allocates to the
+      chunk whose drawn rate of *remaining* instances is highest.
+    - ``draw_vars`` — sampled per-chunk variance: ``s2 * df / chi2(df)``
+      (the scaled-inverse-chi-square posterior under a flat prior, with
+      ``prior_strength`` pseudo-observations of the pooled variance
+      blended in so one lucky low-variance chunk is not starved
+      forever).  Error-bounded contracts allocate where the sampled
+      variance says one more oracle call shrinks the stratified
+      estimator most.
+
+    All state is numpy (host-side): posterior updates are a handful of
+    scalar writes per oracle batch — the oracle forward dwarfs them.
+    """
+
+    def __init__(self, n_chunks: int, *, prior_strength: float = 1.0):
+        if n_chunks < 1:
+            raise ValueError(f"n_chunks must be >= 1, got {n_chunks}")
+        if prior_strength <= 0:
+            raise ValueError(f"prior_strength must be > 0, "
+                             f"got {prior_strength}")
+        self.n_chunks = int(n_chunks)
+        self.prior = float(prior_strength)
+        self.n = np.zeros(n_chunks, np.int64)        # samples per chunk
+        self.hits = np.zeros(n_chunks, np.float64)   # positive samples
+        self.sum = np.zeros(n_chunks, np.float64)    # sum of y
+        self.sumsq = np.zeros(n_chunks, np.float64)  # sum of y^2
+
+    def update(self, chunk: int, y: np.ndarray,
+               hits: Optional[np.ndarray] = None) -> None:
+        """Fold one oracle batch's per-frame values (and, for LIMIT-k,
+        the 0/1 confirmation outcomes) into chunk ``chunk``'s moments."""
+        y = np.asarray(y, np.float64)
+        self.n[chunk] += y.size
+        self.sum[chunk] += y.sum()
+        self.sumsq[chunk] += (y * y).sum()
+        h = np.asarray(hits, np.float64) if hits is not None else y
+        self.hits[chunk] += (h > 0).sum()
+
+    def means(self) -> np.ndarray:
+        return self.sum / np.maximum(self.n, 1)
+
+    def variances(self) -> np.ndarray:
+        """Per-chunk sample variances (0 where a chunk has < 2 samples —
+        the posterior draw re-inflates those through the prior)."""
+        n = np.maximum(self.n, 1)
+        var = self.sumsq / n - (self.sum / n) ** 2
+        var = np.where(self.n >= 2, var * n / np.maximum(n - 1, 1), 0.0)
+        return np.maximum(var, 0.0)
+
+    def draw_rates(self, rng: np.random.Generator) -> np.ndarray:
+        """Thompson draw of each chunk's Bernoulli rate."""
+        a = self.prior + self.hits
+        b = self.prior + np.maximum(self.n - self.hits, 0.0)
+        return rng.beta(a, b)
+
+    def draw_vars(self, rng: np.random.Generator) -> np.ndarray:
+        """Thompson draw of each chunk's variance (scaled-inv-chi2 with
+        ``prior_strength`` pseudo-observations of the pooled variance)."""
+        pooled = float(self.variances() @ np.maximum(self.n, 0)
+                       / max(self.n.sum(), 1))
+        pooled = max(pooled, 1e-12)
+        df = self.prior + np.maximum(self.n - 1, 0.0)
+        scale = (self.prior * pooled
+                 + np.maximum(self.n - 1, 0.0) * self.variances()) / df
+        return scale * df / rng.chisquare(df)
+
+    def describe(self) -> Dict:
+        return {"n": self.n.tolist(),
+                "means": self.means().tolist(),
+                "variances": self.variances().tolist()}
+
+
+@dataclasses.dataclass
+class BudgetLedger:
+    """Where every microsecond of an aggregate query went.
+
+    The unification the aggregate tier exists for: the filter half
+    (MultiQueryExecutor) and the aggregate half (ContractExecutor)
+    charge ONE ledger — oracle frames evaluated (bucket padding
+    included, same honesty rule as ``CascadeStats.oracle_calls``),
+    filter frames evaluated, and the wall microseconds of each — so
+    "spend the next oracle call where it shrinks variance most per µs"
+    prices against what the engine is *actually* spending.  Each oracle
+    call is charged exactly once, by the component that issued it
+    (pinned in tests/test_contracts.py)."""
+    oracle_calls: int = 0        # frames the oracle evaluated (incl. padding)
+    oracle_us: float = 0.0
+    filter_frames: int = 0       # frames the cheap filter evaluated
+    filter_us: float = 0.0
+    rounds: int = 0              # allocation rounds (aggregate half)
+
+    def charge_oracle(self, frames: int, us: float = 0.0) -> None:
+        self.oracle_calls += int(frames)
+        self.oracle_us += float(us)
+
+    def charge_filter(self, frames: int, us: float = 0.0) -> None:
+        self.filter_frames += int(frames)
+        self.filter_us += float(us)
+
+    def oracle_us_per_frame(self) -> Optional[float]:
+        """Realized mean oracle cost — the self-calibrated fallback the
+        allocator prices with when the CostModel carries no measured
+        oracle coefficient (repro.core.costmodel.CostModel.oracle_cost)."""
+        if self.oracle_calls <= 0 or self.oracle_us <= 0:
+            return None
+        return self.oracle_us / self.oracle_calls
+
+    def describe(self) -> Dict:
+        return dataclasses.asdict(self)
 
 
 def distributed_reduce(acc: CVAccumulator, axis_name: str) -> CVAccumulator:

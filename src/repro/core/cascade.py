@@ -602,13 +602,19 @@ class MultiQueryExecutor:
                  filter_fn: Callable[[Any], FilterOutputs],
                  oracle_fn: Callable[[Any, np.ndarray], List],
                  n_classes: int, grid: int,
-                 oracle_bucket: Optional[int] = None):
+                 oracle_bucket: Optional[int] = None,
+                 budget_ledger=None):
         self.cascade = cascade
         self.filter_fn = filter_fn
         self.oracle_fn = oracle_fn
         self.n_classes = n_classes
         self.grid = grid
         self.oracle_bucket = oracle_bucket
+        # one aggregates.BudgetLedger can be shared with the aggregate
+        # half of the engine (ContractExecutor) so filter µs and oracle
+        # µs from both halves land in a single spend account — the
+        # registry owns it (QueryRegistry.budget_ledger)
+        self.budget_ledger = budget_ledger
         self.stats = CascadeStats(
             per_query_pass=[0] * len(cascade.queries))
 
@@ -643,4 +649,9 @@ class MultiQueryExecutor:
             self.stats.per_query_pass[qi] += int(masks[:, qi].sum())
         self.stats.filter_time_s += t1 - t0
         self.stats.oracle_time_s += t2 - t1
+        if self.budget_ledger is not None:
+            self.budget_ledger.charge_filter(B, (t1 - t0) * 1e6)
+            self.budget_ledger.charge_oracle(
+                oracle_frames_evaluated(int(idx.size), self.oracle_bucket),
+                (t2 - t1) * 1e6)
         return MultiCascadeResult(answers=answers, stats=self.stats)

@@ -105,6 +105,11 @@ STATIC_COST_DILATE_STEP = 2.0
 # propagation + the per-stage (N + B,) undecided fetch), in the same
 # relative units.
 STATIC_STEP_OVERHEAD = 4.0
+# Static relative cost of one oracle frame (full-model forward + exact
+# detection semantics) vs the filter stages above — the paper's premise
+# is a ~2 orders-of-magnitude gap between the specialized filter and the
+# oracle, which is what makes cascades (and sampled aggregation) pay.
+STATIC_COST_ORACLE = 100.0
 
 #: Reference batch size for batch-agnostic cost queries (stage ranking
 #: before any traffic has been seen).  The static model is scale-free in
@@ -343,6 +348,25 @@ class CostModel:
         this model's cost units."""
         return self._step_overhead
 
+    def oracle_cost(self, rows: float = 1.0) -> Optional[float]:
+        """Cost of running the oracle on ``rows`` frames, in this
+        model's units — the price the aggregate tier's adaptive
+        allocator compares variance shrink against
+        (repro.core.contracts).  The static model answers with the
+        legacy relative constant (``STATIC_COST_ORACLE`` per frame); a
+        measured model answers in microseconds from its ``"oracle"``
+        coefficient — an *optional* entry, because the oracle is caller
+        code the standard ``calibrate()`` cannot see
+        (``calibrate_oracle`` measures it in place).  A measured model
+        without the entry returns None: mixing the static relative
+        constant into a microsecond model would be unit soup, so the
+        caller self-calibrates from its realized spend instead
+        (``BudgetLedger.oracle_us_per_frame``)."""
+        if self.source == "static":
+            return STATIC_COST_ORACLE * float(rows)
+        c = self.coeffs.get("oracle")
+        return c.cost(rows) if c is not None else None
+
     def describe(self) -> Dict:
         """Operator/provenance view (recorded next to bench results)."""
         return {
@@ -476,6 +500,20 @@ def load_calibration(path: Optional[str] = None, *,
                 or per_row < 0 or overhead < 0:
             return None
         coeffs[k] = StageCoeff(per_row=per_row, overhead=overhead)
+    # the optional oracle coefficient (calibrate_oracle): absent in most
+    # calibrations — the oracle is caller code — and advisory when
+    # present, so a malformed entry drops the entry, not the file
+    orc = coeffs_raw.get("oracle")
+    if isinstance(orc, dict):
+        try:
+            per_row = float(orc["per_row"])
+            overhead = float(orc.get("overhead", 0.0))
+            if np.isfinite(per_row) and np.isfinite(overhead) \
+                    and per_row >= 0 and overhead >= 0:
+                coeffs["oracle"] = StageCoeff(per_row=per_row,
+                                              overhead=overhead)
+        except (TypeError, KeyError, ValueError):
+            pass
     try:
         step = float(payload.get("step_overhead_us"))
         calibrated_at = float(payload.get("calibrated_at"))
@@ -720,6 +758,50 @@ def calibrate(*, batch: int = 256, grid: int = 16, classes: int = 8,
     if save:
         save_calibration(model, path)
     return model
+
+
+def calibrate_oracle(model: CostModel, oracle_fn, make_batch, *,
+                     rows_points: Sequence[int] = (1, 4, 16),
+                     repeat: int = 3, save: bool = False,
+                     path: Optional[str] = None) -> CostModel:
+    """Measure the caller's oracle and fold an ``"oracle"`` coefficient
+    into a measured ``CostModel`` (the aggregate tier's missing price).
+
+    ``calibrate()`` times the engine's own stage bodies; the oracle —
+    full-model forward, exact detector, ground-truth annotator — is
+    caller code it cannot construct, so the caller hands it in here:
+    ``make_batch(rows) -> args`` builds a representative input of
+    ``rows`` frames and ``oracle_fn(*args)`` is what the executor will
+    actually invoke.  Fits the same affine ``overhead + per_row * rows``
+    microsecond form as the stage coefficients and returns a NEW model
+    (the input model is not mutated); with ``save=True`` the merged
+    coefficient set is written back through ``save_calibration`` so the
+    next ``default_cost_model()`` load carries the oracle price too.
+
+    Only measured models can absorb a microsecond coefficient; calling
+    this on the static model raises (its units are relative constants).
+    """
+    if model.source != "measured":
+        raise ValueError("calibrate_oracle extends a measured CostModel; "
+                         "the static model already has a relative oracle "
+                         "constant (STATIC_COST_ORACLE)")
+    samples: List[Tuple[int, float]] = []
+    for r in rows_points:
+        args = make_batch(int(r))
+        if not isinstance(args, tuple):
+            args = (args,)
+        samples.append((int(r), _timeit(oracle_fn, *args, repeat=repeat)))
+    coeffs = dict(model.coeffs)
+    coeffs["oracle"] = _fit_affine(samples)
+    merged = CostModel(
+        source="measured", backend=model.backend, coeffs=coeffs,
+        step_overhead_cost=model._step_overhead,
+        fingerprint=model.fingerprint, calibrated_at=model.calibrated_at,
+        samples={**model.samples,
+                 "oracle": [[int(r), float(t)] for r, t in samples]})
+    if save:
+        save_calibration(merged, path)
+    return merged
 
 
 # ---------------------------------------------------------------------------

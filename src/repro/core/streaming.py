@@ -264,7 +264,9 @@ class QueryRegistry:
                  stats_path: Optional[str] = None,
                  gossip_paths: Optional[Sequence[str]] = None,
                  calibration_monitor=None,
-                 leaf_table=None, step_cache=None):
+                 leaf_table=None, step_cache=None,
+                 budget_ledger=None):
+        from repro.core.aggregates import BudgetLedger
         from repro.core.plan import CanonicalLeafTable
         from repro.core.stepcache import StepCache
         self._next_id = 0
@@ -277,6 +279,13 @@ class QueryRegistry:
                            else CanonicalLeafTable())
         self.step_cache = (step_cache if step_cache is not None
                            else StepCache())
+        # the population's single spend account: the filter half
+        # (MultiQueryExecutor) and the aggregate half (ContractExecutor /
+        # AggregateStreamSession) both charge oracle frames/µs and filter
+        # frames/µs here, so "what did this monitor spend, where" has one
+        # answer across the paper's two query classes
+        self.budget_ledger = (budget_ledger if budget_ledger is not None
+                              else BudgetLedger())
         self.calibration_monitor = calibration_monitor
         self.stats_path = stats_path
         if stats_path is not None and os.path.exists(stats_path):
@@ -395,6 +404,11 @@ class MultiQueryStreamExecutor:
     and ``leaf_table`` / ``step_cache`` opt into the registry's
     plan-lifecycle stores (stable slot ids + epoch-surviving compiled
     steps — pass them to ``MultiQueryCascade(..., adaptive=True)``).
+    A parameter named ``budget_ledger`` opts into the registry's shared
+    spend account (hand it to ``MultiQueryExecutor``): the filter half's
+    oracle/filter microseconds then land in the same
+    ``aggregates.BudgetLedger`` the aggregate half
+    (``AggregateStreamSession``) charges.
     The opt-in is by parameter name, never arity, so legacy factories
     with unrelated defaults keep the one-argument contract.
 
@@ -445,6 +459,8 @@ class MultiQueryStreamExecutor:
                                                 "leaf_table")
         self._factory_takes_cache = _accepts_kw(engine_factory,
                                                 "step_cache")
+        self._factory_takes_ledger = _accepts_kw(engine_factory,
+                                                 "budget_ledger")
 
     def _refresh(self):
         if self.registry.epoch != self._epoch:
@@ -464,6 +480,8 @@ class MultiQueryStreamExecutor:
                     kw["leaf_table"] = self.registry.leaf_table
                 if self._factory_takes_cache:
                     kw["step_cache"] = self.registry.step_cache
+                if self._factory_takes_ledger:
+                    kw["budget_ledger"] = self.registry.budget_ledger
                 self._engine = self.engine_factory(queries, **kw)
             self._epoch = self.registry.epoch
             self.rebuilds += 1
@@ -548,3 +566,78 @@ class MultiQueryStreamExecutor:
             if on_window is not None:
                 on_window(res)                  # may mutate the registry
         return results
+
+
+class AggregateStreamSession:
+    """One aggregate-contract run wired into a registry-backed stream.
+
+    This is where the paper's two query halves meet: the session
+    registers the contract's predicate in the shared ``QueryRegistry``
+    (same epoch/leaf-table lifecycle as every filter query, so slot ids
+    stay canonical and co-running filter executors rebuild once), taps
+    the shared cascade's verdicts as the contract executor's control
+    variates, and charges every oracle and filter microsecond to the
+    registry's ``budget_ledger`` — the SAME account the filter half's
+    ``MultiQueryExecutor(budget_ledger=...)`` charges.  One ledger, two
+    query classes.
+
+    ``filter_fn(idx) -> FilterOutputs`` fetches the cheap per-frame
+    filter outputs for arbitrary frame indices; ``oracle_fn(idx) ->
+    [objects...]`` is the expensive detector.  The verdict tap runs the
+    predicate's cascade mask over the fetched outputs and — when the
+    aggregate targets a class's object count — adds the filter's count
+    head for that class as a second control variate column (BlazeIt's
+    specialized counter).
+
+    Use as a context manager (registration is retired on exit even when
+    the run raises)::
+
+        with AggregateStreamSession(registry, q, filter_fn=f,
+                                    oracle_fn=o, n_frames=n,
+                                    n_classes=c, grid=g) as sess:
+            result = sess.run()
+    """
+
+    def __init__(self, registry: QueryRegistry, query, *,
+                 filter_fn: Callable[[np.ndarray], Any],
+                 oracle_fn: Callable[[np.ndarray], List],
+                 n_frames: int, n_classes: int, grid: int,
+                 tau: float = 0.2, cost_model=None, seed: int = 0,
+                 **executor_knobs):
+        from repro.core.cascade import MultiQueryCascade
+        from repro.core.contracts import ContractExecutor, make_value_fn
+        self.registry = registry
+        self.query = query
+        self.qid = registry.register(query.pred)
+        self._retired = False
+        cascade = MultiQueryCascade([query.pred], tau=tau,
+                                    leaf_table=registry.leaf_table)
+        cls = query.cls
+
+        def verdict_fn(idx: np.ndarray) -> np.ndarray:
+            fout = filter_fn(idx)
+            cols = [np.asarray(cascade.masks(fout))[:, 0]
+                    .astype(np.float64)]
+            if cls is not None:
+                cols.append(np.asarray(fout.counts)[:, cls]
+                            .astype(np.float64))
+            return np.stack(cols, axis=1)
+
+        self.executor = ContractExecutor(
+            query, make_value_fn(query, oracle_fn, n_classes, grid),
+            n_frames, verdict_fn=verdict_fn, cost_model=cost_model,
+            ledger=registry.budget_ledger, seed=seed, **executor_knobs)
+
+    def run(self):
+        return self.executor.run()
+
+    def close(self) -> None:
+        if not self._retired:
+            self.registry.retire(self.qid)
+            self._retired = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -45,6 +45,26 @@ if HAS_HYPOTHESIS:
 from repro.models.config import BlockKind, ModelConfig
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: extended repeated-trial statistical sweeps (hundreds of "
+        "seeded trials at full stream sizes).  Skipped by default — the "
+        "default profile runs the seeded cheap variants of the same "
+        "properties (mirroring the hypothesis full/ci split above); "
+        "enable with REPRO_SLOW=1 (``make test-slow``).")
+
+
+def pytest_collection_modifyitems(config, items):
+    if os.environ.get("REPRO_SLOW", "") not in ("", "0"):
+        return
+    skip = pytest.mark.skip(reason="slow statistical sweep; set "
+                            "REPRO_SLOW=1 to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
 BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
             d_ff=128, vocab_size=128, dtype="float32", max_seq_len=256,
             attn_impl="xla_naive", scan_layers=True)

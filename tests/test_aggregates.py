@@ -193,3 +193,108 @@ def test_ci_covers_truth():
         lo, hi = est.ci95()
         hits += (lo <= 1.0 <= hi)
     assert hits >= 85     # ~95% nominal coverage
+
+
+# ---------------------------------------------------------------------------
+# degenerate-sample handling (regression: these crashed or assert-failed
+# before typed errors / the d=0 naive fallback existed)
+# ---------------------------------------------------------------------------
+
+def test_mcv_estimate_small_n_typed_error():
+    """n < 3 raises DegenerateSampleError (a ValueError carrying the
+    count), not a bare AssertionError."""
+    y = np.array([1.0, 2.0])
+    Z = np.array([[0.1], [0.2]])
+    with pytest.raises(AGG.DegenerateSampleError) as ei:
+        AGG.mcv_estimate(y, Z, mu_z=np.array([0.15]))
+    assert isinstance(ei.value, ValueError)
+    assert ei.value.n == 2
+    assert "2" in str(ei.value)
+
+
+def test_accumulator_estimate_small_n_typed_error():
+    acc = AGG.CVAccumulator.init(1)
+    acc = acc.update(jnp.array([1.0, 2.0]), jnp.array([[0.1], [0.2]]))
+    with pytest.raises(AGG.DegenerateSampleError) as ei:
+        acc.estimate()
+    assert ei.value.n == 2
+
+
+def test_mcv_estimate_shape_mismatch_typed_error():
+    with pytest.raises(ValueError, match="3 samples but"):
+        AGG.mcv_estimate(np.ones(3), np.ones((4, 1)), mu_z=np.zeros(1))
+
+
+def test_mcv_estimate_d0_naive_fallback():
+    """No control variates (d=0): falls back to the naive mean instead of
+    crashing in np.linalg.solve on a 0x0 system."""
+    rng = np.random.default_rng(7)
+    y = rng.normal(3.0, 1.0, 50)
+    est = AGG.mcv_estimate(y, np.zeros((50, 0)), mu_z=np.zeros(0))
+    assert est.mean == pytest.approx(float(y.mean()))
+    assert est.var == pytest.approx(float(y.var(ddof=1)) / 50)
+    assert est.var == pytest.approx(est.naive_var)
+    assert est.beta.shape == (0,)
+
+
+def test_accumulator_estimate_d0_naive_fallback():
+    rng = np.random.default_rng(8)
+    y = rng.normal(-1.0, 2.0, 64)
+    acc = AGG.CVAccumulator.init(0)
+    acc = acc.update(jnp.asarray(y), jnp.zeros((64, 0)))
+    est = acc.estimate()
+    assert est.mean == pytest.approx(float(y.mean()), rel=1e-6)
+    assert est.var == pytest.approx(float(y.var(ddof=1)) / 64, rel=1e-5)
+    assert est.beta.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# allocator state: ChunkPosteriors + BudgetLedger (contracts tier plumbing)
+# ---------------------------------------------------------------------------
+
+def test_chunk_posteriors_moments_match_numpy():
+    post = AGG.ChunkPosteriors(3)
+    rng = np.random.default_rng(3)
+    batches = {0: [], 2: []}
+    for _ in range(5):
+        for j in (0, 2):
+            y = rng.normal(j, 1 + j, 7)
+            batches[j].append(y)
+            post.update(j, y)
+    for j in (0, 2):
+        all_y = np.concatenate(batches[j])
+        assert post.means()[j] == pytest.approx(all_y.mean())
+        assert post.variances()[j] == pytest.approx(all_y.var(ddof=1))
+    assert post.n[1] == 0 and post.variances()[1] == 0.0
+
+
+def test_chunk_posteriors_rate_draws_favor_hot_chunk():
+    post = AGG.ChunkPosteriors(2)
+    post.update(0, np.zeros(50))
+    post.update(1, np.ones(50))
+    rng = np.random.default_rng(0)
+    wins = sum(np.argmax(post.draw_rates(rng)) == 1 for _ in range(100))
+    assert wins > 90
+
+
+def test_chunk_posteriors_var_draws_positive_for_unseen_chunk():
+    """The pooled-variance prior keeps unexplored chunks in the race: an
+    unseen chunk's variance draw must not collapse to zero."""
+    post = AGG.ChunkPosteriors(2)
+    post.update(0, np.random.default_rng(0).normal(0, 2, 100))
+    draws = post.draw_vars(np.random.default_rng(1))
+    assert draws[1] > 0
+
+
+def test_budget_ledger_charges_and_price():
+    led = AGG.BudgetLedger()
+    assert led.oracle_us_per_frame() is None
+    led.charge_oracle(10, 500.0)
+    led.charge_oracle(5, 100.0)
+    led.charge_filter(100, 50.0)
+    assert led.oracle_calls == 15
+    assert led.oracle_us == pytest.approx(600.0)
+    assert led.filter_frames == 100
+    assert led.oracle_us_per_frame() == pytest.approx(40.0)
+    d = led.describe()
+    assert d["oracle_calls"] == 15 and d["filter_us"] == pytest.approx(50.0)

@@ -1,0 +1,448 @@
+"""Statistical-guarantee harness for the error-bounded aggregate engine.
+
+The contract object under test is probabilistic — "estimate within
++-eps of truth with probability >= confidence" — so the pin is
+EMPIRICAL: hundreds of seeded trials per contract shape, with the
+realized coverage required to clear the nominal level minus a binomial
+sampling tolerance.  Three families:
+
+- coverage/soundness sweeps (skewed vs uniform chunk rates, CV on/off,
+  adaptive vs uniform allocation): realized CI coverage, contract
+  satisfaction, and the early-termination soundness invariant
+  (terminating on "contract" with a CI wider than the contract is a
+  bug, full stop);
+- unbiasedness: the adaptive estimator's trial-mean matches the truth
+  and the uniform-sampling trial-mean within Monte-Carlo CIs (the
+  honest decision/estimation sample split is what makes this hold —
+  see repro.core.contracts);
+- oracle accounting: every oracle frame charged exactly once, no
+  spend after termination, LIMIT-k stops at exactly k confirmations
+  under adversarial match placements.
+
+Default profile runs the cheap seeded variants (~60 trials, short
+streams).  The ``slow`` marker (REPRO_SLOW=1, ``make test-slow``) runs
+the full >=200-trial sweeps at full stream sizes — same properties,
+tighter tolerances, mirroring the hypothesis full/ci split.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.aggregates import BudgetLedger
+from repro.core.contracts import (AggregateQuery, ContractExecutor,
+                                  make_value_fn)
+
+PRED = Q.ClassCount(0, Q.Op.GE, 1)
+
+
+def _bernoulli_stream(seed, n, rates):
+    """Per-chunk Bernoulli frame values + noisy verdict proxy."""
+    rng = np.random.default_rng(seed)
+    k = len(rates)
+    bounds = np.linspace(0, n, k + 1).astype(int)
+    y = np.zeros(n)
+    for j in range(k):
+        m = bounds[j + 1] - bounds[j]
+        y[bounds[j]:bounds[j + 1]] = (rng.random(m) < rates[j])
+    z = np.clip(y + rng.normal(0.0, 0.3, n), 0.0, 1.0)
+    return y, z
+
+
+def _run_one(seed, n, rates, allocation, cv, eps=0.1, **knobs):
+    y, z = _bernoulli_stream(seed, n, rates)
+    q = AggregateQuery(pred=PRED, agg="count", eps=eps)
+    ex = ContractExecutor(
+        q, lambda f: y[np.asarray(f)], n,
+        verdict_fn=(lambda f: z[np.asarray(f)].reshape(-1, 1)) if cv else None,
+        n_chunks=len(rates), allocation=allocation,
+        cv="auto" if cv else "off", seed=seed + 7919, **knobs)
+    return ex.run(), float(y.sum())
+
+
+SKEW6 = (0.01, 0.01, 0.01, 0.45, 0.02, 0.02)
+UNIF6 = (0.08,) * 6
+SKEW8 = (0.01, 0.01, 0.01, 0.01, 0.01, 0.45, 0.02, 0.02)
+UNIF8 = (0.08,) * 8
+
+SHAPES = [
+    ("skew-thompson-cv", SKEW6, "thompson", True),
+    ("unif-thompson-cv", UNIF6, "thompson", True),
+    ("skew-thompson-nocv", SKEW6, "thompson", False),
+    ("skew-uniform-alloc", SKEW6, "uniform", False),
+]
+
+
+def _coverage_sweep(trials, n, rates, allocation, cv, confidence=0.95):
+    covered = met = sound = 0
+    spend = []
+    for s in range(trials):
+        res, truth = _run_one(s, n, rates, allocation, cv)
+        covered += res.ci[0] - 1e-9 <= truth <= res.ci[1] + 1e-9
+        met += res.terminated in ("contract", "census")
+        # early-termination soundness: claiming "contract" with a CI
+        # wider than the contract allows is never acceptable
+        if res.terminated != "contract" or \
+                res.half_width <= res.query.eps * abs(res.estimate) + 1e-9:
+            sound += 1
+        spend.append(res.oracle_calls)
+    tol = 2.6 * math.sqrt(confidence * (1 - confidence) / trials)
+    return covered / trials, met / trials, sound, np.mean(spend), tol
+
+
+@pytest.mark.parametrize("name,rates,allocation,cv", SHAPES,
+                         ids=[s[0] for s in SHAPES])
+def test_contract_coverage_cheap(name, rates, allocation, cv):
+    trials = 60
+    cover, met, sound, _, tol = _coverage_sweep(trials, 1200, rates,
+                                                allocation, cv)
+    assert sound == trials, f"{trials - sound} unsound terminations"
+    assert cover >= 0.95 - tol, f"coverage {cover:.3f} < {0.95 - tol:.3f}"
+    assert met >= 0.95 - tol, f"contract-met {met:.3f} < {0.95 - tol:.3f}"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name,rates,allocation,cv",
+                         [("skew-thompson-cv", SKEW8, "thompson", True),
+                          ("unif-thompson-cv", UNIF8, "thompson", True),
+                          ("skew-thompson-nocv", SKEW8, "thompson", False),
+                          ("skew-uniform-alloc", SKEW8, "uniform", False)],
+                         ids=["skew-thompson-cv", "unif-thompson-cv",
+                              "skew-thompson-nocv", "skew-uniform-alloc"])
+def test_contract_coverage_full(name, rates, allocation, cv):
+    trials = 250
+    cover, met, sound, _, tol = _coverage_sweep(trials, 2000, rates,
+                                                allocation, cv)
+    assert sound == trials, f"{trials - sound} unsound terminations"
+    assert cover >= 0.95 - tol, f"coverage {cover:.3f} < {0.95 - tol:.3f}"
+    assert met >= 0.95 - tol, f"contract-met {met:.3f} < {0.95 - tol:.3f}"
+
+
+def _trial_means(trials, n, rates, allocation, cv):
+    ests = []
+    for s in range(trials):
+        res, truth = _run_one(s, n, rates, allocation, cv)
+        ests.append(res.estimate - truth)          # per-trial error
+    e = np.asarray(ests)
+    return float(e.mean()), float(e.std(ddof=1) / math.sqrt(trials))
+
+
+@pytest.mark.parametrize("trials", [60])
+def test_adaptive_estimate_unbiased(trials):
+    """The adaptive (Thompson + CV) estimator's error has mean zero —
+    matching truth AND the uniform-sampling baseline within Monte-Carlo
+    CIs.  This is the pin on the honest decision/estimation sample
+    split: a coupled adaptive design fails it by starving all-zero
+    chunks (optional stopping)."""
+    ad_mean, ad_sem = _trial_means(trials, 1200, SKEW6, "thompson", True)
+    un_mean, un_sem = _trial_means(trials, 1200, SKEW6, "uniform", False)
+    assert abs(ad_mean) <= 3.5 * ad_sem, \
+        f"adaptive bias {ad_mean:+.2f} (sem {ad_sem:.2f})"
+    assert abs(ad_mean - un_mean) <= \
+        3.5 * math.sqrt(ad_sem ** 2 + un_sem ** 2)
+
+
+@pytest.mark.slow
+def test_adaptive_estimate_unbiased_full():
+    trials = 250
+    ad_mean, ad_sem = _trial_means(trials, 2000, SKEW8, "thompson", True)
+    assert abs(ad_mean) <= 3.5 * ad_sem, \
+        f"adaptive bias {ad_mean:+.2f} (sem {ad_sem:.2f})"
+
+
+def test_adaptive_beats_uniform_on_skewed_stream():
+    """The engine's reason to exist: on a skewed-rate stream the
+    adaptive allocator must meet the same contract with fewer oracle
+    calls than uniform sampling (averaged over seeds — per-seed noise
+    can flip individual trials)."""
+    trials = 25
+    ad = [_run_one(s, 2000, SKEW8, "thompson", True)[0].oracle_calls
+          for s in range(trials)]
+    un = [_run_one(s, 2000, SKEW8, "uniform", False)[0].oracle_calls
+          for s in range(trials)]
+    assert np.mean(ad) < np.mean(un), \
+        f"adaptive {np.mean(ad):.0f} >= uniform {np.mean(un):.0f}"
+
+
+# ---------------------------------------------------------------------------
+# Oracle accounting: exactly-once charging, no post-termination spend
+# ---------------------------------------------------------------------------
+
+def _instrumented(y):
+    seen = []
+
+    def value_fn(frames):
+        seen.extend(int(f) for f in np.asarray(frames))
+        return y[np.asarray(frames)]
+    return value_fn, seen
+
+
+def test_oracle_frames_charged_exactly_once():
+    y, _ = _bernoulli_stream(3, 1500, SKEW6)
+    value_fn, seen = _instrumented(y)
+    ledger = BudgetLedger()
+    q = AggregateQuery(pred=PRED, agg="count", eps=0.1)
+    res = ContractExecutor(q, value_fn, 1500, n_chunks=6,
+                           ledger=ledger, seed=5).run()
+    assert len(seen) == len(set(seen)), "a frame was decoded twice"
+    assert res.oracle_calls == len(seen)
+    assert ledger.oracle_calls == len(seen)
+    assert int(res.decision_calls.sum() + res.allocation.sum()) == len(seen)
+
+
+def test_no_oracle_spend_after_termination():
+    y, _ = _bernoulli_stream(4, 2000, UNIF8)
+    value_fn, seen = _instrumented(y)
+    q = AggregateQuery(pred=PRED, agg="count", eps=0.25)   # loose: early stop
+    res = ContractExecutor(q, value_fn, 2000, n_chunks=8, seed=6).run()
+    assert res.terminated == "contract"
+    spent = len(seen)
+    assert spent < 2000, "early termination decoded the whole stream"
+    # touching the result does not decode anything further
+    _ = (res.estimate, res.half_width, res.ledger.describe())
+    assert len(seen) == spent
+    assert res.oracle_calls == spent
+
+
+def test_budget_cap_respected():
+    y, _ = _bernoulli_stream(5, 2000, SKEW8)
+    q = AggregateQuery(pred=PRED, agg="count", eps=0.001)  # unmeetable
+    res = ContractExecutor(q, lambda f: y[np.asarray(f)], 2000, n_chunks=8,
+                           max_oracle=64, seed=7).run()
+    assert res.terminated == "budget"
+    assert res.oracle_calls <= 64
+    assert not res.satisfied
+
+
+def test_filter_frames_charged_once_via_ledger():
+    y, z = _bernoulli_stream(6, 1500, SKEW6)
+    fseen = []
+
+    def verdict_fn(frames):
+        fseen.extend(int(f) for f in np.asarray(frames))
+        return z[np.asarray(frames)].reshape(-1, 1)
+    ledger = BudgetLedger()
+    q = AggregateQuery(pred=PRED, agg="count", eps=0.1)
+    ContractExecutor(q, lambda f: y[np.asarray(f)], 1500, n_chunks=6,
+                     verdict_fn=verdict_fn, cv="eager", ledger=ledger,
+                     seed=8).run()
+    assert len(fseen) == len(set(fseen)), "a frame was filtered twice"
+    assert ledger.filter_frames == len(fseen)
+
+
+def test_census_is_exact_and_charges_every_frame_once():
+    n = 160
+    y, _ = _bernoulli_stream(7, n, (0.02, 0.02, 0.02, 0.02))
+    value_fn, seen = _instrumented(y)
+    # +-0.4 frames absolute: only the exact answer clears it
+    q = AggregateQuery(pred=PRED, agg="count", eps=0.4, relative=False)
+    res = ContractExecutor(q, value_fn, n, n_chunks=4, seed=9).run()
+    # the contract is only satisfiable once every chunk is censused —
+    # whether the loop notices via the contract check (zero-width CI)
+    # or via pool exhaustion, the answer must be exact
+    assert res.terminated in ("contract", "census")
+    assert res.satisfied
+    assert res.estimate == pytest.approx(float(y.sum()))
+    assert res.half_width <= 0.4
+    assert sorted(set(seen)) == list(range(n))
+    assert len(seen) == n                                  # exactly once
+
+
+def test_all_zero_stream_never_claims_contract():
+    """A relative contract on an all-zero stream can only be discharged
+    by census — an empirical CI can never prove a rate is exactly 0."""
+    n = 400
+    y = np.zeros(n)
+    q = AggregateQuery(pred=PRED, agg="count", eps=0.1)
+    res = ContractExecutor(q, lambda f: y[np.asarray(f)], n,
+                           n_chunks=4, seed=10).run()
+    assert res.terminated == "census"
+    assert res.estimate == 0.0
+
+
+# ---------------------------------------------------------------------------
+# LIMIT-k: exactly k confirmations, stop on the k-th
+# ---------------------------------------------------------------------------
+
+def _limit_stream(n, match_at):
+    y = np.zeros(n)
+    y[list(match_at)] = 1.0
+    return y
+
+
+@pytest.mark.parametrize("placement", ["front", "back", "spread", "cluster"])
+def test_limit_k_stops_at_exactly_k(placement):
+    n, k = 1000, 5
+    match_at = {
+        "front": range(0, 40, 4),
+        "back": range(n - 40, n, 4),
+        "spread": range(0, n, 37),
+        "cluster": range(600, 625),
+    }[placement]
+    y = _limit_stream(n, match_at)
+    value_fn, seen = _instrumented(y)
+    q = AggregateQuery(pred=PRED, agg="count", limit=k)
+    res = ContractExecutor(q, value_fn, n, n_chunks=8, seed=11).run()
+    assert res.terminated == "limit"
+    assert res.satisfied
+    assert len(res.confirmations) == k                     # exactly k
+    assert all(y[f] > 0 for f in res.confirmations)
+    # the k-th confirmation is the LAST decoded frame: nothing is
+    # decoded after the executor has what it needs
+    assert seen[-1] == res.confirmations[-1]
+    assert len(seen) == len(set(seen)) == res.oracle_calls
+
+
+def test_limit_k_exhausts_to_census_when_matches_scarce():
+    n, k = 400, 5
+    y = _limit_stream(n, [50, 300])                        # only 2 matches
+    value_fn, seen = _instrumented(y)
+    q = AggregateQuery(pred=PRED, agg="count", limit=k)
+    res = ContractExecutor(q, value_fn, n, n_chunks=4, seed=12).run()
+    assert res.terminated == "census"
+    assert not res.satisfied
+    assert sorted(res.confirmations) == [50, 300]
+    assert len(seen) == len(set(seen))                     # still exactly-once
+
+
+# ---------------------------------------------------------------------------
+# Declarative API validation
+# ---------------------------------------------------------------------------
+
+def test_query_rejects_bad_agg():
+    with pytest.raises(ValueError, match="agg"):
+        AggregateQuery(pred=PRED, agg="median")
+
+
+def test_query_sum_requires_cls():
+    with pytest.raises(ValueError, match="cls"):
+        AggregateQuery(pred=PRED, agg="sum")
+
+
+def test_query_rejects_temporal_pred():
+    with pytest.raises(TypeError, match="frame-level"):
+        AggregateQuery(pred=Q.Duration(PRED, min_frames=3), agg="count")
+
+
+@pytest.mark.parametrize("kw", [dict(eps=0.0), dict(eps=-0.1),
+                                dict(confidence=0.3), dict(confidence=1.0),
+                                dict(limit=0)])
+def test_query_rejects_bad_contract_params(kw):
+    with pytest.raises(ValueError):
+        AggregateQuery(pred=PRED, agg="count", **kw)
+
+
+def test_make_value_fn_count_sum_mean():
+    frames = {0: [(0, 1, 1), (0, 2, 2), (1, 3, 3)],   # 2x cls0 + 1x cls1
+              1: [(1, 4, 4)],                         # no cls0
+              2: []}
+
+    def oracle_fn(idx):
+        return [frames[int(i)] for i in idx]
+    qc = AggregateQuery(pred=PRED, agg="count")
+    qs = AggregateQuery(pred=PRED, agg="sum", cls=0)
+    qm = AggregateQuery(pred=PRED, agg="mean", cls=0)
+    idx = np.array([0, 1, 2])
+    np.testing.assert_allclose(
+        make_value_fn(qc, oracle_fn, 4, 8)(idx), [1.0, 0.0, 0.0])
+    np.testing.assert_allclose(
+        make_value_fn(qs, oracle_fn, 4, 8)(idx), [2.0, 0.0, 0.0])
+    np.testing.assert_allclose(
+        make_value_fn(qm, oracle_fn, 4, 8)(idx), [2.0, 0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# Fleet hooks: per-chunk accumulators merge to the pooled state
+# ---------------------------------------------------------------------------
+
+def test_chunk_accumulators_merge_matches_pooled():
+    import functools
+    y, z = _bernoulli_stream(8, 1200, SKEW6)
+    q = AggregateQuery(pred=PRED, agg="count", eps=0.1)
+    ex = ContractExecutor(q, lambda f: y[np.asarray(f)], 1200,
+                          verdict_fn=lambda f: z[np.asarray(f)]
+                          .reshape(-1, 1),
+                          n_chunks=6, cv="eager", seed=13)
+    ex.run()
+    accs = [a for a in ex.chunk_accumulators() if int(a.n) > 0]
+    fwd = functools.reduce(lambda a, b: a.merge(b), accs)
+    rev = functools.reduce(lambda a, b: a.merge(b), accs[::-1])
+    pooled = ex.pooled_accumulator()
+    assert int(fwd.n) == int(rev.n) == int(pooled.n)
+    # f32 accumulator state: order changes roundoff, not the value
+    np.testing.assert_allclose(np.asarray(fwd.mean), np.asarray(rev.mean),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fwd.mean), np.asarray(pooled.mean),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fwd.M2), np.asarray(pooled.M2),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Registry-wired session: shared ledger, shared leaf table, clean retire
+# ---------------------------------------------------------------------------
+
+def test_aggregate_stream_session_shares_registry_ledger():
+    import jax.numpy as jnp
+    from repro.core.filters import FilterOutputs
+    from repro.core.streaming import AggregateStreamSession, QueryRegistry
+
+    n, n_classes, grid = 600, 4, 8
+    rng = np.random.default_rng(21)
+    has = rng.random(n) < 0.15
+    objs = [[(0, 2, 2)] if h else [] for h in has]
+    counts = np.zeros((n, n_classes), np.float32)
+    counts[has, 0] = 1.0
+    gridmap = np.full((n, grid, grid, n_classes), -10.0, np.float32)
+    gridmap[has, 2, 2, 0] = 10.0
+
+    def filter_fn(idx):
+        i = np.asarray(idx)
+        return FilterOutputs(counts=jnp.asarray(counts[i]),
+                             grid=jnp.asarray(gridmap[i]))
+
+    def oracle_fn(idx):
+        return [objs[int(i)] for i in idx]
+
+    reg = QueryRegistry()
+    q = AggregateQuery(pred=PRED, agg="count", eps=0.25)
+    with AggregateStreamSession(reg, q, filter_fn=filter_fn,
+                                oracle_fn=oracle_fn, n_frames=n,
+                                n_classes=n_classes, grid=grid,
+                                n_chunks=4, seed=3) as sess:
+        assert sess.qid in dict(reg.active())
+        res = sess.run()
+    assert sess.qid not in dict(reg.active())                      # retired on exit
+    truth = float(has.sum())
+    assert res.ci[0] - 1e-9 <= truth <= res.ci[1] + 1e-9
+    # one ledger, both halves: the session charged the registry account
+    assert reg.budget_ledger.oracle_calls == res.oracle_calls > 0
+    assert reg.budget_ledger is res.ledger
+
+
+# ---------------------------------------------------------------------------
+# Pricing provenance: measured CostModel -> realized ledger -> static
+# ---------------------------------------------------------------------------
+
+def test_pricing_provenance_prefers_measured_oracle_coeff():
+    import numpy as np
+    from repro.core import costmodel as CM
+    y, _ = _bernoulli_stream(9, 800, (0.05,) * 4)
+    q = AggregateQuery(pred=PRED, agg="count", eps=0.2)
+    base = CM.CostModel(
+        source="measured", backend="test",
+        coeffs={k: CM.StageCoeff(per_row=1.0)
+                for k in CM.STAGE_COEFF_KEYS})
+    measured = CM.calibrate_oracle(
+        base, lambda f: y[np.asarray(f)], lambda r: np.arange(r), repeat=1)
+    res = ContractExecutor(q, lambda f: y[np.asarray(f)], 800, n_chunks=4,
+                           cost_model=measured, seed=14).run()
+    assert res.pricing["oracle_price_source"] == "measured"
+    assert res.pricing["oracle_us_per_frame"] > 0
+
+    # without a measured coefficient, the realized ledger spend prices it
+    res2 = ContractExecutor(q, lambda f: y[np.asarray(f)], 800, n_chunks=4,
+                            seed=14).run()
+    assert res2.pricing["oracle_price_source"] in ("realized", "static")
