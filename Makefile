@@ -2,8 +2,8 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-slow test-multidevice test-deps bench \
-	bench-smoke calibrate docs-check
+.PHONY: test test-fast test-slow test-fuzz test-multidevice test-deps \
+	bench bench-smoke calibrate docs-check
 
 # tier-1 verify (full hypothesis profile — the default); depends on
 # docs-check so a stale doc reference fails the same gate as a test,
@@ -31,6 +31,15 @@ docs-check:
 # seeded fallbacks, same as `make test`)
 test-fast:
 	REPRO_HYPOTHESIS_PROFILE=ci PYTHONPATH=src $(PY) -m pytest -x -q
+
+# the differential temporal fuzz battery, pinned to the full example
+# budget (tests/test_temporal_fuzz.py: scan == numpy loop == per-frame
+# replay, bit-for-bit, across operator kinds / batch splits / stream
+# counts).  Without hypothesis installed the deterministic seeded
+# battery runs alone — any failure prints its generating seed
+test-fuzz:
+	REPRO_HYPOTHESIS_PROFILE=full PYTHONPATH=src $(PY) -m pytest -x -q \
+		tests/test_temporal_fuzz.py
 
 # extended repeated-trial statistical sweeps (hundreds of seeded trials
 # per contract shape — tests/test_contracts.py): the default profile

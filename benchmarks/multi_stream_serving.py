@@ -10,6 +10,12 @@ through the shared staged plan, across three configurations:
                 stream axis, vmapped steps — the stacking-only ablation)
   group_8dev    8 forced host devices, group engine + ``("stream",)`` mesh
                 ``shard_map`` + double-buffered prefetch
+  fleet_temporal_8dev
+                temporal query mix through the sharded group scan path
+                (``temporal.advance_group``): answers asserted identical
+                to per-stream serial runs, fleet-wide frame skipping and
+                signal-eval suppression recorded, plus a single-stream
+                scan-vs-numpy ``advance`` microbench
 
 Each configuration runs in a subprocess because ``XLA_FLAGS=
 --xla_force_host_platform_device_count=N`` must be set before jax is
@@ -199,6 +205,143 @@ def _worker_group(n_frames, warm_frames, shard):
     return res
 
 
+def _temporal_queries():
+    """Temporal mix that latches quickly at fleet rates: once every
+    stream's every query is window-decided, chunks skip fetch/stack/plan
+    outright — the workload that makes frames_skipped move."""
+    from repro.core import query as Q
+    return (
+        Q.Duration(Q.ClassCount(0, Q.Op.GE, 1), 3),
+        Q.Or((Q.SlidingCount(Q.ClassCount(1, Q.Op.GE, 1), 6, Q.Op.GE, 2),
+              Q.Not(Q.Count(Q.Op.GE, 12)))),
+        Q.SlidingCount(Q.Count(Q.Op.GE, 0), 2, Q.Op.GE, 0),
+        Q.Sequence(Q.ClassCount(0, Q.Op.GE, 1),
+                   Q.ClassCount(2, Q.Op.GE, 1), 5),
+    )
+
+
+def _worker_temporal(n_frames, warm_frames, shard):
+    """Fleet-temporal serving: group scan path vs per-stream serial
+    reference (answers asserted identical), plus a single-stream
+    scan-vs-numpy advance microbench."""
+    import jax
+    import numpy as np
+    from repro.core import costmodel as CM
+    from repro.core.filters import FilterOutputs
+    from repro.core.plan import QueryPlan
+    from repro.core.streaming import (HoppingWindow,
+                                      MultiQueryStreamExecutor,
+                                      QueryRegistry)
+    from repro.core.temporal import TemporalProgram
+    from repro.distributed import sharding as SH
+    from repro.distributed.multistream import (MultiStreamExecutor,
+                                               plan_group_engine_factory,
+                                               route_streams)
+    from benchmarks.common import device_topology
+
+    queries = _temporal_queries()
+    n_slots = jax.device_count()
+    stream_ids = [f"cam{i}" for i in range(S)]
+    streams = route_streams(stream_ids, n_slots)
+    mesh = SH.stream_mesh() if shard and n_slots > 1 else None
+    # hotter streams than the filter workload: the latching mix needs
+    # activity to decide windows early
+    import jax.numpy as jnp
+    data = {}
+    for ctx in streams:
+        r = np.random.default_rng(ctx.seed % 2**32)
+        rate = 1.0 + 0.1 * ctx.position
+        data[ctx.stream_id] = (
+            jnp.asarray(r.poisson(rate, (n_frames, C)).astype(np.float32)),
+            jnp.asarray((r.random((n_frames, G, G, C)) < 0.05)
+                        .astype(np.float32)))
+
+    def fetch(ctx, idx):
+        c, g = data[ctx.stream_id]
+        return FilterOutputs(counts=c[idx], grid=g[idx])
+
+    registry = QueryRegistry()
+    for q in queries:
+        registry.register(q)
+    ex = MultiStreamExecutor(
+        registry, plan_group_engine_factory(fetch, mesh=mesh,
+                                            tau=TAU, restage_every=0),
+        HoppingWindow(size=WINDOW, advance=WINDOW), BATCH,
+        stream_ids, n_slots=n_slots)
+    ex.run(warm_frames)                 # compile scan + staged steps
+    ex.chunk_latencies_s.clear()
+    ex._engine.temporal_stats.__init__()    # steady-state stats only
+
+    t0 = time.perf_counter()
+    results = ex.run(n_frames)
+    wall = time.perf_counter() - t0
+    ts = ex._engine.temporal_stats
+
+    # identity: per-stream serial masks-as-answers reference (numpy
+    # backend — the fleet path's differential baseline)
+    class SerialEngine:
+        def __init__(self, qs, sid):
+            self.prog = TemporalProgram(tuple(qs), backend="numpy")
+            c, g = data[sid]
+            self.masks = np.asarray(QueryPlan(
+                tuple(self.prog.frame_queries), tau=TAU).evaluate(
+                    FilterOutputs(counts=c, grid=g)))
+
+        def on_window_start(self, lo, hi):
+            self.prog.start_window(hi - lo)
+
+        def __call__(self, idx):
+            sup = self.prog.suppressed_signals()
+            return self.prog.advance(
+                self.masks[np.asarray(idx)] & ~sup[None, :])
+
+    for sid in stream_ids:
+        reg = QueryRegistry()
+        for q in queries:
+            reg.register(q)
+        serial = MultiQueryStreamExecutor(
+            reg, lambda qs, sid=sid: SerialEngine(qs, sid),
+            HoppingWindow(size=WINDOW, advance=WINDOW), BATCH).run(n_frames)
+        for w, res in enumerate(results):
+            assert res.span == serial[w].span
+            assert res.hits[sid] == serial[w].hits, (sid, w)
+
+    # scan-vs-loop advance microbench (single stream, steady state)
+    prog_sig = np.random.default_rng(0)
+    reps = 3 if n_frames <= 128 else 10
+    times = {}
+    for backend in ("scan", "numpy"):
+        prog = TemporalProgram(queries, backend=backend)
+        sig = prog_sig.random((WINDOW, prog.n_signals)) < 0.5
+
+        def one_window(prog=prog, sig=sig):
+            prog.start_window(WINDOW)
+            for b0 in range(0, WINDOW, BATCH):
+                prog.advance(sig[b0:b0 + BATCH])
+        one_window()                    # trace/warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            one_window()
+        times[backend] = (time.perf_counter() - t0) / reps
+
+    return {"mode": "temporal", "fps": S * n_frames / wall,
+            "wall_s": wall, "frames": S * n_frames,
+            "sharded": ex._engine.shard_wrap is not None,
+            "latency_p50_ms": ex.latency_percentile(50) * 1e3,
+            "latency_p95_ms": ex.latency_percentile(95) * 1e3,
+            "identity_streams": S,
+            "frames_in": ts.frames_in,
+            "frames_skipped": ts.frames_skipped,
+            "signal_evals_skipped": ts.signal_evals_skipped,
+            "cost_saved_model": ts.cost_saved_model,
+            "cost_temporal_model": ts.cost_temporal_model,
+            "scan_advance_ms": times["scan"] * 1e3,
+            "numpy_advance_ms": times["numpy"] * 1e3,
+            "scan_vs_loop_speedup": times["numpy"] / times["scan"],
+            "calibration_info": CM.default_cost_model().describe(),
+            "topology": device_topology(mesh)}
+
+
 # --------------------------------------------------------------------------
 # Parent: spawn one worker per device topology, assemble the JSON
 # --------------------------------------------------------------------------
@@ -231,6 +374,7 @@ def run(smoke: bool = False) -> dict:
     serial = _spawn("serial", 1, smoke)
     group1 = _spawn("group", 1, smoke)
     group8 = _spawn("group", 8, smoke, shard=True)
+    tempo8 = _spawn("temporal", 8, smoke, shard=True)
 
     speedup = group8["fps"] / serial["fps"]
     stacking = group1["fps"] / serial["fps"]
@@ -238,6 +382,7 @@ def run(smoke: bool = False) -> dict:
         "streams": S, "batch": BATCH, "frames_per_stream": n_frames,
         "window": WINDOW, "smoke": smoke,
         "serial_1dev": serial, "group_1dev": group1, "group_8dev": group8,
+        "fleet_temporal_8dev": tempo8,
         "speedup_8dev_vs_1dev": speedup,
         "speedup_stacking_only_1dev": stacking,
         "warm_start": group8.get("warm_start"),
@@ -253,6 +398,10 @@ def run(smoke: bool = False) -> dict:
     emit("multi_stream_serving/group_8dev", 1e6 / group8["fps"],
          f"fps={group8['fps']:.0f};speedup={speedup:.2f}x;"
          f"p95_ms={group8['latency_p95_ms']:.1f}")
+    emit("multi_stream_serving/fleet_temporal_8dev", 1e6 / tempo8["fps"],
+         f"fps={tempo8['fps']:.0f};"
+         f"skipped={tempo8['frames_skipped']}/{tempo8['frames_in']};"
+         f"scan_vs_loop={tempo8['scan_vs_loop_speedup']:.2f}x")
     print(f"serial 1dev : {serial['fps']:10.0f} frames/s")
     print(f"group  1dev : {group1['fps']:10.0f} frames/s "
           f"({stacking:.2f}x — stacking-only ablation)")
@@ -260,6 +409,12 @@ def run(smoke: bool = False) -> dict:
           f"({speedup:.2f}x vs serial 1dev; sharded="
           f"{group8['sharded']}; chunk p50={group8['latency_p50_ms']:.1f}ms "
           f"p95={group8['latency_p95_ms']:.1f}ms)")
+    print(f"temporal8dev: {tempo8['fps']:10.0f} frames/s "
+          f"(answers == serial for {tempo8['identity_streams']} streams; "
+          f"frames skipped {tempo8['frames_skipped']}/"
+          f"{tempo8['frames_in']}, signal evals skipped "
+          f"{tempo8['signal_evals_skipped']}; scan-vs-loop advance "
+          f"{tempo8['scan_vs_loop_speedup']:.2f}x)")
     ws = payload["warm_start"]
     print(f"warm-start  : cold order {ws['cold_stage_order']} -> "
           f"warm {ws['warm_stage_order']} "
@@ -274,7 +429,7 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale budget; still writes "
                          "results/bench/multi_stream_serving.json")
-    ap.add_argument("--worker", choices=["serial", "group"],
+    ap.add_argument("--worker", choices=["serial", "group", "temporal"],
                     help="internal: run one timing configuration "
                          "in-process and print its JSON")
     ap.add_argument("--devices", type=int, default=1)
@@ -288,6 +443,8 @@ def main():
         warm = WINDOW
         if args.worker == "serial":
             out = _worker_serial(n_frames, warm)
+        elif args.worker == "temporal":
+            out = _worker_temporal(n_frames, warm, args.shard)
         else:
             out = _worker_group(n_frames, warm, args.shard)
         print(SENTINEL + json.dumps(out, default=str), flush=True)

@@ -226,7 +226,8 @@ class ContractExecutor:
                  ledger: Optional[BudgetLedger] = None,
                  max_oracle: Optional[int] = None,
                  min_samples: int = 48,
-                 sweep_batch: int = 256, seed: int = 0):
+                 sweep_batch: int = 256, seed: int = 0,
+                 chunk_oracle_cost: Optional[Sequence[float]] = None):
         from repro.core import costmodel as CM
         if n_frames < 1:
             raise ValueError(f"n_frames must be >= 1, got {n_frames}")
@@ -268,6 +269,18 @@ class ContractExecutor:
                                self.max_oracle)
         self.sweep_batch = int(sweep_batch)
         self.rng = np.random.default_rng(seed)
+        if chunk_oracle_cost is not None:
+            coc = np.asarray(chunk_oracle_cost, np.float64)
+            if coc.shape != (self.n_chunks,):
+                raise ValueError(
+                    f"chunk_oracle_cost must have one entry per chunk "
+                    f"({self.n_chunks}), got shape {coc.shape}")
+            if not np.all(np.isfinite(coc)) or np.any(coc <= 0):
+                raise ValueError("chunk_oracle_cost entries must be "
+                                 "positive and finite")
+            self.chunk_oracle_cost: Optional[np.ndarray] = coc
+        else:
+            self.chunk_oracle_cost = None
 
         # contiguous chunk partition; each chunk's frames are shuffled
         # once up front and SPLIT into a decision pool (first
@@ -312,6 +325,12 @@ class ContractExecutor:
         self._ycache: Dict[int, float] = {}
         self._zcache: Dict[int, np.ndarray] = {}
         self._unique = np.zeros(self.n_chunks, np.int64)
+        # realized per-chunk oracle wall time: the batch's µs are split
+        # evenly across its novel frames and attributed to their chunks,
+        # so chunks whose frames decode/evaluate slower accumulate a
+        # higher realized price
+        self._chunk_us = np.zeros(self.n_chunks, np.float64)
+        self._chunk_oracle_frames = np.zeros(self.n_chunks, np.int64)
         self._oracle_spent = 0                 # novel frames charged
         self._rounds = 0
         self.confirmations: List[int] = []
@@ -336,7 +355,10 @@ class ContractExecutor:
             self._oracle_spent += novel.size
             for f, v in zip(novel, vals):
                 self._ycache[int(f)] = float(v)
-            np.add.at(self._unique, self._chunk_of(novel), 1)
+            chunks = self._chunk_of(novel)
+            np.add.at(self._unique, chunks, 1)
+            np.add.at(self._chunk_us, chunks, us / novel.size)
+            np.add.at(self._chunk_oracle_frames, chunks, 1)
         return np.array([self._ycache[int(f)] for f in frames], np.float64)
 
     def _verdicts(self, frames: np.ndarray) -> np.ndarray:
@@ -370,6 +392,23 @@ class ContractExecutor:
         if model is not None:                      # static relative units
             return float(model), "static"
         return 1.0, "unknown"                      # pragma: no cover
+
+    def _chunk_prices(self) -> Tuple[np.ndarray, str]:
+        """Per-chunk oracle price vector + provenance.  Preference order:
+        an explicit ``chunk_oracle_cost`` knob; realized per-chunk wall
+        time where a chunk has bought enough oracle frames to trust it
+        (``min_per_chunk``), the uniform price filling the rest; else the
+        uniform ``_oracle_price()`` broadcast."""
+        if self.chunk_oracle_cost is not None:
+            return self.chunk_oracle_cost.copy(), "explicit"
+        uniform, src = self._oracle_price()
+        prices = np.full(self.n_chunks, uniform, np.float64)
+        seen = self._chunk_oracle_frames >= max(self.min_per_chunk, 1)
+        if seen.any():
+            prices[seen] = (self._chunk_us[seen]
+                            / self._chunk_oracle_frames[seen])
+            return prices, "realized-chunk"
+        return prices, src
 
     def _filter_price(self) -> Tuple[float, str]:
         if self.ledger.filter_frames > 0 and self.ledger.filter_us > 0:
@@ -556,9 +595,11 @@ class ContractExecutor:
         # error contract: variance shrink of moving this batch's
         # estimation draws into chunk j — d/dn of W_j^2 s_j^2 / n_j,
         # Thompson-sampled s_j^2 from the DECISION-stream posterior —
-        # per microsecond of oracle time (uniform price across chunks
-        # today, but the ledger records it and a per-chunk-priced oracle
-        # slots in here).  For count aggregates the variance draw comes
+        # per microsecond of oracle time, priced PER CHUNK: an expensive
+        # chunk must promise proportionally more shrink to win the batch
+        # (``_chunk_prices`` — explicit knob, realized per-chunk wall
+        # time, or the uniform fallback).  For count aggregates the
+        # variance draw comes
         # from the Beta rate posterior (p(1-p)), the same family behind
         # the estimator's zero-spread floor: if the two disagreed, the
         # allocator would starve exactly the chunks whose floor
@@ -569,9 +610,10 @@ class ContractExecutor:
         else:
             draws = self.post.draw_vars(self.rng)
         n = np.maximum(self._n_est, 1)
-        price, _ = self._oracle_price()
+        prices, _ = self._chunk_prices()
         score = (self.weights ** 2 * draws
-                 * (1.0 / n - 1.0 / (n + batch))) / max(price * batch, 1e-12)
+                 * (1.0 / n - 1.0 / (n + batch))) \
+            / np.maximum(prices * batch, 1e-12)
         return max(elig, key=lambda j: score[j])
 
     def _maybe_sweep_cv(self) -> None:
@@ -758,6 +800,7 @@ class ContractExecutor:
         s = self._scale()
         o_price, o_src = self._oracle_price()
         f_price, f_src = self._filter_price()
+        _, c_src = self._chunk_prices()
         e = self._pooled_est()
         vr = float(e.variance_reduction) if e is not None else 1.0
         return ContractResult(
@@ -775,6 +818,7 @@ class ContractExecutor:
                      "oracle_price_source": o_src,
                      "filter_us_per_frame": f_price,
                      "filter_price_source": f_src,
+                     "chunk_price_source": c_src,
                      "cost_model": self.cost_model.source},
             ledger=self.ledger)
 

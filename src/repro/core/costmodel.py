@@ -110,6 +110,11 @@ STATIC_STEP_OVERHEAD = 4.0
 # is a ~2 orders-of-magnitude gap between the specialized filter and the
 # oracle, which is what makes cascades (and sampled aggregation) pay.
 STATIC_COST_ORACLE = 100.0
+# Static relative cost of advancing the temporal automata over one full
+# batch of frame verdicts (the jitted scan step in repro.core.temporal)
+# — cheap next to any filter stage, but nonzero so the temporal tier's
+# work stays priced instead of free.
+STATIC_COST_TEMPORAL = 2.0
 
 #: Reference batch size for batch-agnostic cost queries (stage ranking
 #: before any traffic has been seen).  The static model is scale-free in
@@ -367,6 +372,22 @@ class CostModel:
         c = self.coeffs.get("oracle")
         return c.cost(rows) if c is not None else None
 
+    def temporal_cost(self, *, frames: float,
+                      batch: Optional[float] = None) -> Optional[float]:
+        """Cost of advancing the temporal automata over ``frames``
+        frames of a ``batch``-frame batch (repro.core.temporal's scan
+        step), in this model's units.  The static model follows the
+        stage convention (``unit * rows / batch``, scale-free at full
+        batch); a measured model answers in microseconds from its
+        ``"temporal"`` coefficient — optional like ``"oracle"``, fitted
+        by ``calibrate()`` since PR 10 but absent from older
+        calibrations, where returning None beats mixing unit systems."""
+        if self.source == "static":
+            b = batch if batch is not None else frames
+            return STATIC_COST_TEMPORAL * float(frames) / max(float(b), 1.0)
+        c = self.coeffs.get("temporal")
+        return c.cost(frames) if c is not None else None
+
     def describe(self) -> Dict:
         """Operator/provenance view (recorded next to bench results)."""
         return {
@@ -500,20 +521,23 @@ def load_calibration(path: Optional[str] = None, *,
                 or per_row < 0 or overhead < 0:
             return None
         coeffs[k] = StageCoeff(per_row=per_row, overhead=overhead)
-    # the optional oracle coefficient (calibrate_oracle): absent in most
-    # calibrations — the oracle is caller code — and advisory when
-    # present, so a malformed entry drops the entry, not the file
-    orc = coeffs_raw.get("oracle")
-    if isinstance(orc, dict):
-        try:
-            per_row = float(orc["per_row"])
-            overhead = float(orc.get("overhead", 0.0))
-            if np.isfinite(per_row) and np.isfinite(overhead) \
-                    and per_row >= 0 and overhead >= 0:
-                coeffs["oracle"] = StageCoeff(per_row=per_row,
-                                              overhead=overhead)
-        except (TypeError, KeyError, ValueError):
-            pass
+    # optional coefficients: "oracle" (calibrate_oracle — the oracle is
+    # caller code, absent in most calibrations) and "temporal" (the
+    # automaton scan step, absent from pre-PR-10 calibrations).  Both
+    # are advisory when present, so a malformed entry drops the entry,
+    # not the file
+    for opt in ("oracle", "temporal"):
+        c = coeffs_raw.get(opt)
+        if isinstance(c, dict):
+            try:
+                per_row = float(c["per_row"])
+                overhead = float(c.get("overhead", 0.0))
+                if np.isfinite(per_row) and np.isfinite(overhead) \
+                        and per_row >= 0 and overhead >= 0:
+                    coeffs[opt] = StageCoeff(per_row=per_row,
+                                             overhead=overhead)
+            except (TypeError, KeyError, ValueError):
+                pass
     try:
         step = float(payload.get("step_overhead_us"))
         calibrated_at = float(payload.get("calibrated_at"))
@@ -742,6 +766,25 @@ def calibrate(*, batch: int = 256, grid: int = 16, classes: int = 8,
         return jnp.concatenate([~decided.all(0), ~decided.all(1)])
 
     step_us = _timeit(step_overhead_body, leaf_vals, repeat=repeat)
+
+    # --- temporal tier: the jitted automaton scan step -------------------
+    from repro.core.temporal import TemporalProgram
+    t_queries = []
+    for i in range(4):
+        p1 = Q.ClassCount(i % C, Q.Op.GE, 1)
+        p2 = Q.ClassCount((i + 1) % C, Q.Op.GE, 1)
+        t_queries += [Q.Duration(p1, 3), Q.Sequence(p1, p2, 4),
+                      Q.SlidingCount(p2, 6, Q.Op.GE, 2)]
+    t_prog = TemporalProgram(t_queries)
+    t_sig_all = rng.random((B, t_prog.n_signals)) < 0.5
+    t_prog.start_window(B)
+    t_step = jax.jit(t_prog.build_scan_fn())
+    t_state = t_prog._state_tuple()
+    samples["temporal"] = []
+    for r in rows_points:
+        t_sig = jnp.asarray(t_sig_all[:r])
+        samples["temporal"].append(
+            (r, _timeit(t_step, t_state, t_sig, repeat=repeat)))
 
     coeffs = {k: _fit_affine(v) for k, v in samples.items()}
     backend = None

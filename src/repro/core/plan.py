@@ -1462,15 +1462,20 @@ class StagedQueryPlan:
             known[self.stages[sj].slots] = True
         known[slots] = True
 
+        # ``presumed`` is the per-stream (D,) slice of the caller's
+        # presumed-decided mask (vmapped over the stream axis), joining
+        # the undecided reductions exactly as in the single-stream step
         if bucket is None:
-            def step_fn(out, leaf_vals):
+            def step_fn(out, leaf_vals, presumed):
                 vals = stage_body(out)                     # (B, k) bool
                 leaf_vals = leaf_vals.at[:, slots].set(vals)
                 value, decided = plan._propagate_distinct(leaf_vals, known)
-                undec = jnp.concatenate([~decided.all(0), ~decided.all(1)])
+                dec = decided | presumed[None, :]
+                undec = jnp.concatenate([~dec.all(0), ~dec.all(1)])
                 return leaf_vals, value, decided, undec, vals.sum(0)
         else:
-            def step_fn(out, leaf_vals, value, decided, idx, n_real):
+            def step_fn(out, leaf_vals, value, decided, idx, n_real,
+                        presumed):
                 vals = (stage_body(out, rows=idx, body=body) if spatial
                         else stage_body(out, rows=idx))    # (R, k) bool
                 sub = leaf_vals[idx].at[:, slots].set(vals)
@@ -1478,7 +1483,8 @@ class StagedQueryPlan:
                 v, dec = plan._propagate_distinct(sub, known)
                 value = value.at[idx].set(v)
                 decided = decided.at[idx].set(dec)
-                undec = jnp.concatenate([~decided.all(0), ~decided.all(1)])
+                dec_eff = decided | presumed[None, :]
+                undec = jnp.concatenate([~dec_eff.all(0), ~dec_eff.all(1)])
                 valid = jnp.arange(vals.shape[0]) < n_real
                 return (leaf_vals, value, decided, undec,
                         (vals & valid[:, None]).sum(0))
@@ -1493,7 +1499,9 @@ class StagedQueryPlan:
 
     def evaluate_group(self, outs: FilterOutputs, *,
                        shard_wrap: Optional[Callable] = None,
-                       wrap_sig: Optional[Tuple] = None) -> jax.Array:
+                       wrap_sig: Optional[Tuple] = None,
+                       presumed_decided: Optional[np.ndarray] = None
+                       ) -> jax.Array:
         """(S, B, N) bool masks for S streams' stacked batches —
         per-stream slice bit-identical to ``evaluate`` on that stream's
         batch alone.
@@ -1524,9 +1532,18 @@ class StagedQueryPlan:
         rows each stream's slice evaluated, times S — the cost model
         prices the sharded step as S vmapped stage bodies.
 
-        The temporal tier's ``presumed_decided`` is deliberately not
-        offered here: temporal engines are per-stream stateful and ride
-        the per-stream path.
+        ``presumed_decided`` — optional (S, N) bool mask of query
+        columns each *stream's* temporal tier has already
+        window-decided (see ``evaluate``'s single-stream contract; the
+        fleet engine stacks ``TemporalProgram.suppressed_signals``-
+        driven decidedness per stream).  Presumption is per-stream:
+        stream s's presumed columns stop feeding its skip/stop/
+        compaction tests while other streams keep evaluating, and the
+        group-uniform relaxation still holds — presumption only ever
+        *removes* work, never changes an evaluated cell.  Presumed
+        columns' returned values are UNSPECIFIED, as in ``evaluate``;
+        stages skipped only thanks to presumption land in
+        ``StageReport.skipped_presumed`` / ``cost_presumed_saved``.
 
         ``wrap_sig`` — optional stable content signature for
         ``shard_wrap`` (mesh topology digest); lets rebuilt engines over
@@ -1535,11 +1552,46 @@ class StagedQueryPlan:
         plan = self.plan
         S, B = outs.counts.shape[:2]
         self._last_batch = B
+        N = len(plan.queries)
         D = plan.n_distinct
+        if presumed_decided is None:
+            presumed = np.zeros((S, N), bool)
+        else:
+            presumed = np.asarray(presumed_decided, bool)
+            if presumed.shape != (S, N):
+                raise ValueError(f"presumed_decided must be shape "
+                                 f"({S}, {N}), got {presumed.shape}")
+        # per-stream distinct-space presumption: a distinct column is
+        # presumed only when ALL query columns mapping to it are (same
+        # rule as the single-stream path, applied per stream)
+        presumed_d = np.ones((S, D), bool)
+        for s in range(S):
+            np.logical_and.at(presumed_d[s], plan.dup_map, presumed[s])
+        if presumed_d.all():
+            # every stream's every query is window-decided: the whole
+            # group batch is one presumed skip (the fleet engine's
+            # temporal all-decided fast path)
+            report = StageReport(
+                order=[self.stages[s].name for s in self.order],
+                cost_total=S * plan.exhaustive_cost_model(self.cost_model,
+                                                          batch=B),
+                batch=S * B)
+            stage_rows = []
+            for si in self.order:
+                st = self.stages[si]
+                report.skipped.append(st.name)
+                report.skipped_presumed.append(st.name)
+                report.cost_presumed_saved += S * self.cost_model.stage_cost(
+                    st.kind, rows=B, batch=B, radius=st.radius)
+                stage_rows.append((st.name, 0, S * B, None, None))
+            self.last_report = report
+            self._pending = ([], stage_rows)
+            return jnp.zeros((S, B, N), bool)
+        presumed_dev = jnp.asarray(presumed_d)
         leaf_vals = jnp.zeros((S, B, plan.n_slot_cols), bool)
         value = jnp.zeros((S, B, D), bool)
         decided = jnp.zeros((S, B, D), bool)
-        undecided_cols = np.ones((S, D), bool)
+        undecided_cols = ~presumed_d
         undecided_rows = np.ones((S, B), bool)
         report = StageReport(order=[self.stages[s].name for s in self.order],
                              cost_total=S * plan.exhaustive_cost_model(
@@ -1554,6 +1606,12 @@ class StagedQueryPlan:
             st = self.stages[si]
             if not (self._uses_stage[None, :, si] & undecided_cols).any():
                 report.skipped.append(st.name)
+                if (self._uses_stage[None, :, si] & presumed_d).any():
+                    # would have run for presumed columns' sake alone
+                    report.skipped_presumed.append(st.name)
+                    report.cost_presumed_saved += \
+                        S * self.cost_model.stage_cost(
+                            st.kind, rows=B, batch=B, radius=st.radius)
                 stage_rows.append((st.name, 0, S * B, None, None))
                 continue
             if st.kind != "count" and outs.grid is None:
@@ -1575,7 +1633,7 @@ class StagedQueryPlan:
                 step = self._get_group_step(si, ran, None, body, S,
                                             shard_wrap, wrap_sig)
                 leaf_vals, value, decided, undec, counts = step(
-                    outs, leaf_vals)
+                    outs, leaf_vals, presumed_dev)
                 rows_eval = B
             else:
                 body = self._body_for(si, bucket)
@@ -1592,7 +1650,7 @@ class StagedQueryPlan:
                     idx[s, n:] = rows_s[-1] if n else 0
                 leaf_vals, value, decided, undec, counts = step(
                     outs, leaf_vals, value, decided, jnp.asarray(idx),
-                    jnp.asarray(n_rows.astype(np.int32)))
+                    jnp.asarray(n_rows.astype(np.int32)), presumed_dev)
                 rows_eval = bucket
             if rows_eval == B:
                 # full-batch group evaluation: S·B unconditional frames
@@ -1614,7 +1672,7 @@ class StagedQueryPlan:
                 st.kind, rows=rows_eval, batch=B, radius=st.radius,
                 body=body if body in ("rows", "full") else None)
             report.undecided_after.append(
-                int(undecided_cols[:, plan.dup_map].sum()))
+                int((undecided_cols[:, plan.dup_map] & ~presumed).sum()))
             if not undecided_cols.any():
                 break
         for sj in self.order[len(report.ran) + len(report.skipped):]:

@@ -552,7 +552,11 @@ class MultiQueryStreamExecutor:
                     # per (window, engine) — including for an engine
                     # rebuilt mid-window by registry churn, which starts
                     # cold from the current batch (documented: mid-window
-                    # churn resets temporal state)
+                    # churn resets temporal state).  The fleet loop
+                    # (distributed.multistream.MultiStreamExecutor.run)
+                    # mirrors this discipline exactly so sharded
+                    # fleet-temporal answers stay bit-identical to this
+                    # serial path.
                     hook = getattr(engine, "on_window_start", None)
                     if hook is not None:
                         hook(lo, hi)

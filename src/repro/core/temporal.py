@@ -28,12 +28,23 @@ Structure (mirroring repro.core.plan's discipline):
     ``ClassCount(car >= 1)`` share one signal, evaluated once by the
     shared frame-level cascade over ``frame_queries``.
 
-2.  **Batched automata.**  Automaton state lives in per-kind numpy
-    vectors (run lengths, sequence deadlines, sliding-count ring
-    buffers) advanced frame-by-frame across *all* automata at once —
-    the temporal analogue of the planner's slot vectorization.  All
-    three operators have *latched* (monotone) outputs within a hopping
-    window: False until the event completes, True afterwards.
+2.  **Batched automata.**  Automaton state lives in per-kind vectors
+    (run lengths, sequence deadlines, sliding-count ring buffers)
+    advanced frame-by-frame across *all* automata at once — the
+    temporal analogue of the planner's slot vectorization.  All three
+    operators have *latched* (monotone) outputs within a hopping
+    window: False until the event completes, True afterwards.  The
+    default backend lowers the whole batch into one jitted
+    ``jax.lax.scan`` step (carry = the stacked automaton state, ys =
+    the per-frame automaton outputs, followed by the same levelized
+    assembly in jnp), registered in a ``StepCache`` under the program's
+    content digest; ``backend="numpy"`` (or
+    ``REPRO_TEMPORAL_BACKEND=numpy``) keeps the per-frame loop alive as
+    the differential reference.  ``advance_group`` vmaps the identical
+    scan step over a leading stream axis (optionally ``shard_map``-ed
+    over a stream mesh) so the fleet engine advances S windows at once.
+    Host-side decidedness stays numpy: the scan writes its final state
+    back into the same per-kind mirrors the bounds propagation reads.
 
 3.  **NNF incidence assembly.**  The stripped skeletons are normalised
     to NNF and flattened into one levelized incidence program over
@@ -62,14 +73,19 @@ tests/test_temporal_properties.py.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import query as Q
+from repro.core.stepcache import StepCache, content_digest
 
 __all__ = ["TemporalProgram", "TemporalEngine", "TemporalStats",
-           "replay_reference"]
+           "advance_group", "replay_reference"]
+
+# valid values for TemporalProgram(backend=) / REPRO_TEMPORAL_BACKEND
+_BACKENDS = ("scan", "numpy")
 
 
 # --------------------------------------------------------------------------
@@ -111,6 +127,9 @@ class TemporalStats:
     windows: int = 0
     cost_saved_model: float = 0.0  # CostModel-priced work avoided: presumed
                                    # stage skips + whole-batch filter skips
+    cost_temporal_model: float = 0.0  # CostModel-priced automaton-advance
+                                      # work actually paid (measured when a
+                                      # "temporal" coefficient is calibrated)
 
 
 class TemporalProgram:
@@ -125,11 +144,30 @@ class TemporalProgram:
     far*.  Purely frame-level queries (no temporal operator) are
     supported — their output is just the assembled frame verdict and
     they never become future-decided.
+
+    ``backend`` selects how ``advance`` runs the automata: ``"scan"``
+    (default; overridable via ``REPRO_TEMPORAL_BACKEND``) lowers the
+    batch into one jitted ``jax.lax.scan`` step cached in
+    ``step_cache`` (a private ``StepCache`` when none is given) under
+    the program's content digest; ``"numpy"`` keeps the per-frame loop
+    — the differential reference the fuzz harness pins the scan
+    against.  Both are bit-identical by construction and by test.
     """
 
-    def __init__(self, queries: Sequence[Q.Predicate]):
+    def __init__(self, queries: Sequence[Q.Predicate], *,
+                 backend: Optional[str] = None,
+                 step_cache: Optional[StepCache] = None):
         if not queries:
             raise ValueError("TemporalProgram needs at least one query")
+        if backend is None:
+            backend = os.environ.get("REPRO_TEMPORAL_BACKEND", "scan")
+        if backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, "
+                             f"got {backend!r}")
+        self.backend = backend
+        self._step_cache = step_cache if step_cache is not None \
+            else StepCache()
+        self.scan_traces = 0          # scan-step builds (compile-equivalent)
         self.queries = tuple(queries)
         N = len(self.queries)
 
@@ -219,6 +257,17 @@ class TemporalProgram:
         self.has_temporal = T > 0
 
         self._compile_levels(skeletons)
+        # content signature: everything the scan step bakes in as
+        # trace-time constants (per-kind parameter vectors + the
+        # levelized assembly) — the StepCache key, so two programs over
+        # the same canonical queries share compiled steps
+        self.program_sig = content_digest(
+            "temporal-program", M, T, N,
+            self._d_cols, self._d_sig, self._d_min,
+            self._s_cols, self._s_siga, self._s_sigb, self._s_within,
+            self._c_cols, self._c_sig, self._c_win, self._c_op,
+            self._c_val, self.root_col, self.root_neg, self.n_cols,
+            *[part for lvl in self._levels for part in lvl])
         self.start_window(0)
 
     # -- skeleton compilation (levelized NNF incidence program) -----------
@@ -351,11 +400,25 @@ class TemporalProgram:
             raise ValueError(
                 f"advance past window end: pos={self.pos} + B={B} > "
                 f"window_len={self.window_len} (call start_window)")
-        T = self.n_automata
-        touts = np.zeros((B, T), bool)
         # decidedness as of the window prefix consumed BEFORE this batch:
         # these columns' outputs are constants this whole batch
         dec_before = self._q_dec.copy()
+        if self.backend == "scan" and B:
+            out = self._advance_scan(signals)
+        else:
+            out = self._advance_numpy(signals)
+        self.pos += B
+        decided = dec_before >= 0
+        if decided.any():
+            out[:, decided] = dec_before[decided].astype(bool)[None, :]
+        self._update_decidedness()
+        return out
+
+    def _advance_numpy(self, signals: np.ndarray) -> np.ndarray:
+        """The per-frame loop backend (differential reference)."""
+        B = signals.shape[0]
+        T = self.n_automata
+        touts = np.zeros((B, T), bool)
         nd, ns, nc = (len(self._d_cols), len(self._s_cols),
                       len(self._c_cols))
         for f in range(B):
@@ -395,13 +458,141 @@ class TemporalProgram:
                 touts[f, self._s_cols] = self._s_latch
             if nc:
                 touts[f, self._c_cols] = self._c_latch
-        self.pos += B
-        out = self._assemble(np.concatenate([signals, touts], axis=1))
-        decided = dec_before >= 0
-        if decided.any():
-            out[:, decided] = dec_before[decided].astype(bool)[None, :]
-        self._update_decidedness()
-        return out
+        return self._assemble(np.concatenate([signals, touts], axis=1))
+
+    # -- scan lowering ----------------------------------------------------
+
+    def _state_tuple(self) -> Tuple:
+        """Automaton state as the scan carry (int state narrowed to
+        int32 — values are bounded by the window length, so exact)."""
+        return (np.int32(self.pos),
+                self._d_run.astype(np.int32), self._d_latch,
+                self._d_dead,
+                self._s_arm.astype(np.int32), self._s_latch,
+                self._s_dead,
+                self._c_buf, self._c_cnt.astype(np.int32),
+                self._c_latch, self._c_dead)
+
+    def _absorb_state(self, state: Sequence) -> None:
+        """Write a scan carry back into the numpy mirrors the host-side
+        decidedness logic (``_auto_future_decided``) reads."""
+        (_, d_run, d_latch, d_dead, s_arm, s_latch, s_dead,
+         c_buf, c_cnt, c_latch, c_dead) = [np.asarray(s) for s in state]
+        self._d_run = d_run.astype(np.int64)
+        self._d_latch = d_latch.astype(bool)
+        self._d_dead = d_dead.astype(bool)
+        self._s_arm = s_arm.astype(np.int64)
+        self._s_latch = s_latch.astype(bool)
+        self._s_dead = s_dead.astype(bool)
+        self._c_buf = c_buf.astype(bool)
+        self._c_cnt = c_cnt.astype(np.int64)
+        self._c_latch = c_latch.astype(bool)
+        self._c_dead = c_dead.astype(bool)
+
+    def build_scan_fn(self) -> Callable:
+        """The raw (unjitted) batch function ``(state, (B, M) bool) ->
+        (state', (B, N) bool)``: one ``lax.scan`` over frames advancing
+        all automata at once, then the levelized assembly in jnp.  All
+        program structure is baked in as trace-time constants;
+        ``advance_group`` vmaps this over a leading stream axis."""
+        import jax
+        import jax.numpy as jnp
+
+        nd, ns, nc = (len(self._d_cols), len(self._s_cols),
+                      len(self._c_cols))
+        T, M = self.n_automata, self.n_signals
+        i32 = np.int32
+        d_cols, d_sig, d_min = (self._d_cols.astype(i32),
+                                self._d_sig.astype(i32),
+                                self._d_min.astype(i32))
+        s_cols, s_siga, s_sigb, s_within = (
+            self._s_cols.astype(i32), self._s_siga.astype(i32),
+            self._s_sigb.astype(i32), self._s_within.astype(i32))
+        c_cols, c_sig, c_win, c_op, c_val = (
+            self._c_cols.astype(i32), self._c_sig.astype(i32),
+            self._c_win.astype(i32), self._c_op.astype(i32),
+            self._c_val.astype(i32))
+        c_rows = np.arange(nc, dtype=i32)
+        levels = [(node_ids, child_idx, child_neg,
+                   inc.astype(np.float32), req.astype(np.float32))
+                  for node_ids, child_idx, child_neg, inc, req
+                  in self._levels]
+        root_col, root_neg = self.root_col, self.root_neg
+        n_cols = self.n_cols
+
+        def frame_step(carry, x):
+            (pos, d_run, d_latch, d_dead, s_arm, s_latch, s_dead,
+             c_buf, c_cnt, c_latch, c_dead) = carry
+            touts = jnp.zeros((T,), bool)
+            if nd:
+                act = ~(d_latch | d_dead)
+                xin = x[d_sig]
+                d_run = jnp.where(act,
+                                  jnp.where(xin, d_run + 1, 0), d_run)
+                d_latch = d_latch | (act & (d_run >= d_min))
+                touts = touts.at[d_cols].set(d_latch)
+            if ns:
+                act = ~(s_latch | s_dead)
+                a = x[s_siga]
+                b = x[s_sigb]
+                # latch against the PRE-decrement arming, exactly as
+                # the numpy loop: `then` strictly after `first`
+                s_latch = s_latch | (act & (s_arm > 0) & b)
+                arm2 = jnp.maximum(s_arm - 1, 0)
+                arm2 = jnp.where(a, jnp.maximum(arm2, s_within), arm2)
+                s_arm = jnp.where(act, arm2, s_arm)
+                touts = touts.at[s_cols].set(s_latch)
+            if nc:
+                act = ~(c_latch | c_dead)
+                xin = x[c_sig]
+                col = pos % c_win
+                old = c_buf[c_rows, col]
+                c_cnt = jnp.where(
+                    act, c_cnt + xin.astype(i32) - old.astype(i32),
+                    c_cnt)
+                c_buf = c_buf.at[c_rows, col].set(
+                    jnp.where(act, xin, old))
+                complete = (pos + 1) >= c_win
+                hit = jnp.where(c_op == 0, c_cnt == c_val,
+                                jnp.where(c_op == 1, c_cnt >= c_val,
+                                          c_cnt <= c_val))
+                c_latch = c_latch | (act & complete & hit)
+                touts = touts.at[c_cols].set(c_latch)
+            carry = (pos + 1, d_run, d_latch, d_dead, s_arm, s_latch,
+                     s_dead, c_buf, c_cnt, c_latch, c_dead)
+            return carry, touts
+
+        def batch_fn(state, signals):
+            state2, touts = jax.lax.scan(frame_step, state, signals)
+            B = signals.shape[0]
+            leaf = jnp.concatenate([signals, touts], axis=1)
+            vals = jnp.zeros((B, n_cols), bool).at[:, :M + T].set(leaf)
+            for node_ids, child_idx, child_neg, inc, req in levels:
+                lit = vals[:, child_idx] ^ child_neg[None, :]
+                vals = vals.at[:, node_ids].set(
+                    (lit.astype(jnp.float32) @ inc.T) >= req)
+            out = vals[:, root_col] ^ root_neg[None, :]
+            return state2, out
+
+        return batch_fn
+
+    def _get_scan_step(self, B: int) -> Callable:
+        """The jitted single-stream scan step for batch size ``B``,
+        from the step cache (key: program digest + B)."""
+        import jax
+        key = ("tstep", self.program_sig, int(B))
+        step = self._step_cache.get(key)
+        if step is None:
+            step = jax.jit(self.build_scan_fn())
+            self._step_cache.put(key, step)
+            self.scan_traces += 1
+        return step
+
+    def _advance_scan(self, signals: np.ndarray) -> np.ndarray:
+        step = self._get_scan_step(signals.shape[0])
+        state2, out = step(self._state_tuple(), signals)
+        self._absorb_state(state2)
+        return np.array(out)
 
     # -- window-outcome decidedness ---------------------------------------
 
@@ -501,6 +692,102 @@ class TemporalProgram:
 
 
 # --------------------------------------------------------------------------
+# fleet-wide advance (one vmapped scan step over a leading stream axis)
+# --------------------------------------------------------------------------
+
+# keepalive for anonymous shard_wrap closures baked into cached group
+# steps (mirrors StagedQueryPlan._wrap_refs: the cache key holds only
+# id(wrap), so the closure must outlive the entry to keep ids unique)
+_GROUP_WRAP_REFS: List[Any] = []
+
+
+def advance_group(programs: Sequence[TemporalProgram],
+                  signals: np.ndarray, *,
+                  step_cache: Optional[StepCache] = None,
+                  shard_wrap: Optional[Callable] = None,
+                  wrap_sig: Optional[Tuple] = None) -> np.ndarray:
+    """Advance S structurally identical ``TemporalProgram`` windows by
+    one (S, B, M) bool signal batch at once; returns the (S, B, N) bool
+    per-frame query outputs.
+
+    The scan backend stacks each program's automaton state on a leading
+    stream axis and runs ONE ``jax.vmap``-ed scan step (optionally
+    wrapped by the fleet engine's ``shard_wrap`` so the stream axis
+    shards over the mesh), cached in ``step_cache`` under the program
+    digest + (B, S) + mesh identity (``wrap_sig``) — the temporal
+    analogue of ``StagedQueryPlan.evaluate_group``'s group steps.  The
+    numpy backend falls back to a per-stream ``advance`` loop (the
+    differential reference).  Per-program host-side semantics are
+    unchanged either way: decided columns stay latched to their
+    pre-batch values and decidedness updates after the batch.
+
+    Programs must share a content digest (same canonical queries), the
+    same window position, and the same window length — the fleet engine
+    guarantees this by starting every stream's window together."""
+    programs = list(programs)
+    if not programs:
+        raise ValueError("advance_group needs at least one program")
+    p0 = programs[0]
+    signals = np.asarray(signals, bool)
+    S = len(programs)
+    if signals.ndim != 3 or signals.shape[0] != S \
+            or signals.shape[2] != p0.n_signals:
+        raise ValueError(f"signals must be (S={S}, B, {p0.n_signals}), "
+                         f"got {signals.shape}")
+    B = signals.shape[1]
+    for p in programs[1:]:
+        if p.program_sig != p0.program_sig:
+            raise ValueError("advance_group needs structurally "
+                             "identical programs (digest mismatch)")
+        if p.pos != p0.pos or p.window_len != p0.window_len:
+            raise ValueError("advance_group needs aligned windows: "
+                             f"pos {p.pos} != {p0.pos} or window_len "
+                             f"{p.window_len} != {p0.window_len}")
+    if p0.pos + B > p0.window_len:
+        raise ValueError(
+            f"advance past window end: pos={p0.pos} + B={B} > "
+            f"window_len={p0.window_len} (call start_window)")
+    if p0.backend != "scan" or B == 0:
+        return np.stack([p.advance(signals[s])
+                         for s, p in enumerate(programs)])
+
+    import jax
+    cache = step_cache if step_cache is not None else p0._step_cache
+    if wrap_sig is not None:
+        wrap_key: Any = wrap_sig
+    elif shard_wrap is not None:
+        wrap_key = ("wrapid", id(shard_wrap))
+        _GROUP_WRAP_REFS.append(shard_wrap)
+    else:
+        wrap_key = None
+    key = ("tgstep", p0.program_sig, int(B), S, wrap_key)
+    step = cache.get(key)
+    if step is None:
+        fn = jax.vmap(p0.build_scan_fn())
+        if shard_wrap is not None:
+            fn = shard_wrap(fn)
+        step = jax.jit(fn)
+        cache.put(key, step)
+        p0.scan_traces += 1
+
+    dec_before = np.stack([p._q_dec for p in programs])
+    state = tuple(np.stack(leaves) for leaves
+                  in zip(*(p._state_tuple() for p in programs)))
+    state2, out = step(state, signals)
+    out = np.array(out)
+    state2 = [np.asarray(leaf) for leaf in state2]
+    for s, p in enumerate(programs):
+        p._absorb_state([leaf[s] for leaf in state2])
+        p.pos += B
+        decided = dec_before[s] >= 0
+        if decided.any():
+            out[s][:, decided] = \
+                dec_before[s][decided].astype(bool)[None, :]
+        p._update_decidedness()
+    return out
+
+
+# --------------------------------------------------------------------------
 # reference replay (the naive per-frame semantics the automata must match)
 # --------------------------------------------------------------------------
 
@@ -586,16 +873,22 @@ class TemporalEngine:
     arrays, as in the streaming examples.  Adaptive-cascade knobs
     (``slot_stats``, ``cost_model``, ``calibration_monitor``,
     ``min_bucket``, ...) pass through to ``MultiQueryCascade`` over the
-    frame signals."""
+    frame signals; a ``step_cache`` is shared with the program so the
+    temporal scan steps survive epoch rebuilds alongside the plan
+    steps.  ``backend`` selects the automaton backend (see
+    ``TemporalProgram``)."""
 
     def __init__(self, queries: Sequence[Q.Predicate],
                  filter_fn: Callable[[np.ndarray], Any],
                  oracle_fn: Callable[[np.ndarray, np.ndarray], List],
                  n_classes: int, grid: int, *, tau: float = 0.2,
                  oracle_bucket: Optional[int] = None,
+                 backend: Optional[str] = None,
                  **cascade_kw):
         from repro.core.cascade import MultiQueryCascade
-        self.program = TemporalProgram(queries)
+        self.program = TemporalProgram(
+            queries, backend=backend,
+            step_cache=cascade_kw.get("step_cache"))
         self.cascade = MultiQueryCascade(
             tuple(self.program.frame_queries), tau=tau, **cascade_kw)
         self.filter_fn = filter_fn
@@ -617,6 +910,11 @@ class TemporalEngine:
         B = idx.size
         M = self.program.n_signals
         self.stats.frames_in += B
+        cm = self.cascade.cost_model
+        if cm is not None:
+            tc = cm.temporal_cost(frames=B, batch=B)
+            if tc is not None:
+                self.stats.cost_temporal_model += tc
         if self.program.all_decided:
             # every query's window outcome is latched: skip the filter
             # head, the plan, and the oracle for the whole batch

@@ -37,6 +37,22 @@ stage steps as single fused programs over the stack
   selectivity priors, and the ``CostModel`` prices the group steps with
   the same per-backend calibration as single-device bodies.
 
+- **Fleet-wide temporal short-circuiting.**  When any registered query
+  carries a temporal operator, the engine compiles the set through ONE
+  shared ``TemporalProgram`` structure with per-stream automaton state,
+  stages the *deduped frame signals* through the group plan, and
+  advances all S windows at once with ``temporal.advance_group`` (one
+  vmapped — and mesh-sharded, when a mesh is given — ``lax.scan`` step
+  over the stream axis).  Each stream's window-decided signal columns
+  feed ``evaluate_group(presumed_decided=...)`` so decided streams stop
+  paying for stages only they needed; a chunk where EVERY stream's
+  every query is window-decided skips fetch, stacking, and the staged
+  plan outright (frame skipping in time, fleet-wide).  The executor
+  fires ``on_window_start`` at hopping-window boundaries exactly as the
+  single-stream loop does (including for engines rebuilt mid-window by
+  registry churn, which cold-restart their automata — the documented
+  single-stream semantics).
+
 Per-stream answers are bit-identical to running each stream serially
 through ``MultiQueryStreamExecutor`` (property-pinned in
 tests/test_multistream.py), including under mid-stream register/retire
@@ -54,11 +70,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import query as Q
 from repro.core.filters import FilterOutputs
 from repro.core.plan import QueryPlan
 from repro.core.streaming import (HoppingWindow, QueryRegistry,
                                   StragglerPolicy, StreamStats, _accepts_kw,
                                   stream_seed)
+from repro.core.temporal import TemporalProgram, TemporalStats, advance_group
 from repro.distributed import sharding as SH
 
 
@@ -162,10 +180,26 @@ class ShardedPlanGroupEngine:
         self.slot_stats = slot_stats
         self.mesh = mesh
         self.restage_every = restage_every
-        self.plan = QueryPlan(tuple(queries), tau=tau,
+        self.queries = tuple(queries)
+        self._step_cache = step_cache
+        # temporal queries: plan over the deduped frame signals, keep
+        # per-stream automaton state (shared structure, one window per
+        # stream), advance all windows with one vmapped scan step
+        if any(Q.has_temporal(q) for q in self.queries):
+            self.temporal: Optional[List[TemporalProgram]] = [
+                TemporalProgram(self.queries, step_cache=step_cache)
+                for _ in self.streams]
+            self.temporal_stats = TemporalStats()
+            plan_queries = tuple(self.temporal[0].frame_queries)
+        else:
+            self.temporal = None
+            self.temporal_stats = None
+            plan_queries = self.queries
+        self.plan = QueryPlan(plan_queries, tau=tau,
                               leaf_table=leaf_table)
         cm = cost_model if cost_model is not None \
             else CM.default_cost_model()
+        self.cost_model = cm
         self.staged = self.plan.build_staged(
             slot_stats, min_bucket=min_bucket, cost_model=cm,
             spatial_body=spatial_body, step_cache=step_cache)
@@ -214,10 +248,24 @@ class ShardedPlanGroupEngine:
         """Current stage execution order (warm-start observability)."""
         return [self.staged.stages[si].name for si in self.staged.order]
 
+    def on_window_start(self, lo: int, hi: int) -> None:
+        """Hopping-window boundary: restart every stream's automaton
+        window (no-op without temporal queries).  ``MultiStreamExecutor``
+        fires this once per (window, engine) pair — including engines
+        rebuilt mid-window by registry churn, which restart their
+        automata from the current batch (the single-stream contract)."""
+        if self.temporal is None:
+            return
+        for prog in self.temporal:
+            prog.start_window(hi - lo)
+        self.temporal_stats.windows += 1
+
     def run_chunk(self, idx: np.ndarray,
                   next_idx: Optional[np.ndarray] = None) -> np.ndarray:
         """(S, B, N) bool answers for one chunk; double-buffers
         ``next_idx``'s transfer behind this chunk's evaluation."""
+        if self.temporal is not None:
+            return self._run_chunk_temporal(idx, next_idx)
         if self._next is not None and self._next[0] == self._key(idx):
             outs = self._next[1]
         else:
@@ -236,6 +284,64 @@ class ShardedPlanGroupEngine:
                     self._chunks % self.restage_every == 0:
                 self.staged.restage(self.slot_stats)
         return ans
+
+    def _run_chunk_temporal(self, idx: np.ndarray,
+                            next_idx: Optional[np.ndarray]) -> np.ndarray:
+        """Temporal chunk path: staged frame signals (with per-stream
+        ``presumed_decided`` suppression) -> one vmapped/sharded scan
+        step advancing all S windows at once.  The fleet path has no
+        oracle tier — filter masks ARE the per-frame signal verdicts
+        (the engine's standing masks-as-answers semantics), so the
+        automata consume them directly."""
+        progs = self.temporal
+        S, B = len(progs), int(idx.size)
+        M = progs[0].n_signals
+        ts = self.temporal_stats
+        ts.frames_in += S * B
+        tc = self.cost_model.temporal_cost(frames=B, batch=B)
+        if tc is not None:
+            ts.cost_temporal_model += S * tc
+        if all(p.all_decided for p in progs):
+            # every stream's every query is window-decided: skip fetch,
+            # stacking, and the whole staged plan for this chunk
+            self._next = None
+            ts.frames_skipped += S * B
+            ts.cost_saved_model += S * self.plan.exhaustive_cost_model(
+                self.cost_model, batch=B)
+            return advance_group(
+                progs, np.zeros((S, B, M), bool),
+                step_cache=self._step_cache,
+                shard_wrap=self.shard_wrap, wrap_sig=self.wrap_sig)
+        suppressed = np.stack([p.suppressed_signals() for p in progs])
+        ts.signal_evals_skipped += B * int(suppressed.sum())
+        if self._next is not None and self._next[0] == self._key(idx):
+            outs = self._next[1]
+        else:
+            outs = self._stack(idx)
+        self._next = None
+        value = self.staged.evaluate_group(
+            outs, shard_wrap=self.shard_wrap, wrap_sig=self.wrap_sig,
+            presumed_decided=suppressed if suppressed.any() else None)
+        if next_idx is not None and next_idx.size:
+            self.prefetch(next_idx)         # overlaps the block below
+        masks = np.asarray(value)           # block on this chunk
+        rep = self.staged.last_report
+        if rep is not None:
+            ts.cost_saved_model += rep.cost_presumed_saved
+        if self.slot_stats is not None:
+            self.staged.flush_stats(self.slot_stats)
+            self._chunks += 1
+            if self.restage_every and \
+                    self._chunks % self.restage_every == 0:
+                self.staged.restage(self.slot_stats)
+        # suppressed columns carry UNSPECIFIED mask values (the staged
+        # plan stopped evaluating them) — zero them before the automata;
+        # every consumer of a suppressed signal is frozen or decided, so
+        # the value is semantically irrelevant but must be deterministic
+        signals = masks & ~suppressed[:, None, :]
+        return advance_group(
+            progs, signals, step_cache=self._step_cache,
+            shard_wrap=self.shard_wrap, wrap_sig=self.wrap_sig)
 
 
 def plan_group_engine_factory(fetch, **engine_kw) -> Callable:
@@ -359,10 +465,20 @@ class MultiStreamExecutor:
                       for b0 in range(lo, hi, self.batch)]
             hits: Dict[Any, Dict[int, int]] = {
                 c.stream_id: {} for c in self.streams}
+            # window-scoped engine hook (temporal automata): fired once
+            # per (window, engine) pair — a mid-window rebuild gets the
+            # hook too and cold-restarts its state, exactly as the
+            # single-stream executor documents
+            started = None
             for k, idx in enumerate(chunks):
                 engine, qids = self._refresh()
                 if engine is None:
                     continue
+                if engine is not started:
+                    hook = getattr(engine, "on_window_start", None)
+                    if hook is not None:
+                        hook(lo, hi)
+                    started = engine
                 # drop decision at chunk arrival, against slack accrued
                 # so far — the StreamExecutor discipline, per stream
                 dropped = set()

@@ -55,6 +55,28 @@ def pytest_configure(config):
         "enable with REPRO_SLOW=1 (``make test-slow``).")
 
 
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    """On any failure, surface the generating seed(s) of a seeded sweep
+    in the report — every randomized battery in this suite derives the
+    whole case from integer seed parameters, so the printed line is a
+    complete repro recipe (pytest "tests/<file>::<test>[<params>]")."""
+    outcome = yield
+    rep = outcome.get_result()
+    if rep.when != "call" or not rep.failed:
+        return
+    callspec = getattr(item, "callspec", None)
+    if callspec is None:
+        return
+    seeds = {k: v for k, v in callspec.params.items()
+             if "seed" in k.lower()}
+    if seeds:
+        rep.sections.append(
+            ("seeded sweep", "failing seed(s): "
+             + ", ".join(f"{k}={v!r}" for k, v in sorted(seeds.items()))
+             + f"\nreproduce: pytest '{item.nodeid}'"))
+
+
 def pytest_collection_modifyitems(config, items):
     if os.environ.get("REPRO_SLOW", "") not in ("", "0"):
         return

@@ -1,0 +1,269 @@
+"""Reusable differential fuzz harness for the temporal tier.
+
+Three implementations of the same window semantics are pinned against
+each other bit-for-bit:
+
+1. **scan** — the ``jax.lax.scan`` lowering (``TemporalProgram``'s
+   default backend), single-stream and vmapped fleet-wide via
+   ``advance_group``;
+2. **numpy** — the per-frame python loop kept alive behind
+   ``backend="numpy"`` exactly so it can serve as the differential
+   reference here;
+3. **replay** — the stateless quadratic per-frame replay oracle
+   (``repro.core.temporal.replay_reference``), the specification both
+   backends must reproduce.
+
+``gen_case`` derives a full case (random operator mix over all three
+automaton kinds, window shape, batch split, per-stream atom traces)
+from a single integer seed, so any failure is reproducible from the
+seed alone — the conftest failure hook prints it.  ``check_case``
+asserts output AND decidedness equality after every batch, for every
+stream, across all three paths.  Used by ``tests/test_temporal_fuzz.py``
+(deterministic battery + hypothesis sweep) and available to any other
+module that wants to throw random temporal programs at the engine.
+"""
+import dataclasses
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.temporal import (TemporalProgram, advance_group,
+                                 replay_reference)
+
+ATOMS = (Q.ClassCount(0, Q.Op.GE, 1),
+         Q.ClassCount(1, Q.Op.GE, 1),
+         Q.Count(Q.Op.GE, 2))
+
+_ATOM_KEYS = tuple(Q.canonicalize(a) for a in ATOMS)
+
+
+# ---------------------------------------------------------------------------
+# seeded generators
+# ---------------------------------------------------------------------------
+
+def rand_frame_pred(rng):
+    a = ATOMS[rng.integers(0, len(ATOMS))]
+    k = rng.integers(0, 4)
+    if k == 0:
+        return a
+    b = ATOMS[rng.integers(0, len(ATOMS))]
+    if k == 1:
+        return Q.And((a, b))
+    if k == 2:
+        return Q.Or((a, Q.Not(b)))
+    return Q.Not(a)
+
+
+def rand_duration(rng):
+    return Q.Duration(rand_frame_pred(rng), int(rng.integers(1, 7)))
+
+
+def rand_sequence(rng):
+    return Q.Sequence(rand_frame_pred(rng), rand_frame_pred(rng),
+                      int(rng.integers(1, 6)))
+
+
+def rand_sliding_count(rng):
+    op = [Q.Op.EQ, Q.Op.GE, Q.Op.LE][rng.integers(0, 3)]
+    return Q.SlidingCount(rand_frame_pred(rng), int(rng.integers(1, 7)),
+                          op, int(rng.integers(0, 7)))
+
+
+_OP_KINDS = (rand_duration, rand_sequence, rand_sliding_count)
+
+
+def rand_temporal_op(rng):
+    return _OP_KINDS[rng.integers(0, len(_OP_KINDS))](rng)
+
+
+def rand_temporal_query(rng, depth=0):
+    """Boolean combinations of temporal operators and frame predicates
+    (temporal operators never nest — the AST enforces it)."""
+    if depth >= 2 or rng.random() < 0.35:
+        return rand_temporal_op(rng) if rng.random() < 0.7 \
+            else rand_frame_pred(rng)
+    k = rng.integers(0, 3)
+    if k == 2:
+        return Q.Not(rand_temporal_query(rng, depth + 1))
+    terms = tuple(rand_temporal_query(rng, depth + 1)
+                  for _ in range(rng.integers(2, 4)))
+    return Q.And(terms) if k == 0 else Q.Or(terms)
+
+
+def operator_kinds(queries) -> set:
+    """Which automaton kinds a query mix exercises ({'duration',
+    'sequence', 'sliding'}) — the battery asserts full coverage."""
+    kinds = set()
+
+    def walk(q):
+        if isinstance(q, Q.Duration):
+            kinds.add("duration")
+        elif isinstance(q, Q.Sequence):
+            kinds.add("sequence")
+        elif isinstance(q, Q.SlidingCount):
+            kinds.add("sliding")
+        elif isinstance(q, (Q.And, Q.Or)):
+            for t in q.terms:
+                walk(t)
+        elif isinstance(q, Q.Not):
+            walk(q.term)
+    for q in queries:
+        walk(q)
+    return kinds
+
+
+def rand_splits(rng, window: int) -> Tuple[int, ...]:
+    """A random ordered partition of the window into advance batches."""
+    splits, left = [], window
+    while left > 0:
+        b = int(rng.integers(1, min(6, left) + 1))
+        splits.append(b)
+        left -= b
+    return tuple(splits)
+
+
+# ---------------------------------------------------------------------------
+# cases
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TemporalCase:
+    """One reproducible differential trial, fully derived from ``seed``."""
+    seed: int
+    queries: Tuple
+    window: int
+    splits: Tuple[int, ...]          # ordered partition of ``window``
+    traces: np.ndarray               # (n_streams, window, n_atoms) bool
+
+    @property
+    def n_streams(self) -> int:
+        return self.traces.shape[0]
+
+
+def gen_case(seed: int, *, n_streams: int = 1, max_window: int = 22,
+             max_queries: int = 5, force_all_kinds: bool = False
+             ) -> TemporalCase:
+    rng = np.random.default_rng(seed)
+    queries = [rand_temporal_query(rng)
+               for _ in range(int(rng.integers(1, max_queries + 1)))]
+    if force_all_kinds:
+        missing = {"duration": rand_duration, "sequence": rand_sequence,
+                   "sliding": rand_sliding_count}
+        for kind in sorted(missing.keys() - operator_kinds(queries)):
+            queries.append(missing[kind](rng))
+    window = int(rng.integers(1, max_window + 1))
+    density = rng.uniform(0.2, 0.8, size=(n_streams, 1, len(ATOMS)))
+    traces = rng.random((n_streams, window, len(ATOMS))) < density
+    return TemporalCase(seed=seed, queries=tuple(queries), window=window,
+                        splits=rand_splits(rng, window), traces=traces)
+
+
+def frame_value_fn(trace: np.ndarray) -> Callable:
+    """Exact frame-value function over one stream's (W, n_atoms) atom
+    trace, evaluating boolean combinations compositionally — the shared
+    ``fv`` every path (replay oracle and both backends) consumes."""
+    def fv(pred, t):
+        key = Q.canonicalize(pred)
+        if key in _ATOM_KEYS:
+            return bool(trace[t, _ATOM_KEYS.index(key)])
+        if isinstance(pred, Q.And):
+            return all(fv(x, t) for x in pred.terms)
+        if isinstance(pred, Q.Or):
+            return any(fv(x, t) for x in pred.terms)
+        if isinstance(pred, Q.Not):
+            return not fv(pred.term, t)
+        raise AssertionError(f"unexpected frame predicate {pred!r}")
+    return fv
+
+
+# ---------------------------------------------------------------------------
+# the three paths
+# ---------------------------------------------------------------------------
+
+def replay_outputs(case: TemporalCase) -> np.ndarray:
+    """(n_streams, window, n_queries) replay-oracle verdicts."""
+    out = np.zeros((case.n_streams, case.window, len(case.queries)), bool)
+    for s in range(case.n_streams):
+        fv = frame_value_fn(case.traces[s])
+        for qi, q in enumerate(case.queries):
+            out[s, :, qi] = replay_reference(q, fv, case.window)
+    return out
+
+
+def _signals(prog, fv, t0: int, b: int) -> np.ndarray:
+    return np.array([[fv(fq, t0 + f) for fq in prog.frame_queries]
+                     for f in range(b)], bool).reshape(b, -1)
+
+
+def run_single(case: TemporalCase, stream: int, backend: str,
+               **prog_kw) -> Tuple[np.ndarray, List[np.ndarray],
+                                   TemporalProgram]:
+    """Drive one stream through one backend over the case's batch split.
+    Returns (window outputs, post-batch decidedness snapshots, program).
+    """
+    prog = TemporalProgram(case.queries, backend=backend, **prog_kw)
+    prog.start_window(case.window)
+    fv = frame_value_fn(case.traces[stream])
+    outs, decs, t = [], [], 0
+    for b in case.splits:
+        outs.append(prog.advance(_signals(prog, fv, t, b)))
+        decs.append(prog.query_decided.copy())
+        t += b
+    return np.concatenate(outs, 0), decs, prog
+
+
+def run_group(case: TemporalCase, **group_kw
+              ) -> Tuple[np.ndarray, List[np.ndarray],
+                         List[TemporalProgram]]:
+    """Drive all streams through the fleet scan path (``advance_group``).
+    Returns ((S, W, N) outputs, per-batch (S, N) decidedness snapshots,
+    programs)."""
+    progs = [TemporalProgram(case.queries) for _ in range(case.n_streams)]
+    fvs = [frame_value_fn(case.traces[s]) for s in range(case.n_streams)]
+    for p in progs:
+        p.start_window(case.window)
+    outs, decs, t = [], [], 0
+    for b in case.splits:
+        sig = np.stack([_signals(progs[s], fvs[s], t, b)
+                        for s in range(case.n_streams)])
+        outs.append(advance_group(progs, sig, **group_kw))
+        decs.append(np.stack([p.query_decided for p in progs]))
+        t += b
+    return np.concatenate(outs, 1), decs, progs
+
+
+# ---------------------------------------------------------------------------
+# the differential check
+# ---------------------------------------------------------------------------
+
+def check_case(case: TemporalCase, **group_kw) -> None:
+    """Assert scan ≡ numpy ≡ replay bit-for-bit on every stream — window
+    outputs, plus decidedness state after every advance batch (the
+    decidedness drives fleet short-circuiting, so divergence there is as
+    much a bug as a wrong verdict)."""
+    expect = replay_outputs(case)
+    ref_decs = []
+    for s in range(case.n_streams):
+        np_out, np_dec, _ = run_single(case, s, "numpy")
+        np.testing.assert_array_equal(
+            np_out, expect[s], err_msg=f"numpy!=replay seed={case.seed} "
+            f"stream={s}")
+        sc_out, sc_dec, _ = run_single(case, s, "scan")
+        np.testing.assert_array_equal(
+            sc_out, expect[s], err_msg=f"scan!=replay seed={case.seed} "
+            f"stream={s}")
+        for bi, (a, b) in enumerate(zip(sc_dec, np_dec)):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"decidedness diverged seed={case.seed} "
+                f"stream={s} batch={bi}")
+        ref_decs.append(np_dec)
+    g_out, g_decs, _ = run_group(case, **group_kw)
+    np.testing.assert_array_equal(
+        g_out, expect, err_msg=f"group-scan!=replay seed={case.seed}")
+    for bi, dec in enumerate(g_decs):
+        for s in range(case.n_streams):
+            np.testing.assert_array_equal(
+                dec[s], ref_decs[s][bi],
+                err_msg=f"group decidedness diverged seed={case.seed} "
+                f"stream={s} batch={bi}")

@@ -388,3 +388,253 @@ def test_sharded_group_engine_8dev_subprocess():
                        cwd=os.path.join(os.path.dirname(__file__), ".."),
                        capture_output=True, text=True, timeout=600)
     assert "SHARDED_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# Fleet-wide temporal short-circuiting: group scan path == serial
+# MultiQueryStreamExecutor, including mid-WINDOW register/retire churn
+# ---------------------------------------------------------------------------
+
+TQUERIES = (
+    Q.Duration(Q.ClassCount(0, Q.Op.GE, 1), 3),
+    Q.Or((Q.SlidingCount(Q.ClassCount(1, Q.Op.GE, 1), 5, Q.Op.GE, 2),
+          Q.Not(Q.Count(Q.Op.GE, 9)))),
+    # completeness not before relative frame 29 of a 32-window and the
+    # stream rate makes early death implausible: this query keeps every
+    # stream undecided through the churn chunks, so the fleet engine
+    # never takes the all-decided skip path while a fetch-side trigger
+    # is still pending
+    Q.SlidingCount(Q.Count(Q.Op.GE, 1), 30, Q.Op.GE, 8),
+)
+TNEW = Q.Sequence(Q.ClassCount(0, Q.Op.GE, 1), Q.ClassCount(2, Q.Op.GE, 1),
+                  4)
+
+
+class _SerialTemporalEngine:
+    """Masks-as-answers serial reference: the fleet temporal path has no
+    oracle tier (filter masks ARE the per-frame signal verdicts), so the
+    per-stream reference computes exact plan verdicts for the deduped
+    frame signals and advances a numpy-backend ``TemporalProgram`` —
+    suppressed columns zeroed exactly as the fleet engine does."""
+
+    def __init__(self, queries, data):
+        from repro.core.temporal import TemporalProgram
+        self.prog = TemporalProgram(tuple(queries), backend="numpy")
+        c, g = data
+        self.masks = np.asarray(QueryPlan(
+            tuple(self.prog.frame_queries), tau=0.2).evaluate(
+                FilterOutputs(counts=c, grid=g)))
+
+    def on_window_start(self, lo, hi):
+        self.prog.start_window(hi - lo)
+
+    def __call__(self, idx):
+        sup = self.prog.suppressed_signals()
+        return self.prog.advance(
+            self.masks[np.asarray(idx)] & ~sup[None, :])
+
+
+def test_fleet_temporal_equals_serial_with_midwindow_churn():
+    """Sharded fleet-temporal answers == serial per-stream runs, with a
+    query REGISTERED mid-window-2 and one RETIRED mid-window-3 (both
+    rebuilds land at the same chunk boundary on both paths, and both
+    cold-restart their automata via ``on_window_start`` — the documented
+    mid-window churn semantics)."""
+    S, n_frames, batch = 4, 96, 8
+    window = HoppingWindow(size=32, advance=32)
+    stream_ids = [f"tcam{i}" for i in range(S)]
+    ctxs = route_streams(stream_ids, 2)
+    data = {c.stream_id: _stream_data(c.seed % 2**32, n_frames,
+                                      0.8 + 0.4 * c.position)
+            for c in ctxs}
+
+    # serial: per-stream registry, same schedule — the engine-call
+    # trigger at chunk t fires one chunk BEFORE the fleet's fetch-side
+    # trigger because the fleet prefetches chunk t+1's inputs during
+    # chunk t; both paths then rebuild at the same chunk boundary
+    serial = {}
+    for sid in stream_ids:
+        registry = QueryRegistry()
+        qids = [registry.register(q) for q in TQUERIES]
+        fired = set()
+
+        class _Engine(_SerialTemporalEngine):
+            def __call__(self, idx, registry=registry, qids=qids,
+                         fired=fired):
+                t0 = int(np.asarray(idx)[0])
+                if t0 == 40 and "reg" not in fired:
+                    fired.add("reg")
+                    qids.append(registry.register(TNEW))
+                if t0 == 72 and "ret" not in fired:
+                    fired.add("ret")
+                    registry.retire(qids[1])
+                return super().__call__(idx)
+
+        factory = (lambda queries, sid=sid, cls=_Engine:
+                   cls(queries, data[sid]))
+        serial[sid] = MultiQueryStreamExecutor(
+            registry, factory, window, batch).run(n_frames)
+
+    registry = QueryRegistry()
+    qids = [registry.register(q) for q in TQUERIES]
+    fired = set()
+    base_fetch = _make_fetch(data)
+
+    def fetch(ctx, idx):
+        t0 = int(np.asarray(idx)[0])
+        if t0 == 48 and "reg" not in fired:      # prefetched during 40
+            fired.add("reg")
+            qids.append(registry.register(TNEW))
+        if t0 == 80 and "ret" not in fired:      # prefetched during 72
+            fired.add("ret")
+            registry.retire(qids[1])
+        return base_fetch(ctx, idx)
+
+    ex = MultiStreamExecutor(registry, plan_group_engine_factory(fetch),
+                             window, batch, stream_ids, n_slots=2)
+    results = ex.run(n_frames)
+    assert fired == {"reg", "ret"} and ex.rebuilds >= 3
+    assert ex._engine is not None and ex._engine.temporal is not None
+    for sid in stream_ids:
+        for w, res in enumerate(results):
+            assert res.span == serial[sid][w].span
+            assert res.hits[sid] == serial[sid][w].hits, \
+                f"stream {sid} window {w}"
+
+
+def test_group_engine_temporal_skip_and_stats():
+    """Queries that latch on frame 0 window-decide every stream after
+    chunk 0: later chunks must skip fetch/stacking/plan outright while
+    the answers stay the latched constants."""
+    S, B, W = 3, 8, 32
+    ctxs = route_streams([f"s{i}" for i in range(S)], 1)
+    data = {c.stream_id: _stream_data(5 + c.position, W, 1.0)
+            for c in ctxs}
+    calls = {"fetch": 0}
+    base_fetch = _make_fetch(data)
+
+    def fetch(ctx, idx):
+        calls["fetch"] += 1
+        return base_fetch(ctx, idx)
+
+    queries = (Q.SlidingCount(Q.Count(Q.Op.GE, 0), 1, Q.Op.GE, 0),
+               Q.Duration(Q.Not(Q.Count(Q.Op.GE, 10 ** 6)), 1))
+    eng = ShardedPlanGroupEngine(queries, ctxs, fetch,
+                                 slot_stats=SlotStats())
+    assert eng.temporal is not None
+    eng.on_window_start(0, W)
+    outs = [eng.run_chunk(np.arange(b0, b0 + B)) for b0 in range(0, W, B)]
+    ans = np.concatenate(outs, axis=1)
+    assert ans.all()                        # both queries latch True
+    # chunk 0 fetched every stream once; chunks 1..3 skipped entirely
+    assert calls["fetch"] == S
+    ts = eng.temporal_stats
+    assert ts.frames_in == S * W
+    assert ts.frames_skipped == S * (W - B)
+    assert ts.cost_saved_model > 0.0 and ts.windows == 1
+
+
+TEMPORAL_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["REPRO_CALIBRATION"] = "off"
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import query as Q
+from repro.core.plan import QueryPlan
+from repro.core.filters import FilterOutputs
+from repro.core.streaming import (HoppingWindow, MultiQueryStreamExecutor,
+                                  QueryRegistry)
+from repro.core.temporal import TemporalProgram
+from repro.distributed import sharding as SH
+from repro.distributed.multistream import (MultiStreamExecutor,
+                                           plan_group_engine_factory,
+                                           route_streams)
+
+assert jax.device_count() == 8
+TQUERIES = (
+    Q.Duration(Q.ClassCount(0, Q.Op.GE, 1), 3),
+    Q.Or((Q.SlidingCount(Q.ClassCount(1, Q.Op.GE, 1), 5, Q.Op.GE, 2),
+          Q.Not(Q.Count(Q.Op.GE, 9)))),
+    Q.SlidingCount(Q.Count(Q.Op.GE, 1), 30, Q.Op.GE, 8),
+)
+TNEW = Q.Sequence(Q.ClassCount(0, Q.Op.GE, 1), Q.ClassCount(2, Q.Op.GE, 1),
+                  4)
+S, N, W, B, C, G = 16, 96, 32, 8, 6, 8
+stream_ids = [f"cam{i}" for i in range(S)]
+streams = route_streams(stream_ids, 8)
+data = {}
+for ctx in streams:
+    r = np.random.default_rng(ctx.seed % 2**32)
+    data[ctx.stream_id] = (
+        jnp.asarray(r.poisson(0.8 + 0.1 * ctx.position,
+                              (N, C)).astype(np.float32)),
+        jnp.asarray((r.random((N, G, G, C)) < 0.05).astype(np.float32)))
+
+class SerialEngine:
+    def __init__(self, queries, sid):
+        self.prog = TemporalProgram(tuple(queries), backend="numpy")
+        c, g = data[sid]
+        self.masks = np.asarray(QueryPlan(
+            tuple(self.prog.frame_queries), tau=0.2).evaluate(
+                FilterOutputs(counts=c, grid=g)))
+    def on_window_start(self, lo, hi):
+        self.prog.start_window(hi - lo)
+    def __call__(self, idx):
+        sup = self.prog.suppressed_signals()
+        return self.prog.advance(
+            self.masks[np.asarray(idx)] & ~sup[None, :])
+
+serial = {}
+for sid in stream_ids:
+    registry = QueryRegistry()
+    qids = [registry.register(q) for q in TQUERIES]
+    fired = set()
+    class Engine(SerialEngine):
+        def __call__(self, idx, registry=registry, qids=qids, fired=fired):
+            t0 = int(np.asarray(idx)[0])
+            if t0 == 40 and "reg" not in fired:
+                fired.add("reg"); qids.append(registry.register(TNEW))
+            if t0 == 72 and "ret" not in fired:
+                fired.add("ret"); registry.retire(qids[1])
+            return super().__call__(idx)
+    factory = lambda queries, sid=sid, cls=Engine: cls(queries, sid)
+    serial[sid] = MultiQueryStreamExecutor(
+        registry, factory, HoppingWindow(size=W, advance=W), B).run(N)
+
+registry = QueryRegistry()
+qids = [registry.register(q) for q in TQUERIES]
+fired = set()
+
+def fetch(ctx, idx):
+    t0 = int(np.asarray(idx)[0])
+    if t0 == 48 and "reg" not in fired:          # prefetched during 40
+        fired.add("reg"); qids.append(registry.register(TNEW))
+    if t0 == 80 and "ret" not in fired:          # prefetched during 72
+        fired.add("ret"); registry.retire(qids[1])
+    c, g = data[ctx.stream_id]
+    return FilterOutputs(counts=c[idx], grid=g[idx])
+
+ex = MultiStreamExecutor(
+    registry, plan_group_engine_factory(fetch, mesh=SH.stream_mesh()),
+    HoppingWindow(size=W, advance=W), B, stream_ids, n_slots=8)
+results = ex.run(N)
+assert fired == {"reg", "ret"}
+assert ex.rebuilds >= 3, ex.rebuilds
+assert ex._engine is not None and ex._engine.temporal is not None
+assert ex._engine.shard_wrap is not None     # 16 streams / 8 devices
+for sid in stream_ids:
+    for w, res in enumerate(results):
+        assert res.span == serial[sid][w].span
+        assert res.hits[sid] == serial[sid][w].hits, (sid, w)
+print("TEMPORAL_SHARDED_OK")
+"""
+
+
+def test_sharded_fleet_temporal_8dev_subprocess():
+    r = subprocess.run([sys.executable, "-c", TEMPORAL_SHARDED_SCRIPT],
+                       cwd=os.path.join(os.path.dirname(__file__), ".."),
+                       capture_output=True, text=True, timeout=600)
+    assert "TEMPORAL_SHARDED_OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-2000:]

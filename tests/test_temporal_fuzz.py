@@ -1,0 +1,110 @@
+"""Differential fuzz battery: scan ≡ numpy ≡ replay, bit-for-bit.
+
+Runs the ``tests/temporal_harness.py`` three-way check over a
+deterministic seeded battery (always on, hermetic — any failure prints
+its generating seed via the conftest failure hook) and, when hypothesis
+is installed, a shrinking sweep of the same property under the conftest
+"full"/"ci" example budgets (``make test-fuzz`` runs this module under
+the full profile).
+
+Coverage floor pinned here: all three automaton kinds (Duration,
+Sequence, SlidingCount), arbitrary batch splits, and stream counts
+S ∈ {1, 4, 16} through the vmapped group path.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.temporal import TemporalProgram
+from temporal_harness import (check_case, gen_case, operator_kinds,
+                              rand_splits)
+
+# (seed, n_streams): denser at S=1 where cases are cheap, plus fleet
+# shapes at the acceptance floor S ∈ {1, 4, 16}.  Fleet cases shrink
+# window/query budgets — each distinct batch size costs a fresh vmapped
+# scan trace, and compile time (not the check itself) is the budget.
+BATTERY = ([(s, 1) for s in range(6)]
+           + [(s, 4) for s in range(3)]
+           + [(s, 16) for s in range(2)])
+
+
+def _case_kw(n_streams):
+    if n_streams >= 16:
+        return dict(max_window=8, max_queries=2)
+    if n_streams > 1:
+        return dict(max_window=12, max_queries=3)
+    return {}
+
+
+@pytest.mark.parametrize("seed,n_streams", BATTERY)
+def test_differential_battery(seed, n_streams):
+    check_case(gen_case(7919 * seed + n_streams, n_streams=n_streams,
+                        force_all_kinds=(seed % 3 == 0),
+                        **_case_kw(n_streams)))
+
+
+def test_battery_covers_all_operator_kinds():
+    """The generator must actually exercise every automaton kind across
+    the battery — a silent generator regression would hollow out the
+    differential guarantee."""
+    kinds = set()
+    for seed, n_streams in BATTERY:
+        case = gen_case(7919 * seed + n_streams, n_streams=n_streams,
+                        force_all_kinds=(seed % 3 == 0),
+                        **_case_kw(n_streams))
+        kinds |= operator_kinds(case.queries)
+    assert kinds == {"duration", "sequence", "sliding"}
+
+
+def test_numpy_backend_env_flag(monkeypatch):
+    """The loop reference stays reachable behind REPRO_TEMPORAL_BACKEND
+    — it is the differential baseline, not dead code."""
+    from temporal_harness import ATOMS
+    from repro.core import query as Q
+    monkeypatch.setenv("REPRO_TEMPORAL_BACKEND", "numpy")
+    prog = TemporalProgram([Q.Duration(ATOMS[0], 2)])
+    assert prog.backend == "numpy"
+    monkeypatch.setenv("REPRO_TEMPORAL_BACKEND", "scan")
+    assert TemporalProgram([Q.Duration(ATOMS[0], 2)]).backend == "scan"
+    monkeypatch.setenv("REPRO_TEMPORAL_BACKEND", "bogus")
+    with pytest.raises(ValueError, match="backend"):
+        TemporalProgram([Q.Duration(ATOMS[0], 2)])
+
+
+def test_splits_partition_window():
+    for seed in range(32):
+        rng = np.random.default_rng(seed)
+        w = int(rng.integers(1, 40))
+        splits = rand_splits(rng, w)
+        assert sum(splits) == w and all(b >= 1 for b in splits)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (when installed): same property, shrinking exploration
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+    @settings(deadline=None)
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           n_streams=st.sampled_from([1, 4]))
+    def test_differential_hypothesis(seed, n_streams):
+        check_case(gen_case(seed, n_streams=n_streams, max_window=14,
+                            max_queries=3))
+else:
+    def test_differential_seeded_fallback():
+        """Bare-environment stand-in for the hypothesis sweep (same
+        discipline as test_aggregates/test_query_properties)."""
+        budget = 10 if os.environ.get(
+            "REPRO_HYPOTHESIS_PROFILE", "full") == "full" else 4
+        for seed in range(budget):
+            check_case(gen_case(104729 + seed,
+                                n_streams=1 + 3 * (seed % 2),
+                                max_window=10, max_queries=2))

@@ -1,0 +1,164 @@
+"""Scan-step lifecycle: temporal automata steps ride the registry's
+``StepCache`` exactly like staged plan steps (tests/test_plan_lifecycle.py
+is the mirror for those).
+
+The compiled ``lax.scan`` step is keyed by CONTENT — program digest +
+batch size (+ stream count and mesh signature on the group path) — so a
+registry-epoch rebuild over an unchanged temporal query set re-hits
+every step with zero new traces, while capacity churn evicts and
+re-traces without ever changing an answer.
+"""
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.stepcache import StepCache
+from repro.core.temporal import TemporalProgram, advance_group
+
+QUERIES = (Q.Duration(Q.ClassCount(0, Q.Op.GE, 1), 3),
+           Q.Sequence(Q.ClassCount(0, Q.Op.GE, 1),
+                      Q.ClassCount(1, Q.Op.GE, 1), 4),
+           Q.SlidingCount(Q.ClassCount(1, Q.Op.GE, 1), 5, Q.Op.GE, 2))
+
+
+def _signals(seed, B, M):
+    return np.random.default_rng(seed).random((B, M)) < 0.5
+
+
+def _drive(prog, seed, splits):
+    prog.start_window(sum(splits))
+    outs, t = [], 0
+    for b in splits:
+        outs.append(prog.advance(_signals(seed + t, b, prog.n_signals)))
+        t += b
+    return np.concatenate(outs, 0)
+
+
+def test_scan_step_cross_epoch_zero_retrace():
+    cache = StepCache()
+    p1 = TemporalProgram(QUERIES, step_cache=cache)
+    out1 = _drive(p1, 11, (5, 3, 5, 3))
+    assert p1.scan_traces == 2                 # one per distinct batch
+    misses_cold = cache.misses
+    # registry-epoch rebuild over the unchanged set: pure hits
+    p2 = TemporalProgram(QUERIES, step_cache=cache)
+    assert p2.program_sig == p1.program_sig
+    out2 = _drive(p2, 11, (5, 3, 5, 3))
+    assert p2.scan_traces == 0
+    assert cache.misses == misses_cold and cache.hits >= 4
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_scan_step_signature_separates_programs():
+    """Same shape, different baked bound -> different digest: a rebuilt
+    program with moved content can never hit the stale step."""
+    cache = StepCache()
+    p1 = TemporalProgram([Q.Duration(Q.ClassCount(0, Q.Op.GE, 1), 3)],
+                         step_cache=cache)
+    _drive(p1, 3, (4,))
+    p2 = TemporalProgram([Q.Duration(Q.ClassCount(0, Q.Op.GE, 1), 4)],
+                         step_cache=cache)
+    assert p2.program_sig != p1.program_sig
+    _drive(p2, 3, (4,))
+    assert p2.scan_traces == 1                 # fresh trace, no poisoning
+
+
+def test_scan_step_eviction_churn_answers_invariant():
+    """A capacity-1 cache thrashing between two batch sizes evicts and
+    re-traces, but scan answers stay bit-identical to the numpy loop."""
+    cache = StepCache(capacity=1)
+    prog = TemporalProgram(QUERIES, step_cache=cache)
+    ref = TemporalProgram(QUERIES, backend="numpy")
+    for round_ in range(3):
+        for splits in ((4, 4), (8,)):
+            np.testing.assert_array_equal(
+                _drive(prog, 100 * round_, splits),
+                _drive(ref, 100 * round_, splits))
+    assert cache.evictions > 0 and len(cache) == 1
+    assert prog.scan_traces > 2                # eviction forced re-traces
+
+
+def test_group_scan_step_cross_epoch_zero_retrace():
+    S, B = 4, 6
+    cache = StepCache()
+
+    def epoch(seed):
+        progs = [TemporalProgram(QUERIES, step_cache=cache)
+                 for _ in range(S)]
+        for p in progs:
+            p.start_window(2 * B)
+        outs = [advance_group(
+            progs, np.stack([_signals(seed + 31 * s + t, B,
+                                      progs[0].n_signals)
+                             for s in range(S)]), step_cache=cache)
+            for t in range(2)]
+        return np.concatenate(outs, 1), progs[0].scan_traces
+
+    out1, traces1 = epoch(7)
+    assert traces1 == 1                        # one group step, B fixed
+    misses_cold = cache.misses
+    out2, traces2 = epoch(7)
+    assert traces2 == 0                        # epoch rebuild: pure hits
+    assert cache.misses == misses_cold
+    np.testing.assert_array_equal(out1, out2)
+    # a different stream count is a different step key, not a stale hit
+    progs = [TemporalProgram(QUERIES, step_cache=cache) for _ in range(2)]
+    for p in progs:
+        p.start_window(B)
+    advance_group(progs, np.stack([_signals(1, B, progs[0].n_signals)
+                                   for _ in range(2)]), step_cache=cache)
+    assert progs[0].scan_traces == 1
+
+
+def test_fleet_engine_epoch_rebuild_reuses_temporal_steps():
+    """ShardedPlanGroupEngine rebuilt over an unchanged temporal query
+    set (the registry-epoch path) re-hits both the staged group steps
+    AND the group scan step — zero re-traces anywhere."""
+    import jax.numpy as jnp
+    from repro.core.costmodel import static_cost_model
+    from repro.core.filters import FilterOutputs
+    from repro.core.plan import CanonicalLeafTable
+    from repro.core.stats import SlotStats
+    from repro.distributed.multistream import (ShardedPlanGroupEngine,
+                                               route_streams)
+    S, B, C = 2, 8, 6
+    rng = np.random.default_rng(17)
+    ctxs = route_streams([f"cam{i}" for i in range(S)], 1)
+    data = {c.stream_id:
+            jnp.asarray(rng.poisson(1.0, (32, C)).astype(np.float32))
+            for c in ctxs}
+
+    def fetch(ctx, idx):
+        return FilterOutputs(counts=data[ctx.stream_id][idx])
+
+    table, cache = CanonicalLeafTable(), StepCache()
+
+    def build():
+        return ShardedPlanGroupEngine(QUERIES, ctxs, fetch,
+                                      slot_stats=SlotStats(),
+                                      cost_model=static_cost_model(),
+                                      leaf_table=table, step_cache=cache)
+
+    e1 = build()
+    e1.on_window_start(0, 2 * B)
+    a1 = np.concatenate([e1.run_chunk(np.arange(b0, b0 + B))
+                         for b0 in (0, B)], axis=1)
+    assert e1.temporal is not None
+    assert sum(p.scan_traces for p in e1.temporal) > 0
+    e2 = build()
+    e2.on_window_start(0, 2 * B)
+    a2 = np.concatenate([e2.run_chunk(np.arange(b0, b0 + B))
+                         for b0 in (0, B)], axis=1)
+    assert sum(p.scan_traces for p in e2.temporal) == 0
+    assert e2.staged._trace_count == 0
+    np.testing.assert_array_equal(a1, a2)
+
+
+def test_scan_step_counters_in_snapshot():
+    cache = StepCache()
+    prog = TemporalProgram(QUERIES, step_cache=cache)
+    _drive(prog, 1, (4, 4))
+    snap = cache.snapshot()
+    assert snap["entries"] >= 1 and snap["puts"] >= 1
+    with pytest.raises(ValueError):
+        StepCache(capacity=0)
